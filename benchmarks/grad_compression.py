@@ -1,0 +1,91 @@
+"""Beyond-paper §Perf lever: ASI/PowerSGD-compressed DP gradient all-reduce.
+
+Lowers two shard_map'd gradient syncs over a data axis and parses the
+collective bytes out of the compiled per-device HLO:
+
+  dense      — pmean of every gradient leaf (the standard DP step)
+  compressed — rank-r subspace-iteration factors all-reduced instead
+               (repro/parallel/collectives.py), small leaves stay dense
+
+Reported: per-device collective bytes and the wire-compression ratio for a
+TinyLlama-1.1B-shaped gradient set.  Correctness of the compressed sync is
+covered by tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.launch.roofline import collective_bytes
+from repro.parallel import collectives as C
+
+RANK = 8
+
+
+def _grad_set(cfg):
+    d, ff, hd, h, kv = (cfg.d_model, cfg.d_ff, cfg.hd, cfg.n_heads,
+                        cfg.n_kv_heads)
+    shapes = {
+        "wq": (d, h * hd), "wk": (d, kv * hd), "wv": (d, kv * hd),
+        "wo": (h * hd, d), "gate": (d, ff), "up": (d, ff), "down": (ff, d),
+    }
+    return {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}
+
+
+def lower_both(n_workers: int = 8):
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_mesh
+    cfg = get_config("tinyllama-1.1b")
+    grads = _grad_set(cfg)
+    mesh = make_mesh((n_workers,), ("data",))
+    states = C.init_states_for(grads, jax.random.PRNGKey(0), RANK)
+    # per-worker distinct gradients (leading worker dim) so XLA cannot fold
+    # the all-reduce of a replicated value away
+    stacked = jax.tree.map(
+        lambda g: jnp.zeros((n_workers,) + g.shape, g.dtype), grads)
+
+    def dense(g):
+        return jax.tree.map(lambda x: C.dense_psum(x[0], "data"), g)
+
+    def compressed(g, st):
+        local = jax.tree.map(lambda x: x[0], g)
+        out, _ = C.compressed_psum_tree(local, st, "data")
+        return out
+
+    d_hlo = jax.jit(shard_map(
+        dense, mesh=mesh, in_specs=(P("data"),),
+        out_specs=P())).lower(stacked).compile().as_text()
+    c_hlo = jax.jit(shard_map(
+        compressed, mesh=mesh,
+        in_specs=(P("data"), P()), out_specs=P())).lower(
+            stacked, states).compile().as_text()
+    return collective_bytes(d_hlo), collective_bytes(c_hlo), grads
+
+
+def run(verbose=True):
+    dense, comp, grads = lower_both()
+    analytic_dense = sum(C.wire_bytes_dense(g.shape)
+                         for g in jax.tree.leaves(grads))
+    analytic_comp = sum(C.wire_bytes_compressed(g.shape, RANK)
+                        for g in jax.tree.leaves(grads))
+    out = {
+        "dense_hlo_bytes": dense.total_bytes,
+        "compressed_hlo_bytes": comp.total_bytes,
+        "hlo_ratio": dense.total_bytes / max(comp.total_bytes, 1),
+        "analytic_ratio": analytic_dense / analytic_comp,
+    }
+    if verbose:
+        print(f"dense sync:      {dense.total_bytes/1e6:8.1f} MB on the wire "
+              f"({dense.by_kind})")
+        print(f"compressed sync: {comp.total_bytes/1e6:8.1f} MB on the wire "
+              f"({comp.by_kind})")
+        print(f"wire reduction:  {out['hlo_ratio']:.1f}x (analytic "
+              f"{out['analytic_ratio']:.1f}x at rank {RANK})")
+    assert out["hlo_ratio"] > 10
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,147 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.jsonl.
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS, the useful-compute ratio, and a one-line lever.
+
+Term sources (see EXPERIMENTS.md §Methodology):
+  compute    = analytic executed FLOPs (flops_model) / (chips x 197e12)
+  memory     = analytic fused HBM bytes (flops_model) / (chips x 819e9)
+               [HLO bytes-accessed reported as the unfused upper bound]
+  collective = per-device collective operand bytes from partitioned HLO / 50e9
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.launch import flops_model
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+LEVERS = {
+    ("compute", "train"): "raise per-chip batch / cut remat recompute",
+    ("compute", "prefill"): "causal block-skip in attention (flash kernel)",
+    ("compute", "decode"): "batch more sequences per step",
+    ("memory", "train"): "cut saved-activation traffic (ASI compression / "
+                         "remat policy)",
+    ("memory", "prefill"): "fuse projections; keep KV writes streaming",
+    ("memory", "decode"): "weights dominate: quantize or batch more tokens "
+                          "per weight read",
+    ("collective", "train"): "compress DP gradient all-reduce (PowerSGD/ASI)"
+                             "; overlap with bwd",
+    ("collective", "prefill"): "shard KV heads not seq; all-gather once",
+    ("collective", "decode"): "keep TP collectives in bf16; widen model axis"
+                              " only to HBM need",
+}
+
+
+def enrich(row: dict) -> dict:
+    cfg = get_config(row["arch"])
+    compress = row.get("compress", "none")
+    if compress != "none":
+        cfg = cfg.replace(compress=compress)
+    if row.get("remat"):
+        cfg = cfg.replace(remat=row["remat"])
+    if row.get("param_dtype"):
+        cfg = cfg.replace(param_dtype=row["param_dtype"])
+    if row.get("kv_cache_dtype"):
+        cfg = cfg.replace(kv_cache_dtype=row["kv_cache_dtype"])
+    shape = SHAPES[row["shape"]]
+    chips = row["n_devices"]
+    # recompute analytic terms with the CURRENT cost model (stored values may
+    # predate model fixes); collectives stay as parsed from the HLO.
+    mem_bytes = flops_model.cell_hbm_bytes(cfg, shape, compress)
+    row["an_mem_s"] = mem_bytes / chips / HBM_BW
+    row["an_compute_s"] = flops_model.cell_flops(cfg, shape, compress) \
+        / chips / PEAK_FLOPS
+    row["useful_ratio"] = row["model_flops"] / (
+        row["an_compute_s"] * chips * PEAK_FLOPS)
+    coll_s = row["collective_s"]
+    if not row.get("unroll", True):
+        # rolled layer scan: per-layer collectives counted once -> scale by
+        # the period count (approximation, noted in §Methodology)
+        from repro.launch.flops_model import period_pattern
+        n_p = cfg.n_layers // len(period_pattern(cfg))
+        coll_s *= n_p
+        row["coll_scaled_by"] = n_p
+    row["coll_s"] = coll_s
+    terms = {"compute": row["an_compute_s"], "memory": row["an_mem_s"],
+             "collective": row["coll_s"]}
+    row["dominant2"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    t_useful = row["model_flops"] / (chips * PEAK_FLOPS)
+    row["roofline_frac"] = t_useful / bound if bound else 0.0
+    row["lever"] = LEVERS.get((row["dominant2"], shape.kind), "-")
+    return row
+
+
+def load(path="results/dryrun.jsonl"):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (d["arch"], d["shape"], bool(d.get("multi_pod")),
+                   d.get("compress", "none"), d.get("remat") or "full",
+                   bool(d.get("fsdp")))
+            rows[key] = d                     # last write wins (reruns)
+    return rows
+
+
+def table(path="results/dryrun.jsonl", multi_pod=False, compress="none",
+          out=sys.stdout):
+    rows = load(path)
+    hdr = ("| arch | shape | comp(s) | mem(s) | coll(s) | dominant | "
+           "useful | roofline | lever |")
+    print(hdr, file=out)
+    print("|" + "---|" * 9, file=out)
+    for (arch, shape, mp, comp, remat, fsdp), d in sorted(rows.items()):
+        if mp != multi_pod or comp != compress:
+            continue
+        if d.get("status") == "skipped":
+            print(f"| {arch} | {shape} | - | - | - | skipped "
+                  f"(sub-quadratic n/a) | - | - | - |", file=out)
+            continue
+        if d.get("status") != "ok":
+            print(f"| {arch} | {shape} | - | - | - | {d.get('status')} | - |"
+                  f" - | - |", file=out)
+            continue
+        e = enrich(dict(d))
+        print(f"| {arch} | {shape} | {e['an_compute_s']:.2e} | "
+              f"{e['an_mem_s']:.2e} | {e['coll_s']:.2e} | {e['dominant2']} | "
+              f"{e['useful_ratio']:.2f} | {e['roofline_frac']:.3f} | "
+              f"{e['lever']} |", file=out)
+
+
+def dryrun_table(path="results/dryrun.jsonl", out=sys.stdout):
+    rows = load(path)
+    print("| arch | shape | mesh | status | compile(s) | args GB/dev | "
+          "temp GB/dev | coll GB/dev | coll ops |", file=out)
+    print("|" + "---|" * 9, file=out)
+    for (arch, shape, mp, comp, remat, fsdp), d in sorted(rows.items()):
+        if comp != "none":
+            continue
+        mesh = "2x16x16" if mp else "16x16"
+        if d.get("status") != "ok":
+            print(f"| {arch} | {shape} | {mesh} | {d.get('status')} | - | - |"
+                  f" - | - | - |", file=out)
+            continue
+        mem = d.get("memory", {})
+        args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+        print(f"| {arch} | {shape} | {mesh} | ok | {d.get('t_compile_s')} | "
+              f"{args_gb:.2f} | {temp_gb:.2f} | "
+              f"{d['collective_bytes_per_device']/1e9:.2f} | "
+              f"{d['collective_ops']} |", file=out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run (single-pod)")
+    dryrun_table()
+    print("\n## Roofline single-pod")
+    table(multi_pod=False)
+    print("\n## Roofline multi-pod")
+    table(multi_pod=True)

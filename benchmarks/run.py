@@ -1,0 +1,37 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the headline number
+that reproduces the table's claim).
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(name, fn, derive):
+    t0 = time.perf_counter()
+    out = fn(verbose=False)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(out)}")
+    return out
+
+
+def main() -> None:
+    from benchmarks import (latency_ondevice, table1_imagenet,
+                            table4_tinyllama, warm_start)
+
+    print("name,us_per_call,derived")
+    _timed("table1_imagenet", table1_imagenet.run,
+           lambda rows: f"max_mem_ratio={max(r['mem_ratio'] for r in rows):.0f}x")
+    _timed("table4_tinyllama", table4_tinyllama.run,
+           lambda rows: f"mem_ratio_1layer={rows[0]['mem_ratio']:.0f}x;"
+                        f"flops_ratio_5layer={rows[-1]['flops_ratio']:.2f}x")
+    _timed("fig5_latency", latency_ondevice.run,
+           lambda o: f"hosvd_fwd_blowup={o['ratios']['fwd_hosvd_over_vanilla']:.0f}x;"
+                     f"asi_step_speedup={o['ratios']['asi_step_speedup']:.2f}x")
+    _timed("fig3_warmstart", warm_start.run,
+           lambda o: f"gerr_warm={o['gerr_warm']:.3f};gerr_cold={o['gerr_cold']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Fig. 3 ablation: warm start vs cold start for ASI.
+
+We fine-tune the reduced TinyLlama tail with ASI twice — warm-started factors
+(the paper's method) vs factors re-randomized every step — on the synthetic
+Markov task, and compare (a) gradient-approximation error against the exact
+gradient and (b) final training loss.  Warm start must win on (a); (b) must
+not be worse (the paper reports +3.87% accuracy on CIFAR-10/MCUNet).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+
+STEPS = 30
+
+
+def _run(warm: bool, rank=4, seed=0):
+    cfg = get_config("tinyllama-1.1b").reduced().replace(
+        n_layers=2, compress="asi", asi_rank=rank, asi_last_k=1)
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = api.init(key)
+    st = api.init_asi(key)
+    mask = api.trainable_mask(params)
+    opt = make_optimizer("sgdm", lambda s: 0.05, momentum=0.9)
+    ostate = opt.init(params)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8, branching=2, seed=seed))
+
+    exact_cfg = cfg.replace(compress="none")
+    exact_api = build_model(exact_cfg)
+
+    @jax.jit
+    def step(params, ostate, st, batch, i):
+        def lossf(p):
+            loss, (m, ns) = api.loss(p, batch, st)
+            return loss, ns
+        (loss, ns), g = jax.value_and_grad(lossf, has_aux=True)(params)
+        params, ostate = opt.update(g, ostate, params, i, mask)
+        return params, ostate, ns, loss, g
+
+    @jax.jit
+    def exact_grads(params, batch):
+        return jax.grad(lambda p: exact_api.loss(p, batch)[0])(params)
+
+    key2 = jax.random.PRNGKey(seed + 100)
+    losses, gerrs = [], []
+    for i in range(STEPS):
+        batch = data.batch(i)
+        if not warm:                     # ablation: re-randomize the subspace
+            key2, sub = jax.random.split(key2)
+            st = api.init_asi(sub)
+        ge = exact_grads(params, batch)
+        params, ostate, st, loss, g = step(params, ostate, st, batch,
+                                           jnp.int32(i))
+        # gradient error on the fine-tuned tail only
+        num = den = 0.0
+        for ga, gb in zip(jax.tree.leaves(g["stack"]),
+                          jax.tree.leaves(ge["stack"])):
+            num += float(jnp.sum((ga.astype(jnp.float32)
+                                  - gb.astype(jnp.float32)) ** 2))
+            den += float(jnp.sum(gb.astype(jnp.float32) ** 2))
+        losses.append(float(loss))
+        gerrs.append((num / max(den, 1e-12)) ** 0.5)
+    return np.mean(losses[-5:]), np.mean(gerrs[5:])
+
+
+def run(verbose=True):
+    loss_w, err_w = _run(warm=True)
+    loss_c, err_c = _run(warm=False)
+    if verbose:
+        print(f"warm  : final loss {loss_w:.4f}  rel grad err {err_w:.4f}")
+        print(f"cold  : final loss {loss_c:.4f}  rel grad err {err_c:.4f}")
+    assert err_w < err_c, "warm start must reduce gradient error (Fig. 3)"
+    return {"loss_warm": loss_w, "loss_cold": loss_c,
+            "gerr_warm": err_w, "gerr_cold": err_c}
+
+
+if __name__ == "__main__":
+    run()

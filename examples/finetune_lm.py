@@ -1,0 +1,79 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps with the fault-tolerant loop, checkpoint/restart, and ASI
+compression — the paper's TinyLlama/BoolQ setting scaled to CPU.
+
+  PYTHONPATH=src python examples/finetune_lm.py [--steps 300] [--full-100m]
+
+--full-100m uses a ~100M-parameter config (slow on CPU but runs); the
+default is a ~10M config that finishes in a few minutes.
+"""
+import argparse
+import json
+import tempfile
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.models import build_model
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.train_loop import TrainLoopCfg, make_train_step, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=150,
+                    help="inject a node failure here to demo recovery")
+    args = ap.parse_args()
+
+    cfg = get_config("tinyllama-1.1b")
+    if args.full_100m:
+        cfg = cfg.replace(n_layers=8, d_model=768, n_heads=12, n_kv_heads=4,
+                          head_dim=64, d_ff=2048, vocab_size=32000,
+                          dtype="float32", param_dtype="float32",
+                          remat="none", attn_chunk=128)
+        seq, batch = 256, 8
+    else:
+        cfg = cfg.reduced().replace(n_layers=4, d_model=128, d_ff=512,
+                                    vocab_size=2048)
+        seq, batch = 64, 16
+    cfg = cfg.replace(compress="asi", asi_rank=16, asi_last_k=2)
+
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, compress={cfg.compress} "
+          f"rank={cfg.asi_rank} tail={cfg.asi_last_k}")
+
+    asi_state = api.init_asi(key)
+    mask = api.trainable_mask(params)
+    opt = make_optimizer("adamw", warmup_cosine(3e-3, 20, args.steps),
+                         clip_norm=2.0, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                              trainable_mask=mask)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=seq,
+                                global_batch=batch, branching=2))
+    ckpt_dir = tempfile.mkdtemp(prefix="finetune_lm_")
+    res = run(step_fn, params, opt_state, asi_state, data,
+              TrainLoopCfg(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                           ckpt_every=50, log_every=25,
+                           fail_at_step=args.fail_at),
+              hooks={"on_log": lambda s, m: print(
+                         json.dumps({"step": s,
+                                     "loss": round(m["loss"], 4)})),
+                     "on_restart": lambda n: print(
+                         f"!! simulated failure -> restart #{n} "
+                         f"from latest checkpoint")})
+    first, last = res.history[0]["loss"], res.history[-1]["loss"]
+    print(f"done: steps={res.step} restarts={res.restarts} "
+          f"loss {first:.3f} -> {last:.3f}")
+    assert last < first, "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Production dry-run sweep driver: every (arch x shape x mesh) cell, one
+fresh subprocess per cell (XLA leaks compile memory), resumable via the
+results JSONL.  Cheap cells first so the roofline table fills up early."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS = "results/dryrun.jsonl"
+ARCH_ORDER = [
+    "tinyllama-1.1b", "mamba2-130m", "internvl2-1b", "phi3-mini-3.8b",
+    "h2o-danube-3-4b", "whisper-medium", "granite-moe-3b-a800m",
+    "internlm2-20b", "moonshot-v1-16b-a3b", "jamba-1.5-large-398b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def done_cells():
+    seen = set()
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            for line in f:
+                try:
+                    d = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if d.get("status") in ("ok", "skipped") \
+                        and d.get("compress", "none") == "none":
+                    seen.add((d["arch"], d["shape"], bool(d.get("multi_pod"))))
+    return seen
+
+
+def main():
+    os.makedirs("results", exist_ok=True)
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("REPRO_XLA_FLAGS", None)         # use the production 512 devices
+    cells = [(a, s, mp)
+             for mp in (False, True)
+             for s in SHAPE_ORDER
+             for a in ARCH_ORDER]
+    seen = done_cells()
+    todo = [c for c in cells if c not in seen]
+    print(f"{len(todo)} cells to run ({len(seen)} already done)", flush=True)
+    for arch, shape, mp in todo:
+        args = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                "--shape", shape, "--out", RESULTS]
+        if mp:
+            args.append("--multi-pod")
+        t0 = time.time()
+        try:
+            p = subprocess.run(args, env=env, capture_output=True, text=True,
+                               timeout=int(os.environ.get("CELL_TIMEOUT",
+                                                          5400)))
+            ok = p.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+            with open(RESULTS, "a") as f:
+                f.write(json.dumps({"arch": arch, "shape": shape,
+                                    "multi_pod": mp, "status": "timeout"})
+                        + "\n")
+        print(f"{arch:24s} {shape:12s} mp={int(mp)} "
+              f"{'ok' if ok else 'FAIL'} {time.time()-t0:6.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

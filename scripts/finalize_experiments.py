@@ -1,0 +1,72 @@
+"""Regenerate the §Dry-run/§Roofline/§Perf tables inside EXPERIMENTS.md from
+results/dryrun.jsonl + results/hillclimb.jsonl."""
+import io
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+from benchmarks.roofline_report import dryrun_table, enrich, load, table  # noqa: E402
+
+MARK = "<!-- AUTOGEN TABLES BELOW -->"
+
+
+def hillclimb_table() -> str:
+    if not os.path.exists("results/hillclimb.jsonl"):
+        return "(hillclimb results pending)"
+    out = io.StringIO()
+    print("| label | cell | compute(s) | mem(s) | coll(s) | dominant | "
+          "roofline | verdict |", file=out)
+    print("|" + "---|" * 8, file=out)
+    base = load("results/dryrun.jsonl")
+    with open("results/hillclimb.jsonl") as f:
+        for line in f:
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if d.get("status") != "ok":
+                continue
+            e = enrich(dict(d))
+            bkey = (d["arch"], d["shape"], False, "none", "full", False)
+            b = base.get(bkey)
+            verdict = ""
+            if b and b.get("status") == "ok":
+                be = enrich(dict(b))
+                d_ = {"compute": be["an_compute_s"] / max(e["an_compute_s"], 1e-12),
+                      "memory": be["an_mem_s"] / max(e["an_mem_s"], 1e-12),
+                      "collective": be["coll_s"] / max(e["coll_s"], 1e-12)}
+                verdict = " ".join(f"{k}x{v:.2f}" for k, v in d_.items()
+                                   if abs(v - 1) > 0.05)
+            print(f"| {d.get('label','?')} | {d['arch']}/{d['shape']} | "
+                  f"{e['an_compute_s']:.2e} | {e['an_mem_s']:.2e} | "
+                  f"{e['coll_s']:.2e} | {e['dominant2']} | "
+                  f"{e['roofline_frac']:.3f} | {verdict} |", file=out)
+    return out.getvalue()
+
+
+def main():
+    buf = io.StringIO()
+    print(MARK, file=buf)
+    print("\n### §Dry-run table (both meshes)\n", file=buf)
+    dryrun_table(out=buf)
+    print("\n### §Roofline — single-pod (16x16, 256 chips)\n", file=buf)
+    table(multi_pod=False, out=buf)
+    print("\n### §Roofline — multi-pod (2x16x16, 512 chips)\n", file=buf)
+    table(multi_pod=True, out=buf)
+    print("\n### §Perf — hillclimb variants (vs single-pod baseline)\n",
+          file=buf)
+    print(hillclimb_table(), file=buf)
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    if MARK in text:
+        text = text[: text.index(MARK)]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text.rstrip() + "\n\n" + buf.getvalue())
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""§Perf hillclimb driver: the three chosen cells, one variant per subprocess,
+appending to results/hillclimb.jsonl.  Run after the baseline sweep.
+
+Cells (chosen per the spec from the baseline table):
+  A. tinyllama-1.1b x train_4k   — most representative of the paper (ASI
+     fine-tuning is literally the paper's Table-4 workload).
+  B. internlm2-20b  x train_4k   — most collective-bound baseline
+     (584 GB/device of TP all-reduces).
+  C. moonshot-v1-16b-a3b x decode_32k — worst roofline fraction
+     (MoE decode reads every expert's weights for 128 tokens).
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+OUT = "results/hillclimb.jsonl"
+
+VARIANTS = [
+    # (label, arch, shape, extra dryrun args, hypothesis)
+    ("A1_asi", "tinyllama-1.1b", "train_4k", ["--compress", "asi"],
+     "ASI tail fine-tune: frozen prefix stores nothing, tail stores rank-20 "
+     "factors -> memory term down ~10x, compute term down ~2.5x vs full "
+     "training (fwd + tail-only bwd)"),
+    ("A2_asi_noremat", "tinyllama-1.1b", "train_4k",
+     ["--compress", "asi", "--remat", "none"],
+     "with a frozen prefix there is nothing to rematerialize: dropping "
+     "remat removes the recompute fwd pass -> compute term -25%"),
+    ("A3_asi_bf16", "tinyllama-1.1b", "train_4k",
+     ["--compress", "asi", "--remat", "none", "--param-dtype", "bfloat16"],
+     "bf16 params halve weight-pass HBM traffic -> memory term down ~2x"),
+    ("B1_fsdp", "internlm2-20b", "train_4k", ["--layout", "fsdp"],
+     "replace TP activation all-reduces (~584 GB/dev) with FSDP weight "
+     "all-gathers (~3 passes x 80 GB = 240 GB/dev) -> collective term ~2.4x "
+     "down"),
+    ("B2_fsdp_dots", "internlm2-20b", "train_4k",
+     ["--layout", "fsdp", "--remat", "dots"],
+     "dots remat saves matmul outputs -> backward re-gathers fewer weights "
+     "-> collective term down another ~25% (memory term up)"),
+    ("B3_seqtp", "internlm2-20b", "train_4k", ["--seq-tp"],
+     "Megatron sequence parallelism: RS+AG instead of AR halves TP bytes "
+     "(REFUTED on the 2x2 probe: GSPMD added reshards; verify at 16x16)"),
+    ("C1_bf16", "moonshot-v1-16b-a3b", "decode_32k",
+     ["--param-dtype", "bfloat16"],
+     "decode is weight-read bound: bf16 params halve the memory term -> "
+     "roofline fraction ~2x up"),
+    ("C2_bf16_asi", "moonshot-v1-16b-a3b", "decode_32k",
+     ["--param-dtype", "bfloat16", "--compress", "asi"],
+     "control: serve_step has no backward, ASI must not change decode terms"),
+]
+
+
+def main():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("REPRO_XLA_FLAGS", None)
+    only = sys.argv[1:] or None
+    for label, arch, shape, extra, hyp in VARIANTS:
+        if only and not any(label.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        args = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                "--shape", shape, "--out", OUT] + extra
+        p = subprocess.run(args, env=env, capture_output=True, text=True,
+                           timeout=5400)
+        ok = p.returncode == 0
+        # annotate the last line with the label + hypothesis
+        if ok and os.path.exists(OUT):
+            with open(OUT) as f:
+                lines = f.read().splitlines()
+            d = json.loads(lines[-1])
+            d["label"] = label
+            d["hypothesis"] = hyp
+            lines[-1] = json.dumps(d, default=str)
+            with open(OUT, "w") as f:
+                f.write("\n".join(lines) + "\n")
+        print(f"{label:16s} {'ok' if ok else 'FAIL'} {time.time()-t0:5.0f}s",
+              flush=True)
+        if not ok:
+            print(p.stdout[-800:], p.stderr[-500:], flush=True)
+
+
+if __name__ == "__main__":
+    main()

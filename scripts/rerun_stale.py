@@ -1,0 +1,45 @@
+"""Re-run cells recorded before the collective-parser + MoE-dispatch fixes."""
+import subprocess, sys, os, time
+CELLS = [
+    # (arch, shape, multi_pod)
+    ("granite-moe-3b-a800m", "decode_32k", False),
+    ("moonshot-v1-16b-a3b", "decode_32k", False),
+    ("moonshot-v1-16b-a3b", "prefill_32k", False),
+    ("jamba-1.5-large-398b", "decode_32k", False),
+    ("jamba-1.5-large-398b", "long_500k", False),
+    ("jamba-1.5-large-398b", "prefill_32k", False),
+    ("tinyllama-1.1b", "decode_32k", False),
+    ("tinyllama-1.1b", "prefill_32k", False),
+    ("tinyllama-1.1b", "train_4k", False),
+    ("tinyllama-1.1b", "train_4k", True),
+    ("mamba2-130m", "decode_32k", False),
+    ("mamba2-130m", "long_500k", False),
+    ("mamba2-130m", "prefill_32k", False),
+    ("mamba2-130m", "train_4k", False),
+    ("internvl2-1b", "decode_32k", False),
+    ("internvl2-1b", "prefill_32k", False),
+    ("internvl2-1b", "train_4k", False),
+    ("phi3-mini-3.8b", "decode_32k", False),
+    ("phi3-mini-3.8b", "prefill_32k", False),
+    ("phi3-mini-3.8b", "train_4k", False),
+    ("h2o-danube-3-4b", "decode_32k", False),
+    ("h2o-danube-3-4b", "long_500k", False),
+    ("h2o-danube-3-4b", "prefill_32k", False),
+    ("h2o-danube-3-4b", "train_4k", False),
+    ("whisper-medium", "decode_32k", False),
+    ("whisper-medium", "prefill_32k", False),
+    ("internlm2-20b", "decode_32k", False),
+    ("internlm2-20b", "prefill_32k", False),
+]
+env = dict(os.environ, PYTHONPATH="src"); env.pop("REPRO_XLA_FLAGS", None)
+for arch, shape, mp in CELLS:
+    args = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+            "--shape", shape, "--out", "results/dryrun.jsonl"]
+    if mp: args.append("--multi-pod")
+    t0 = time.time()
+    try:
+        p = subprocess.run(args, env=env, capture_output=True, text=True, timeout=4000)
+        ok = p.returncode == 0
+    except subprocess.TimeoutExpired:
+        ok = False
+    print(f"{arch:24s} {shape:12s} mp={int(mp)} {'ok' if ok else 'FAIL'} {time.time()-t0:5.0f}s", flush=True)

@@ -1,0 +1,109 @@
+"""Atomic step checkpoints for arbitrary pytrees.
+
+Layout:  <dir>/step_<N>/shard_<proc>.npz + meta.json, written to a tmp dir
+and atomically renamed — a crash mid-write never corrupts the latest
+checkpoint, which is what the restart loop relies on.  On multi-host each
+process writes only its addressable shards (here: one process = everything);
+``meta.json`` records the logical layout so ``elastic.py`` can reshard on
+resume onto a different mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":          # ml_dtypes (bf16, fp8): .npz can't
+            arr = arr.astype(np.float32)   # round-trip them; widen losslessly
+        flat[key] = arr                    # (restore casts to template dtype)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(directory: str, step: int, tree: Any, meta: dict | None = None,
+         keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_")
+    try:
+        proc = jax.process_index()
+        np.savez(os.path.join(tmp, f"shard_{proc}.npz"), **_flatten(tree))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "n_procs": jax.process_count(),
+                       **(meta or {})}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, template: Any, step: int | None = None):
+    """Restore into the structure of ``template`` (arrays get the stored
+    values; shapes must match).  Returns (tree, step, meta)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    blobs: dict[str, np.ndarray] = {}
+    for fn in os.listdir(path):
+        if fn.startswith("shard_"):
+            with np.load(os.path.join(path, fn)) as z:
+                blobs.update({k: z[k] for k in z.files})
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    flat, treedef = leaves_with_path
+    out = []
+    for p, leaf in flat:
+        key = SEP.join(_path_str(q) for q in p)
+        if key not in blobs:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        val = blobs[key]
+        if hasattr(leaf, "shape") and tuple(leaf.shape) != tuple(val.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{val.shape} vs {leaf.shape}")
+        out.append(jax.numpy.asarray(val, dtype=getattr(leaf, "dtype", None)))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, step, meta

@@ -1,0 +1,33 @@
+"""Elastic resume: reshard a restored pytree onto a (possibly different) mesh.
+
+Checkpoints store logical (unsharded) arrays plus the layout metadata; on
+resume we device_put each leaf with the sharding derived from the *current*
+mesh and partition rules.  Growing/shrinking the data axis (elastic scaling)
+therefore needs no array surgery — only the batch-schedule offset changes,
+and the data pipeline is a pure function of step, so nothing else moves.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import safe_spec
+
+
+def reshard(tree: Any, spec_tree: Any, mesh: Mesh):
+    """device_put every leaf with its (divisibility-checked) NamedSharding."""
+    def place(x, spec):
+        if not hasattr(x, "shape"):
+            return x
+        s = safe_spec(x.shape, spec if spec is not None else P(), mesh)
+        return jax.device_put(x, NamedSharding(mesh, s))
+    return jax.tree.map(place, tree, spec_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def replicate(tree: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P()))
+        if hasattr(x, "shape") else x, tree)

@@ -1,0 +1,136 @@
+"""Config system: model architectures and input-shape cells.
+
+Every assigned architecture is a ``ModelConfig`` (exact numbers from the
+assignment table); every input shape is a ``ShapeCfg``.  ``reduced()`` yields
+the small same-family config used by CPU smoke tests; the full configs are
+only ever lowered via ShapeDtypeStructs (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    # --- attention ---
+    rope_theta: float = 10000.0
+    sliding_window: int = 0           # 0 -> full attention; >0 -> SWA (danube)
+    qkv_bias: bool = False            # qwen2-style (internvl2 backbone)
+    attn_chunk: int = 1024            # online-softmax block size
+    kv_cache_dtype: str = ""          # "" -> activations dtype; "int8" for
+                                      # quantized decode caches (C-cell lever)
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    moe_layer_period: int = 1         # every k-th layer is MoE (jamba: 2)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- SSM (mamba2 / jamba mamba sublayers) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # --- hybrid (jamba) ---
+    attn_layer_period: int = 0        # 8 -> 1 attention layer per 8 (1:7)
+    # --- encoder-decoder (whisper) ---
+    n_enc_layers: int = 0
+    enc_len: int = 0                  # precomputed-frame count (stub frontend)
+    # --- vlm (internvl2) ---
+    n_img_tokens: int = 0             # precomputed-patch count (stub frontend)
+    # --- numerics / structure ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    norm_eps: float = 1e-5
+    act: str = "silu"                 # silu -> SwiGLU MLP; gelu -> GELU MLP
+    use_bias: bool = False            # MLP/attn-out biases (whisper)
+    learned_pos: bool = False         # whisper-style positions instead of RoPE
+    remat: str = "full"               # none | full | dots
+    scan_layers: bool = True
+    scan_unroll: bool = False         # dry-run: unroll layer scan so HLO cost
+                                      # analysis & collective counts see every
+                                      # layer (while-bodies are counted once)
+    fsdp: bool = False                # shard weights over the data axes too
+    optimizer: str = "adamw"          # adamw | sgdm | adafactor
+    # --- paper technique (ASI) ---
+    compress: str = "none"            # none | asi | hosvd
+    asi_rank: int = 20
+    asi_last_k: int = 2               # fine-tune the last k blocks
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """Same-family miniature for CPU smoke tests."""
+        period = max(self.attn_layer_period, 1)
+        n_layers = max(2, period)           # keep at least one full period
+        if self.attn_layer_period:
+            n_layers = period               # one jamba super-block
+        return self.replace(
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=128,
+            n_experts=min(self.n_experts, 4),
+            experts_per_tok=min(self.experts_per_tok, 2),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=16,
+            ssm_chunk=8,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_len=min(self.enc_len, 16) if self.enc_len else 0,
+            n_img_tokens=min(self.n_img_tokens, 4) if self.n_img_tokens else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            attn_chunk=16,
+            dtype="float32",
+            param_dtype="float32",
+            remat="none",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+    def reduced(self) -> "ShapeCfg":
+        return dataclasses.replace(self, seq_len=32, global_batch=2)
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def long_context_supported(cfg: ModelConfig) -> bool:
+    """long_500k needs sub-quadratic attention: SSM / hybrid / SWA archs."""
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0

@@ -1,0 +1,19 @@
+"""internvl2-1b — InternViT (STUB frontend) + qwen2-0.5b-class LM backbone.
+[arXiv:2404.16821; hf]  24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655; 256 image-patch embeddings prepended per the stub contract."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    n_img_tokens=256,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    act="silu",
+)

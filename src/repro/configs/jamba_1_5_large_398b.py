@@ -1,0 +1,31 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention 1:7 interleave with MoE.
+[arXiv:2403.19887; hf]  72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2 (MoE every other layer).
+
+Notes: the mamba sublayers use the Mamba2/SSD formulation (TPU/MXU-friendly;
+see DESIGN.md hardware-adaptation).  Adafactor keeps optimizer state within
+v5e HBM at 398B params; FSDP shards params over the data axes."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    n_experts=16,
+    experts_per_tok=2,
+    moe_layer_period=2,
+    attn_layer_period=8,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    rope_theta=10000.0,
+    act="silu",
+    fsdp=True,
+    optimizer="adafactor",
+)

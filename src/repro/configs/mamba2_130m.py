@@ -1,0 +1,20 @@
+"""mamba2-130m — attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]  24L d_model=768 d_ff=0 vocab=50280,
+ssm_state=128, headdim=64 (-> 24 SSD heads at expand=2)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=1,            # no attention heads; SSD heads derive from d_inner
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    act="silu",
+)

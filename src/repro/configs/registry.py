@@ -1,0 +1,32 @@
+"""Architecture registry: ``get_config(arch_id)`` for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHS = (
+    "h2o-danube-3-4b",
+    "internlm2-20b",
+    "phi3-mini-3.8b",
+    "tinyllama-1.1b",
+    "jamba-1.5-large-398b",
+    "mamba2-130m",
+    "granite-moe-3b-a800m",
+    "moonshot-v1-16b-a3b",
+    "whisper-medium",
+    "internvl2-1b",
+)
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

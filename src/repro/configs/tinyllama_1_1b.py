@@ -1,0 +1,18 @@
+"""tinyllama-1.1b — llama2-arch small; the paper's own Table-4 LLM.
+[arXiv:2401.02385; hf]  22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.
+Default fine-tune setting mirrors the paper: ASI rank 20 on the tail."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    n_layers=22,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=5632,
+    vocab_size=32000,
+    rope_theta=10000.0,
+    act="silu",
+    asi_rank=20,
+)

@@ -1,0 +1,21 @@
+"""whisper-medium — encoder-decoder; conv/audio frontend is a STUB per the
+assignment (input_specs provides precomputed frame embeddings).
+[arXiv:2212.04356; unverified]  24L(enc)+24L(dec) d_model=1024 16H (kv=16)
+d_ff=4096 vocab=51865, GELU MLPs, LayerNorm+bias, learned positions."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    n_enc_layers=24,
+    enc_len=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    act="gelu",
+    use_bias=True,
+    learned_pos=True,
+)

@@ -1,0 +1,36 @@
+"""Paper core: Activation Subspace Iteration (ASI) and its baselines."""
+from repro.core.asi import (
+    MatrixASIState,
+    TuckerASIState,
+    compression_ratio,
+    matrix_asi_step,
+    matrix_reconstruct,
+    matrix_storage_elems,
+    orthonormalize,
+    tucker_asi_step,
+    tucker_reconstruct,
+    tucker_storage_elems,
+)
+from repro.core.compressed_linear import (
+    GroupedASIState,
+    LinearCompressionCfg,
+    asi_linear,
+    dense_linear,
+    grouped_asi_linear,
+    hosvd_linear,
+)
+from repro.core.compressed_conv import (
+    ConvCompressionCfg,
+    asi_conv2d,
+    conv2d,
+    hosvd_conv2d,
+)
+from repro.core.rank_selection import (
+    DEFAULT_EPS_GRID,
+    LayerCalibration,
+    PerplexityTable,
+    apply_selection,
+    estimate_perplexity,
+    select_ranks_backtracking,
+    select_ranks_knapsack,
+)

@@ -1,0 +1,161 @@
+"""Activation Subspace Iteration (ASI) — the paper's core contribution.
+
+Two variants, both with warm-started single-step subspace iteration
+(paper Algorithm 1 for the 4-mode Tucker case, Algorithm 2 / Appendix A.1
+for the matrix case used on LLM linear layers, exactly PowerSGD-style):
+
+* ``matrix_asi_step``  — X ∈ R^{M×K} ≈ P̂ Qᵀ with P̂ ∈ R^{M×r} orthonormal,
+  Q ∈ R^{K×r}.  Storage M·r + K·r instead of M·K.
+* ``tucker_asi_step``  — A ∈ R^{D1×…×Dn} ≈ S ×₁ U₁ … ×ₙ Uₙ with per-mode
+  warm-started factors U_m ∈ R^{D_m×r_m} and core S ∈ R^{r1×…×rn}.
+
+The warm start ("V = A_mᵀ U_m^{(t-1)}") is the paper's key trick: activations
+drift slowly between steps (Lipschitz-1 nonlinearities + tiny updates), so the
+previous subspace is a near-fixed-point initialization and ONE iteration
+suffices.  State is threaded explicitly (JAX is functional).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def orthonormalize(p: Array) -> Array:
+    """Orthonormalize the columns of ``p`` (M, r).
+
+    The paper uses Gram-Schmidt (Θ(r³) beyond the M·r² work); reduced QR is the
+    numerically-robust TPU-native equivalent and has the same asymptotic cost.
+    """
+    q, _ = jnp.linalg.qr(p.astype(jnp.float32))
+    return q.astype(p.dtype)
+
+
+def _init_factor(key: Array, shape: tuple[int, ...], dtype) -> Array:
+    """i.i.d. standard-normal init used at t=0 (Algorithm 1/2)."""
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Matrix (2-mode) ASI — used for LLM linear layers (paper Table 4, rank 20).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MatrixASIState:
+    """Warm-start state for one linear layer: the K×r co-factor Q."""
+    q: Array          # (K, r) — used as V at the next step
+
+    @staticmethod
+    def init(key: Array, k: int, rank: int, dtype=jnp.float32) -> "MatrixASIState":
+        return MatrixASIState(q=_init_factor(key, (k, rank), dtype))
+
+
+def matrix_asi_step(x: Array, state: MatrixASIState) -> tuple[Array, Array, MatrixASIState]:
+    """One warm-started subspace iteration on X (M, K).
+
+    Returns (P̂, Q, new_state) with X ≈ P̂ Qᵀ; new_state carries Q for warm start.
+    Algorithm 2 of the paper:  P = X·Q_{t-1};  P̂ = orth(P);  Q = Xᵀ·P̂.
+    """
+    v = state.q                                   # warm start (K, r)
+    p = x @ v                                     # (M, r)   2·M·K·r FLOPs
+    p_hat = orthonormalize(p)                     # (M, r)   Θ(M·r² + r³)
+    q = x.T @ p_hat                               # (K, r)   2·M·K·r FLOPs
+    return p_hat, q, MatrixASIState(q=q)
+
+
+def matrix_reconstruct(p_hat: Array, q: Array) -> Array:
+    return p_hat @ q.T
+
+
+# ---------------------------------------------------------------------------
+# Tucker (n-mode) ASI — paper Algorithm 1 (4 modes for conv activations).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TuckerASIState:
+    """Per-mode factors U_m (D_m, r_m), stored as a tuple (static length)."""
+    factors: tuple[Array, ...]
+
+    @staticmethod
+    def init(key: Array, dims: Sequence[int], ranks: Sequence[int],
+             dtype=jnp.float32) -> "TuckerASIState":
+        keys = jax.random.split(key, len(dims))
+        fs = tuple(
+            _init_factor(k, (d, min(r, d)), dtype)
+            for k, d, r in zip(keys, dims, ranks)
+        )
+        return TuckerASIState(factors=fs)
+
+
+def _unfold(a: Array, mode: int) -> Array:
+    """Mode-m unfolding: (D_m, prod(other dims))."""
+    perm = (mode,) + tuple(i for i in range(a.ndim) if i != mode)
+    return jnp.transpose(a, perm).reshape(a.shape[mode], -1)
+
+
+def _mode_dot(a: Array, m: Array, mode: int) -> Array:
+    """n-mode product A ×_mode M with M (Q, D_mode) -> result dim Q on `mode`."""
+    moved = jnp.moveaxis(a, mode, -1)
+    out = moved @ m.T
+    return jnp.moveaxis(out, -1, mode)
+
+
+def tucker_asi_step(a: Array, state: TuckerASIState
+                    ) -> tuple[Array, tuple[Array, ...], TuckerASIState]:
+    """Paper Algorithm 1: one warm-started subspace iteration per mode.
+
+    For each mode m:  V = A_mᵀ U_m^{(t-1)};  U_m = orth(A_m V).
+    Core: S = A ×₁ U₁ᵀ ×₂ U₂ᵀ … ×ₙ Uₙᵀ.
+    Returns (core, factors, new_state).
+    """
+    new_factors = []
+    for m in range(a.ndim):
+        a_m = _unfold(a, m)                       # (D_m, P_m)
+        u_prev = state.factors[m]                 # (D_m, r_m)
+        v = a_m.T @ u_prev                        # warm start  (P_m, r_m)
+        u = orthonormalize(a_m @ v)               # (D_m, r_m)
+        new_factors.append(u)
+    core = a
+    for m, u in enumerate(new_factors):
+        core = _mode_dot(core, u.T, m)            # project: dim D_m -> r_m
+    factors = tuple(new_factors)
+    return core, factors, TuckerASIState(factors=factors)
+
+
+def tucker_reconstruct(core: Array, factors: Sequence[Array]) -> Array:
+    a = core
+    for m, u in enumerate(factors):
+        a = _mode_dot(a, u, m)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (paper eq. 5 / eq. 19).
+# ---------------------------------------------------------------------------
+
+def tucker_storage_elems(dims: Sequence[int], ranks: Sequence[int]) -> int:
+    """Eq. 5:  M_i = prod(r_m) + Σ_m D_m·r_m   (elements, not bytes)."""
+    ranks = [min(r, d) for r, d in zip(ranks, dims)]
+    prod = 1
+    for r in ranks:
+        prod *= r
+    return prod + sum(d * r for d, r in zip(dims, ranks))
+
+
+def matrix_storage_elems(m: int, k: int, rank: int) -> int:
+    return (m + k) * rank
+
+
+def compression_ratio(dims: Sequence[int], ranks: Sequence[int]) -> float:
+    """Eq. 19:  R_C = prod(D) / M_i."""
+    full = 1
+    for d in dims:
+        full *= d
+    return full / tucker_storage_elems(dims, ranks)

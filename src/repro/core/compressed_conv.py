@@ -1,0 +1,135 @@
+"""ASI-compressed 2-D convolution via ``jax.custom_vjp`` (paper §3, conv case).
+
+Forward: exact ``lax.conv_general_dilated`` (NCHW / OIHW).  Residuals stored
+for backward: the 4-mode Tucker factors of the input activation from one
+warm-started subspace iteration (Algorithm 1) — core S (r1,r2,r3,r4) and
+factors U1..U4 — instead of the full (B,C,H,W) tensor.
+
+Backward ∂L/∂W follows the paper's eq. 15 contraction order so the FLOPs stay
+low-rank (U2, the channel factor, is contracted LAST):
+
+    G1 = Σ_b U1[b,r1]·g[b,·,·,·]                      r1·B·C'H'W'
+    T  = S ×₃ U₃ ×₄ U₄                                 r1r2r3r4·H + r1r2r4·H·W
+    dW_low[c',r2,kh,kw] = corr(T, G1)  (conv-as-vjp)   r1r2·C'H'W'·D²
+    dW = dW_low ×_{r2} U₂                              r2·C'C·D²
+
+∂L/∂x is exact (needs only W, paper eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.asi import TuckerASIState, tucker_asi_step, _mode_dot
+
+Array = jax.Array
+DIMS = ("NCHW", "OIHW", "NCHW")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvCompressionCfg:
+    ranks: tuple[int, int, int, int]     # (r_B, r_C, r_H, r_W)
+    stride: tuple[int, int] = (1, 1)
+    padding: str = "SAME"
+
+
+def conv2d(x: Array, w: Array, *, stride=(1, 1), padding="SAME") -> Array:
+    return lax.conv_general_dilated(x, w, window_strides=stride,
+                                    padding=padding, dimension_numbers=DIMS)
+
+
+def _conv_input_grad(g: Array, w: Array, x_shape, stride, padding) -> Array:
+    f = lambda x: conv2d(x, w, stride=stride, padding=padding)
+    _, vjp = jax.vjp(f, jnp.zeros(x_shape, g.dtype))
+    return vjp(g)[0]
+
+
+def _conv_weight_grad(a: Array, g: Array, w_shape, stride, padding) -> Array:
+    f = lambda w: conv2d(a, w, stride=stride, padding=padding)
+    _, vjp = jax.vjp(f, jnp.zeros(w_shape, g.dtype))
+    return vjp(g)[0]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def asi_conv2d(cfg: ConvCompressionCfg, x: Array, w: Array,
+               state: TuckerASIState):
+    y = conv2d(x, w, stride=cfg.stride, padding=cfg.padding)
+    _, _, new_state = tucker_asi_step(x, state)
+    return y, new_state
+
+
+def _asi_conv_fwd(cfg, x, w, state):
+    core, factors, new_state = tucker_asi_step(x, state)
+    y = conv2d(x, w, stride=cfg.stride, padding=cfg.padding)
+    res = (core, factors, w, x.shape)
+    return (y, new_state), res
+
+
+def _asi_conv_bwd(cfg, res, cts):
+    g_y, _ = cts
+    core, factors, w, x_shape = res
+    u1, u2, u3, u4 = factors
+    # exact input gradient
+    g_x = _conv_input_grad(g_y, w, x_shape, cfg.stride, cfg.padding)
+    # eq.-15 low-rank weight gradient
+    g1 = jnp.einsum("br,bohw->rohw", u1.astype(g_y.dtype), g_y)        # (r1,C',H',W')
+    t = _mode_dot(_mode_dot(core, u3, 2), u4, 3)                        # (r1,r2,H,W)
+    t = t.astype(g_y.dtype)
+    c_out = w.shape[0]
+    dw_low_shape = (c_out, t.shape[1]) + w.shape[2:]                    # (C', r2, D, D)
+    dw_low = _conv_weight_grad(t, g1, dw_low_shape, cfg.stride, cfg.padding)
+    g_w = jnp.einsum("orhw,cr->ochw", dw_low, u2.astype(dw_low.dtype))
+    g_state = jax.tree.map(jnp.zeros_like, TuckerASIState(factors=factors))
+    return g_x, g_w.astype(w.dtype), g_state
+
+
+asi_conv2d.defvjp(_asi_conv_fwd, _asi_conv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# HOSVD fixed-rank conv (baseline) — same storage/backward, SVD every step.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def hosvd_conv2d(cfg: ConvCompressionCfg, x: Array, w: Array):
+    return conv2d(x, w, stride=cfg.stride, padding=cfg.padding)
+
+
+def _unfold(a, m):
+    perm = (m,) + tuple(i for i in range(a.ndim) if i != m)
+    return jnp.transpose(a, perm).reshape(a.shape[m], -1)
+
+
+def _hosvd_conv_fwd(cfg, x, w):
+    factors = []
+    for m in range(4):
+        u, _, _ = jnp.linalg.svd(_unfold(x, m).astype(jnp.float32),
+                                 full_matrices=False)
+        r = min(cfg.ranks[m], u.shape[1])
+        factors.append(u[:, :r].astype(x.dtype))
+    core = x
+    for m, u in enumerate(factors):
+        core = _mode_dot(core, u.T, m)
+    y = conv2d(x, w, stride=cfg.stride, padding=cfg.padding)
+    return y, (core, tuple(factors), w, x.shape)
+
+
+def _hosvd_conv_bwd(cfg, res, g_y):
+    core, factors, w, x_shape = res
+    u1, u2, u3, u4 = factors
+    g_x = _conv_input_grad(g_y, w, x_shape, cfg.stride, cfg.padding)
+    g1 = jnp.einsum("br,bohw->rohw", u1.astype(g_y.dtype), g_y)
+    t = _mode_dot(_mode_dot(core, u3, 2), u4, 3).astype(g_y.dtype)
+    c_out = w.shape[0]
+    dw_low = _conv_weight_grad(t, g1, (c_out, t.shape[1]) + w.shape[2:],
+                               cfg.stride, cfg.padding)
+    g_w = jnp.einsum("orhw,cr->ochw", dw_low, u2.astype(dw_low.dtype))
+    return g_x, g_w.astype(w.dtype)
+
+
+hosvd_conv2d.defvjp(_hosvd_conv_fwd, _hosvd_conv_bwd)

@@ -1,0 +1,157 @@
+"""Closed-form cost model — paper Appendix A (eqs. 5, 11-19).
+
+Used by the benchmark harness to reproduce the paper's FLOPs/memory tables and
+by the §Perf napkin math.  All counts are multiply-accumulate-style FLOPs in
+the paper's convention (products only, matching eqs. 11-17).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvDims:
+    """One conv layer:  A_i (B,C,H,W) * W (C',C,D,D) -> (B,C',H',W')."""
+    b: int
+    c_in: int
+    h: int
+    w: int
+    c_out: int
+    d: int
+    stride: int = 1
+
+    @property
+    def h_out(self) -> int:
+        return max(self.h // self.stride, 1)
+
+    @property
+    def w_out(self) -> int:
+        return max(self.w // self.stride, 1)
+
+    @property
+    def dims(self) -> tuple[int, int, int, int]:
+        return (self.b, self.c_in, self.h, self.w)
+
+
+# ----- memory (elements) ----------------------------------------------------
+
+def vanilla_activation_elems(cd: ConvDims) -> int:
+    return cd.b * cd.c_in * cd.h * cd.w
+
+
+def tucker_activation_elems(cd: ConvDims, ranks: Sequence[int]) -> int:
+    """Eq. 5."""
+    r = [min(rr, dd) for rr, dd in zip(ranks, cd.dims)]
+    return math.prod(r) + sum(d * rr for d, rr in zip(cd.dims, r))
+
+
+def compression_ratio(cd: ConvDims, ranks: Sequence[int]) -> float:
+    """Eq. 19 (R_C)."""
+    return vanilla_activation_elems(cd) / tucker_activation_elems(cd, ranks)
+
+
+# ----- forward / overhead FLOPs ----------------------------------------------
+
+def vanilla_forward_flops(cd: ConvDims) -> int:
+    """Eq. 17:  O_vanilla = D²·C·C'·B·H·W  (paper uses input H·W)."""
+    return cd.d ** 2 * cd.c_in * cd.c_out * cd.b * cd.h * cd.w
+
+
+def hosvd_overhead_flops(cd: ConvDims) -> int:
+    """Eq. 11/13:  Σ_d max(d,P_d)²·min(d,P_d)  — per-step HOSVD cost."""
+    dims = cd.dims
+    total = 0
+    for i, d in enumerate(dims):
+        p = math.prod(dd for j, dd in enumerate(dims) if j != i)
+        total += max(d, p) ** 2 * min(d, p)
+    return total
+
+
+def asi_overhead_flops(cd: ConvDims, ranks: Sequence[int]) -> int:
+    """Eq. 14:  Σ_m 2·d·d'·r_m + r_m³  (one subspace iteration per mode)."""
+    dims = cd.dims
+    total = 0
+    for m, r in enumerate(ranks):
+        d = dims[m]
+        dprime = math.prod(dd for j, dd in enumerate(dims) if j != m)
+        total += 2 * d * dprime * r + r ** 3
+    return total
+
+
+# ----- backward FLOPs ---------------------------------------------------------
+
+def vanilla_backward_weight_flops(cd: ConvDims) -> int:
+    """Eq. 16:  C_vanilla = D²·C·C'·B·H'·W'."""
+    return cd.d ** 2 * cd.c_in * cd.c_out * cd.b * cd.h_out * cd.w_out
+
+
+def asi_backward_weight_flops(cd: ConvDims, ranks: Sequence[int]) -> int:
+    """Eq. 15 term-by-term."""
+    r1, r2, r3, r4 = [min(rr, dd) for rr, dd in zip(ranks, cd.dims)]
+    t1 = r1 * cd.b * cd.c_out * cd.h_out * cd.w_out
+    t2 = r1 * r2 * r3 * r4 * cd.h
+    t3 = r1 * r2 * r4 * cd.h * cd.w
+    t4 = r1 * r2 * cd.c_out * cd.h_out * cd.w_out * cd.d ** 2
+    t5 = r2 * cd.c_out * cd.c_in * cd.d ** 2
+    return t1 + t2 + t3 + t4 + t5
+
+
+def speedup_ratio(cd: ConvDims, ranks: Sequence[int]) -> float:
+    """Eq. 18 (R_S): vanilla (fwd+bwd) over ASI (fwd + overhead + bwd)."""
+    o_v = vanilla_forward_flops(cd)
+    c_v = vanilla_backward_weight_flops(cd)
+    o_asi = asi_overhead_flops(cd, ranks)
+    c_asi = asi_backward_weight_flops(cd, ranks)
+    return (o_v + c_v) / (o_v + o_asi + c_asi)
+
+
+def hosvd_slowdown_ratio(cd: ConvDims, ranks: Sequence[int]) -> float:
+    """FLOPs ratio HOSVD_ε/vanilla for a training step (fwd-side overhead)."""
+    o_v = vanilla_forward_flops(cd)
+    c_v = vanilla_backward_weight_flops(cd)
+    c_asi = asi_backward_weight_flops(cd, ranks)   # HOSVD shares the low-rank bwd
+    return (o_v + hosvd_overhead_flops(cd) + c_asi) / (o_v + c_v)
+
+
+# ----- matrix (LLM linear) variants — paper Table 4 setting ------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearDims:
+    m: int        # tokens  (B·S)
+    k: int        # d_in
+    n: int        # d_out
+
+
+def linear_vanilla_activation_elems(ld: LinearDims) -> int:
+    return ld.m * ld.k
+
+
+def linear_asi_activation_elems(ld: LinearDims, rank: int) -> int:
+    return (ld.m + ld.k) * rank
+
+
+def linear_forward_flops(ld: LinearDims) -> int:
+    return ld.m * ld.k * ld.n
+
+
+def linear_asi_overhead_flops(ld: LinearDims, rank: int) -> int:
+    return 2 * ld.m * ld.k * rank + rank ** 3
+
+
+def linear_vanilla_backward_flops(ld: LinearDims) -> int:
+    # dW = Xᵀg  +  dX = g Wᵀ
+    return ld.m * ld.k * ld.n * 2
+
+
+def linear_asi_backward_flops(ld: LinearDims, rank: int) -> int:
+    # dW = Q (P̂ᵀ g): M·r·N + K·r·N ;  dX exact: M·K·N
+    return ld.m * rank * ld.n + ld.k * rank * ld.n + ld.m * ld.k * ld.n
+
+
+def linear_speedup_ratio(ld: LinearDims, rank: int) -> float:
+    vanilla = linear_forward_flops(ld) + linear_vanilla_backward_flops(ld)
+    asi = (linear_forward_flops(ld) + linear_asi_overhead_flops(ld, rank)
+           + linear_asi_backward_flops(ld, rank))
+    return vanilla / asi

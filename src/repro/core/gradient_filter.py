@@ -1,0 +1,35 @@
+"""Gradient filtering baseline (Yang et al., CVPR 2023).
+
+The paper benchmarks against this: approximate activations and output
+gradients by average-pooling over RxR spatial patches before computing the
+weight gradient.  Memory drops by R² for the stored activation; the gradient
+is approximated (unlike ASI, the error also propagates to ∂L/∂A in the
+original method — we reproduce the stored-activation variant used by the
+paper's comparison, i.e. pooled A and pooled g for ∂L/∂W).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def patch_pool(x: Array, r: int) -> Array:
+    """Average-pool an NCHW tensor over non-overlapping r×r patches.
+
+    Pads H/W up to multiples of r (edge replication not needed for the cost
+    model; zero-pad + renormalize keeps the mean exact on full patches).
+    """
+    b, c, h, w = x.shape
+    ph, pw = (-h) % r, (-w) % r
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, ph), (0, pw)))
+    hh, ww = (h + ph) // r, (w + pw) // r
+    x = x.reshape(b, c, hh, r, ww, r)
+    return x.mean(axis=(3, 5))
+
+
+def pooled_storage_elems(shape: tuple[int, int, int, int], r: int) -> int:
+    b, c, h, w = shape
+    return b * c * ((h + r - 1) // r) * ((w + r - 1) // r)

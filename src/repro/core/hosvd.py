@@ -1,0 +1,70 @@
+"""HOSVD_ε — the Nguyen et al. 2024 baseline the paper improves upon.
+
+Truncated higher-order SVD of an activation tensor, with per-mode ranks chosen
+as the smallest r whose leading singular values explain ≥ ε of the variance
+(energy).  Recomputed from scratch every call — this is exactly the per-step
+cost the paper's ASI removes (eq. 11/13 overhead).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asi import _mode_dot, _unfold
+
+Array = jax.Array
+
+
+def explained_variance_rank(s: Array, eps: float) -> Array:
+    """Smallest r such that  Σ_{i<r} s_i² / Σ s_i²  ≥ eps.   (traced-safe)"""
+    energy = s.astype(jnp.float32) ** 2
+    cum = jnp.cumsum(energy) / jnp.maximum(jnp.sum(energy), 1e-30)
+    return jnp.minimum(jnp.searchsorted(cum, jnp.float32(eps)) + 1, s.shape[0])
+
+
+def mode_svd(a_m: Array):
+    """Full (thin) SVD of a mode unfolding, in fp32 for stability."""
+    return jnp.linalg.svd(a_m.astype(jnp.float32), full_matrices=False)
+
+
+def hosvd(a: Array, eps: float) -> tuple[Array, list[Array], list[int]]:
+    """HOSVD_ε decomposition (NOT jit-friendly: ranks are data-dependent).
+
+    Returns (core, factors, ranks) with a ≈ core ×₁ U₁ … ×ₙ Uₙ.
+    Used offline (rank selection / perplexity estimation) and as the baseline
+    in benchmarks, mirroring how the paper uses it.
+    """
+    factors, ranks = [], []
+    for m in range(a.ndim):
+        u, s, _ = mode_svd(_unfold(a, m))
+        r = int(explained_variance_rank(s, eps))
+        factors.append(u[:, :r].astype(a.dtype))
+        ranks.append(r)
+    core = a
+    for m, u in enumerate(factors):
+        core = _mode_dot(core, u.T, m)
+    return core, factors, ranks
+
+
+def hosvd_fixed_rank(a: Array, ranks: Sequence[int]) -> tuple[Array, list[Array]]:
+    """HOSVD truncated to explicit per-mode ranks (jit-friendly shapes)."""
+    factors = []
+    for m in range(a.ndim):
+        u, _, _ = mode_svd(_unfold(a, m))
+        r = min(int(ranks[m]), u.shape[1])
+        factors.append(u[:, :r].astype(a.dtype))
+    core = a
+    for m, u in enumerate(factors):
+        core = _mode_dot(core, u.T, m)
+    return core, factors
+
+
+def hosvd_ranks_for_eps(a: Array, eps: float) -> list[int]:
+    """Just the per-mode ranks HOSVD_ε would pick (for rank selection)."""
+    out = []
+    for m in range(a.ndim):
+        _, s, _ = mode_svd(_unfold(a, m))
+        out.append(int(explained_variance_rank(s, eps)))
+    return out

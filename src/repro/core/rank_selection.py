@@ -1,0 +1,204 @@
+"""Offline rank selection (paper §3.3): activation perplexity + budget search.
+
+Pipeline (run ONCE before training, exactly as the paper prescribes):
+
+1. For each explained-variance threshold ε_j in the grid E (paper uses
+   {0.4,…,0.9}) and each fine-tuned layer i, decompose a calibration
+   activation with HOSVD_ε, compute the approximate weight gradient, and
+   record the *gradient* perplexity  P[i,j] = ‖∂L/∂W_i − ≈∂L/∂W_i‖_F (eq. 7)
+   plus the resulting per-mode ranks R[i,j,:] and memory M[i,j] (eq. 5).
+
+2. Pick one threshold index per layer minimizing Σ P subject to Σ M ≤ B
+   (eq. 8-9).  The paper uses recursive backtracking (and flags it as a
+   limitation); we provide both the faithful backtracking (with
+   branch-and-bound pruning) and a beyond-paper quantized-knapsack DP that is
+   polynomial and exact up to memory quantization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hosvd as hosvd_lib
+from repro.core.asi import tucker_storage_elems, matrix_storage_elems
+
+Array = jax.Array
+
+DEFAULT_EPS_GRID = (0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+
+
+@dataclasses.dataclass
+class LayerCalibration:
+    """Calibration capture for one fine-tuned layer."""
+    name: str
+    activation: np.ndarray         # the stored input A_i (any rank >= 2)
+    grad_out: np.ndarray           # ∂L/∂A_{i+1} at the same step
+    kind: str = "linear"           # 'linear' | 'conv'
+    weight_grad_fn: Callable | None = None   # (a, g) -> exact dW (conv case)
+
+
+@dataclasses.dataclass
+class PerplexityTable:
+    names: list[str]
+    eps_grid: tuple[float, ...]
+    perplexity: np.ndarray         # (N, E)
+    memory: np.ndarray             # (N, E)  elements
+    ranks: np.ndarray              # (N, E, n_modes)  (padded with 0 for linear)
+
+
+def _linear_exact_grad(a: np.ndarray, g: np.ndarray) -> np.ndarray:
+    a2, g2 = a.reshape(-1, a.shape[-1]), g.reshape(-1, g.shape[-1])
+    return a2.T @ g2
+
+
+def _linear_lowrank_grad(a: np.ndarray, g: np.ndarray, rank: int) -> np.ndarray:
+    a2 = a.reshape(-1, a.shape[-1]).astype(np.float32)
+    g2 = g.reshape(-1, g.shape[-1]).astype(np.float32)
+    u, s, vt = np.linalg.svd(a2, full_matrices=False)
+    r = min(rank, s.shape[0])
+    # dW ≈ (U_r S_r V_rᵀ)ᵀ g = V_r S_r (U_rᵀ g)
+    return (vt[:r].T * s[:r]) @ (u[:, :r].T @ g2)
+
+
+def estimate_perplexity(layers: Sequence[LayerCalibration],
+                        eps_grid: Sequence[float] = DEFAULT_EPS_GRID
+                        ) -> PerplexityTable:
+    """Step 1+2 of §3.3 on captured calibration tensors."""
+    n, e = len(layers), len(eps_grid)
+    max_modes = max(ly.activation.ndim for ly in layers)
+    perp = np.zeros((n, e))
+    mem = np.zeros((n, e))
+    ranks = np.zeros((n, e, max_modes), dtype=np.int64)
+    for i, ly in enumerate(layers):
+        a = np.asarray(ly.activation, dtype=np.float32)
+        g = np.asarray(ly.grad_out, dtype=np.float32)
+        if ly.kind == "linear":
+            exact = _linear_exact_grad(a, g)
+            a2 = a.reshape(-1, a.shape[-1])
+            _, s, _ = np.linalg.svd(a2, full_matrices=False)
+            for j, eps in enumerate(eps_grid):
+                energy = s ** 2
+                cum = np.cumsum(energy) / max(energy.sum(), 1e-30)
+                r = int(np.searchsorted(cum, eps) + 1)
+                approx = _linear_lowrank_grad(a, g, r)
+                perp[i, j] = float(np.linalg.norm(exact - approx))
+                mem[i, j] = matrix_storage_elems(a2.shape[0], a2.shape[1], r)
+                ranks[i, j, 0] = r
+        else:   # conv: 4-mode HOSVD_ε
+            assert ly.weight_grad_fn is not None, "conv calibration needs weight_grad_fn"
+            exact = np.asarray(ly.weight_grad_fn(a, g))
+            for j, eps in enumerate(eps_grid):
+                core, factors, rs = hosvd_lib.hosvd(jnp.asarray(a), eps)
+                a_hat = core
+                for m, u in enumerate(factors):
+                    a_hat = jnp.moveaxis(jnp.moveaxis(a_hat, m, -1) @ u.T, -1, m)
+                approx = np.asarray(ly.weight_grad_fn(np.asarray(a_hat), g))
+                perp[i, j] = float(np.linalg.norm(exact - approx))
+                mem[i, j] = tucker_storage_elems(a.shape, rs)
+                ranks[i, j, :4] = rs
+    return PerplexityTable(names=[ly.name for ly in layers],
+                           eps_grid=tuple(eps_grid),
+                           perplexity=perp, memory=mem, ranks=ranks)
+
+
+# ---------------------------------------------------------------------------
+# Budget-constrained selection (eq. 8-9).
+# ---------------------------------------------------------------------------
+
+def select_ranks_backtracking(perplexity: np.ndarray, memory: np.ndarray,
+                              budget: float) -> list[int]:
+    """Paper-faithful recursive backtracking with branch-and-bound pruning.
+
+    Returns the per-layer threshold index j minimizing Σ P s.t. Σ M ≤ budget.
+    Raises ValueError when even the smallest-memory choice exceeds the budget.
+    """
+    n, e = perplexity.shape
+    min_mem_suffix = np.zeros(n + 1)
+    for i in range(n - 1, -1, -1):
+        min_mem_suffix[i] = min_mem_suffix[i + 1] + memory[i].min()
+    min_perp_suffix = np.zeros(n + 1)
+    for i in range(n - 1, -1, -1):
+        min_perp_suffix[i] = min_perp_suffix[i + 1] + perplexity[i].min()
+    if min_mem_suffix[0] > budget:
+        raise ValueError(
+            f"budget {budget:.3g} infeasible: minimum memory {min_mem_suffix[0]:.3g}")
+
+    best = {"perp": np.inf, "choice": None}
+    choice = [0] * n
+
+    def recurse(i: int, used_mem: float, used_perp: float):
+        if used_perp + min_perp_suffix[i] >= best["perp"]:
+            return                                   # bound prune
+        if i == n:
+            best["perp"] = used_perp
+            best["choice"] = list(choice)
+            return
+        order = np.argsort(perplexity[i])            # try best-perplexity first
+        for j in order:
+            m = memory[i, j]
+            if used_mem + m + min_mem_suffix[i + 1] > budget:
+                continue                             # feasibility prune
+            choice[i] = int(j)
+            recurse(i + 1, used_mem + m, used_perp + perplexity[i, j])
+
+    recurse(0, 0.0, 0.0)
+    assert best["choice"] is not None
+    return best["choice"]
+
+
+def select_ranks_knapsack(perplexity: np.ndarray, memory: np.ndarray,
+                          budget: float, n_bins: int = 4096) -> list[int]:
+    """Beyond-paper: quantized multiple-choice knapsack DP (poly-time).
+
+    Addresses the paper's stated limitation (Appendix C) that backtracking is
+    brute-force.  Memory is quantized to ``n_bins`` levels; DP is exact on the
+    quantized problem.  Quantization errs conservatively (ceil), so the true
+    memory of the returned choice never exceeds the budget.
+    """
+    n, e = perplexity.shape
+    scale = budget / n_bins
+    q = np.minimum(np.ceil(memory / max(scale, 1e-30)).astype(np.int64), n_bins + 1)
+    INF = np.inf
+    dp = np.full(n_bins + 1, INF)
+    dp[0] = 0.0
+    back = np.full((n, n_bins + 1), -1, dtype=np.int64)
+    for i in range(n):
+        ndp = np.full(n_bins + 1, INF)
+        for j in range(e):
+            c = q[i, j]
+            if c > n_bins:
+                continue
+            shifted = np.full(n_bins + 1, INF)
+            shifted[c:] = dp[:n_bins + 1 - c] + perplexity[i, j]
+            better = shifted < ndp
+            ndp = np.where(better, shifted, ndp)
+            back[i][better] = j
+        dp = ndp
+    if not np.isfinite(dp).any():
+        raise ValueError("budget infeasible under quantization")
+    b = int(np.argmin(dp))
+    choice = []
+    for i in range(n - 1, -1, -1):
+        j = int(back[i, b])
+        choice.append(j)
+        b -= int(q[i, j])
+    choice.reverse()
+    return choice
+
+
+def apply_selection(table: PerplexityTable, choice: Sequence[int]) -> dict:
+    """Materialize {layer_name: {'rank(s)': ..., 'memory': ..., 'eps': ...}}."""
+    out = {}
+    for i, name in enumerate(table.names):
+        j = choice[i]
+        out[name] = {
+            "eps": table.eps_grid[j],
+            "ranks": [int(r) for r in table.ranks[i, j] if r > 0],
+            "memory_elems": float(table.memory[i, j]),
+            "perplexity": float(table.perplexity[i, j]),
+        }
+    return out

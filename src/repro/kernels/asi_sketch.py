@@ -1,0 +1,102 @@
+"""Fused forward-matmul + ASI-sketch Pallas TPU kernel.
+
+ASI's per-step cost on TPU is not FLOPs (the sketch is a tall-skinny matmul,
+cheap on the MXU) but HBM traffic: unfused, X (M, K) is streamed from HBM once
+for Y = X·W and again for P = X·V.  This kernel computes both in ONE pass:
+each (bm, bk) VMEM tile of X feeds the Y-accumulator and, on the n == 0 grid
+column, the P-accumulator.  Arithmetic intensity of the sketch becomes
+infinite (zero extra HBM reads), which is the TPU-native formulation of the
+paper's Algorithm 2 (see DESIGN.md §3).
+
+Blocking: (bm, bn, bk) multiples of 128 keep the 128x128 MXU systolic array
+full; the r (rank) dimension is zero-padded to the lane width by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(x_ref, w_ref, v_ref, y_ref, p_ref, acc_ref, pacc_ref, *, nk: int):
+    k = pl.program_id(2)
+    n = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(n == 0)
+    def _sketch():
+        @pl.when(k == 0)
+        def _pinit():
+            pacc_ref[...] = jnp.zeros_like(pacc_ref)
+        pacc_ref[...] += jnp.dot(x, v_ref[...],
+                                 preferred_element_type=jnp.float32)
+        @pl.when(k == nk - 1)
+        def _pout():
+            p_ref[...] = pacc_ref[...]
+
+    @pl.when(k == nk - 1)
+    def _out():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_sketch(x: Array, w: Array, v: Array, *, bm: int = 128,
+                  bn: int = 128, bk: int = 128,
+                  interpret: bool = False):
+    """Returns (Y = X·W in x.dtype, P = X·V in fp32).
+
+    x (M, K), w (K, N), v (K, r).  Dims are zero-padded to block multiples;
+    padding contributes exact zeros so results are unaffected.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    r = v.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    pr = (-r) % 128 if r % 128 else 0
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pk or pr:
+        v = jnp.pad(v, ((0, pk), (0, pr)))
+    mm, nn, kk = x.shape[0], w.shape[1], x.shape[1]
+    rr = v.shape[1]
+    nk = kk // bk
+    grid = (mm // bm, nn // bn, nk)
+
+    y, p = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk_: (i, kk_)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk_: (kk_, j)),
+            pl.BlockSpec((bk, rr), lambda i, j, kk_: (kk_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk_: (i, j)),
+            pl.BlockSpec((bm, rr), lambda i, j, kk_: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), x.dtype),
+            jax.ShapeDtypeStruct((mm, rr), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, rr), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, v)
+    return y[:m, :n], p[:m, :r]

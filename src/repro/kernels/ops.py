@@ -1,0 +1,47 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container) they run
+in interpret mode — the kernel body executes in Python, which validates the
+exact TPU code path bit-for-bit against the oracles in ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.asi_sketch import matmul_sketch as _matmul_sketch
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul_sketch(x: Array, w: Array, v: Array, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _matmul_sketch(x, w, v, **kw)
+
+
+def flash_attention(q: Array, k: Array, v: Array, **kw):
+    kw.setdefault("interpret", _interpret())
+    # pick valid block sizes for any sequence length
+    sq, skv = q.shape[1], k.shape[1]
+    bq = kw.pop("bq", 512)
+    bk = kw.pop("bk", 512)
+    while sq % min(bq, sq):
+        bq -= 1
+    while skv % min(bk, skv):
+        bk -= 1
+    return _flash_attention(q, k, v, bq=min(bq, sq), bk=min(bk, skv), **kw)
+
+
+def ssd_scan(x: Array, dt: Array, a: Array, b: Array, c: Array, *,
+             n_heads: int, chunk: int = 256, **kw):
+    kw.setdefault("interpret", _interpret())
+    s = x.shape[1]
+    while s % min(chunk, s):
+        chunk -= 1
+    return _ssd_scan(x, dt, a, b, c, n_heads=n_heads, chunk=min(chunk, s), **kw)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately the *naive* formulations — materialized score matrices,
+full reconstruction — so kernel tests compare an optimized implementation
+against straight-line math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def matmul_sketch_ref(x: Array, w: Array, v: Array):
+    """Fused forward+sketch oracle:  Y = X·W,  P = X·V  (fp32 accumulation)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    p = jnp.dot(x, v, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), p.astype(jnp.float32)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0) -> Array:
+    """Naive attention.  q (BH, Sq, d), k/v (BH, Skv, d)."""
+    sq, skv = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)   # right-aligned positions
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x: Array, dt: Array, a: Array, b: Array, c: Array):
+    """Sequential SSD recurrence oracle.
+
+    x (BH, S, P), dt (BH, S), a (BH,), b/c (BH, S, N).
+    Returns (y (BH, S, P), final state (BH, P, N)).
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs          # (BH,P), (BH,), (BH,N), (BH,N)
+        da = jnp.exp(dtt * a)         # (BH,)
+        h = h * da[:, None, None] + jnp.einsum(
+            "z,zp,zn->zpn", dtt, xt.astype(jnp.float32), bt.astype(jnp.float32))
+        y = jnp.einsum("zn,zpn->zp", ct.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,98 @@
+"""Mamba2 chunked-SSD Pallas TPU kernel.
+
+Grid: (batch·heads, chunks) with the chunk dimension sequential; the running
+(P, N) state lives in VMEM scratch across chunk steps.  Within a chunk
+everything is (Q, ·) matmuls — the MXU-friendly "state-space duality" form.
+B/C projections are shared across heads (single SSM group), read through an
+index map that folds head -> batch, so they are fetched once per batch row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, state_ref, *,
+            q: int, nc: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0]                           # scalar decay rate (negative)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    da = dt * a                               # (Q,) log-decay per step
+    seg = jnp.cumsum(da)                      # within-chunk cumulative decay
+    # intra-chunk: y_q = Σ_{j<=q} (c_q·b_j) exp(seg_q - seg_j) dt_j x_j
+    att = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = seg[:, None] - seg[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l = jnp.where(tri, jnp.exp(decay), 0.0)
+    w = att * l * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q, P)
+    # inter-chunk: y += exp(seg_q) * (c_q · h_inᵀ)
+    h_in = state_ref[...]                     # (P, N)
+    y += jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        c, h_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # state update: h = exp(Σda) h_in + Σ_j exp(seg_end - seg_j) dt_j x_jᵀ b_j
+    dec_end = jnp.exp(seg[q - 1] - seg) * dt  # (Q,)
+    contrib = jax.lax.dot_general(x * dec_end[:, None], b,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = h_in * jnp.exp(seg[q - 1]) + contrib
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(cj == nc - 1)
+    def _final():
+        h_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "chunk", "interpret"))
+def ssd_scan(x: Array, dt: Array, a: Array, b: Array, c: Array, *,
+             n_heads: int, chunk: int = 256, interpret: bool = False):
+    """x (BH, S, P); dt (BH, S); a (BH,); b/c (B, S, N) shared across heads.
+
+    Returns (y (BH, S, P), final_state (BH, P, N)).
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0 and bh % n_heads == 0
+    nc = s // chunk
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, q=chunk, nc=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda z, cj: (z, cj, 0)),
+            pl.BlockSpec((1, chunk), lambda z, cj: (z, cj)),
+            pl.BlockSpec((1, 1), lambda z, cj: (z, 0)),
+            pl.BlockSpec((1, chunk, n), lambda z, cj: (z // n_heads, cj, 0)),
+            pl.BlockSpec((1, chunk, n), lambda z, cj: (z // n_heads, cj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda z, cj: (z, cj, 0)),
+            pl.BlockSpec((1, p, n), lambda z, cj: (z, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a.reshape(bh, 1), b, c)
+    return y, h

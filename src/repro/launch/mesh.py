@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (required: smoke tests must see 1 device; only dryrun.py
+sets the 512-placeholder-device XLA flag before importing jax).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; multi-pod adds a leading pod=2 axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Generic helper for reduced meshes in tests (e.g. (2,2) on 4 host
+    devices)."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

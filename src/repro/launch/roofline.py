@@ -1,0 +1,155 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_operand_bytes_per_device / link_bw
+
+cost_analysis() on the SPMD-partitioned executable reports *per-device*
+FLOPs/bytes, so the terms above are already per-chip; the global formulation
+in the spec (global / (chips x rate)) is identical.  Collective bytes are not
+in cost_analysis — we parse the post-partitioning HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (operand shapes appear inline in HLO text).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\)|[\w\[\],{}\s]+?))\s*"        # scalar or tuple type
+    r"([\w\-]+)\(([^)]*)\)", re.MULTILINE)
+_SHAPE_RE = re.compile(r"\b(pred|[sufc]\d+|bf16|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_kind: dict[str, int]
+    count: int
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in (per-device) HLO text.
+
+    Operand shapes are resolved through a name->result-type map built from
+    all definition lines (modern HLO text omits operand shapes inline); when
+    an operand cannot be resolved, we fall back to the collective's result
+    shape adjusted by the replica-group size (exact for all-reduce /
+    all-to-all / collective-permute; all-gather operand = result/group;
+    reduce-scatter operand = result*group).
+    """
+    defs: dict[str, str] = {}
+    ops = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, rtype, opcode, operands = m.groups()
+        defs[name] = rtype
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            ops.append((base, rtype, operands, m.group(0)))
+
+    by_kind: dict[str, int] = {}
+    count = 0
+    for kind, rtype, operands, line in ops:
+        b = 0
+        for om in _OPERAND_RE.finditer(operands):
+            t = defs.get(om.group(1))
+            if t:
+                b += _shapes_bytes(t)
+        if b == 0:                                 # fallback via result shape
+            rb = _shapes_bytes(rtype)
+            g = _GROUPS_RE.search(line)
+            group = int(g.group(2)) if g else 1
+            if kind == "all-gather":
+                b = rb // max(group, 1)
+            elif kind == "reduce-scatter":
+                b = rb * group
+            else:
+                b = rb
+        if b:
+            by_kind[kind] = by_kind.get(kind, 0) + b
+            count += 1
+    return CollectiveStats(sum(by_kind.values()), by_kind, count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float           # analytic useful FLOPs (global)
+    n_chips: int
+
+    @property
+    def useful_ratio(self) -> float:
+        total_hw = self.flops * self.n_chips
+        return self.model_flops / total_hw if total_hw else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time over the modeled step time: how close the step
+        is to the compute roofline for its *useful* (model) FLOPs."""
+        t_useful = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return t_useful / self.bound_s if self.bound_s else 0.0
+
+
+def analyze(cost: dict, hlo_text: str, n_chips: int,
+            model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    if flops < 0:
+        flops = 0.0
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text).total_bytes
+    c = flops / PEAK_FLOPS
+    m = hbm / HBM_BW
+    k = coll / LINK_BW
+    dominant = max((("compute", c), ("memory", m), ("collective", k)),
+                   key=lambda t: t[1])[0]
+    return Roofline(flops, hbm, coll, c, m, k, dominant, model_flops, n_chips)
+
+
+def model_flops_train(n_params_trained: float, tokens: float) -> float:
+    """6·N·D (dense training convention; use N_active for MoE)."""
+    return 6.0 * n_params_trained * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """2·N·tokens (one forward, no backward)."""
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,52 @@
+"""Batched-decode serving launcher (reduced configs run on CPU).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --requests 6 --max-new 12
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models import build_model
+from repro.runtime.serve_loop import Engine, Request, ServeCfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "encdec":
+        raise SystemExit("encdec serving needs audio frames; use "
+                         "examples/serve_decode.py for the full pipeline")
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(key)
+    eng = Engine(api, params, ServeCfg(max_batch=args.max_batch,
+                                       max_len=args.max_len,
+                                       temperature=args.temperature),
+                 seed=args.seed)
+    reqs = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    done = eng.run(reqs)
+    for r in done:
+        print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out}))
+
+
+if __name__ == "__main__":
+    main()

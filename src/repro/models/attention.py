@@ -1,0 +1,276 @@
+"""GQA attention: chunked online-softmax (flash-style) training/prefill path,
+single-token decode path with (optionally ring-buffered SWA) KV cache, and
+cross-attention for the encoder-decoder family.
+
+The chunked path is the pure-JAX reference implementation of the Pallas
+flash-attention kernel in ``repro/kernels`` — same math, same blocking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed_linear import (LinearCompressionCfg, asi_linear,
+                                          dense_linear, hosvd_linear)
+from repro.models.layers import apply_rope, initializer, rope_tables
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def attn_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    p = {
+        "wq": initializer(k1, (d, h * hd), dtype),
+        "wk": initializer(k2, (d, kv * hd), dtype),
+        "wv": initializer(k3, (d, kv * hd), dtype),
+        "wo": initializer(k4, (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.use_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _project(params, x, cfg, asi_state, new_state, names=("wq", "wk", "wv")):
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    outs = []
+    for n in names:
+        b = params.get("b" + n[1])
+        if asi_state is not None and n in asi_state:
+            if cfg.compress == "hosvd":
+                y = hosvd_linear(ccfg, x, params[n], b)
+                new_state[n] = asi_state[n]
+            else:
+                y, ns = asi_linear(ccfg, x, params[n], b, asi_state[n])
+                new_state[n] = ns
+        else:
+            y = dense_linear(x, params[n], b)
+        outs.append(y)
+    return outs
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps blocking exact for any
+    sequence length, e.g. VLM seq = text + image patches)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: int = 0, q_chunk: int = 1024,
+                      kv_chunk: int = 1024, q_offset=0) -> Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, KV, G, hd);  k/v: (B, Skv, KV, hd).  Returns (B, Sq, KV, G, hd).
+    ``q_offset`` is the absolute position of q[0] (for chunked prefill).
+    """
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, q_chunk, KV, G, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+
+    def one_q_block(args):
+        qi, q_blk = args                                  # q_blk (B,Cq,KV,G,hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = xs
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk), jnp.float32),
+                jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)                    # (B,Cq,KV,G,hd)
+
+    outs = jax.lax.map(one_q_block, (jnp.arange(nq), qb))  # (nq,B,Cq,KV,G,hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, hd).astype(q.dtype)
+
+
+def attn_forward(params: dict, x: Array, cfg: ModelConfig,
+                 positions: Array | None = None,
+                 asi_state: dict | None = None,
+                 enc_kv: tuple[Array, Array] | None = None,
+                 causal: bool = True):
+    """Full-sequence attention (training / prefill).
+
+    Returns (y, new_asi_state, (k, v)) — k/v returned for cache priming.
+    enc_kv: cross-attention keys/values (already projected & headed).
+    """
+    B, S, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    new_state: dict = {}
+    if enc_kv is None:
+        q, k, v = _project(params, x, cfg, asi_state, new_state)
+        q = _split_heads(q, h, hd)
+        k = _split_heads(k, kv, hd)
+        v = _split_heads(v, kv, hd)
+        if not cfg.learned_pos:
+            if positions is None:
+                positions = jnp.arange(S)[None, :]
+            cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        (q,) = _project(params, x, cfg, asi_state, new_state, names=("wq",))
+        q = _split_heads(q, h, hd)
+        k, v = enc_kv
+    q = q.reshape(B, S, kv, g, hd)
+    q = logical_shard(q, "batch", None, "kv", None, None)
+    k = logical_shard(k, "batch", None, "kv", None)
+    v = logical_shard(v, "batch", None, "kv", None)
+    o = chunked_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                          q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    o = o.reshape(B, S, h * hd)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    if asi_state is not None and "wo" in asi_state:
+        if cfg.compress == "hosvd":
+            y = hosvd_linear(ccfg, o, params["wo"], params.get("bo"))
+            new_state["wo"] = asi_state["wo"]
+        else:
+            y, ns = asi_linear(ccfg, o, params["wo"], params.get("bo"),
+                               asi_state["wo"])
+            new_state["wo"] = ns
+    else:
+        y = dense_linear(o, params["wo"], params.get("bo"))
+    return y, (new_state if asi_state is not None else None), (k, v)
+
+
+def cross_kv(params: dict, enc_out: Array, cfg: ModelConfig):
+    """Project encoder output once into cross-attention K/V heads."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = _split_heads(dense_linear(enc_out, params["wk"], params.get("bk")), kv, hd)
+    v = _split_heads(dense_linear(enc_out, params["wv"], params.get("bv")), kv, hd)
+    return k, v
+
+
+def attn_decode(params: dict, x: Array, cache: dict, pos: Array,
+                cfg: ModelConfig, cross: bool = False):
+    """One-token decode.  x (B, 1, d); cache {'k','v'} (B, S_cache, KV, hd).
+
+    For SWA archs the cache is a ring buffer of ``sliding_window`` slots.
+    Returns (y, new_cache).
+    """
+    B, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    if cross:
+        (q,) = _project(params, x, cfg, None, {}, names=("wq",))
+        q = _split_heads(q, h, hd)
+        k, v = cache["k"], cache["v"]
+        valid = jnp.ones((k.shape[1],), bool)
+        new_cache = cache
+    else:
+        q, k1, v1 = _project(params, x, cfg, None, {})
+        q = _split_heads(q, h, hd)
+        k1 = _split_heads(k1, kv, hd)
+        v1 = _split_heads(v1, kv, hd)
+        if not cfg.learned_pos:
+            cos, sin = rope_tables(pos[None, None], hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k1 = apply_rope(k1, cos, sin)
+        s_cache = cache["k"].shape[1]
+        slot = pos % s_cache if cfg.sliding_window else pos
+        if "k_scale" in cache:                       # int8 cache path
+            k1q, k1s = _quantize_kv(k1)
+            v1q, v1s = _quantize_kv(v1)
+            kq = jax.lax.dynamic_update_index_in_dim(cache["k"], k1q[:, 0],
+                                                     slot, 1)
+            vq = jax.lax.dynamic_update_index_in_dim(cache["v"], v1q[:, 0],
+                                                     slot, 1)
+            ks = jax.lax.dynamic_update_index_in_dim(cache["k_scale"],
+                                                     k1s[:, 0], slot, 1)
+            vs = jax.lax.dynamic_update_index_in_dim(cache["v_scale"],
+                                                     v1s[:, 0], slot, 1)
+            new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            k = (kq.astype(jnp.float32) * ks).astype(x.dtype)
+            v = (vq.astype(jnp.float32) * vs).astype(x.dtype)
+        else:
+            k = jax.lax.dynamic_update_index_in_dim(cache["k"], k1[:, 0],
+                                                    slot, 1)
+            v = jax.lax.dynamic_update_index_in_dim(cache["v"], v1[:, 0],
+                                                    slot, 1)
+            new_cache = {"k": k, "v": v}
+        idx = jnp.arange(s_cache)
+        if cfg.sliding_window:
+            age = (slot - idx) % s_cache            # steps since written
+            valid = (age < jnp.minimum(pos + 1, s_cache))
+        else:
+            valid = idx <= pos
+    q = q.reshape(B, 1, kv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    y = dense_linear(o, params["wo"], params.get("bo"))
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    n = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, n, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        # per-(token, kv-head) scales: 1/hd memory overhead, 2x cache shrink
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:3] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x: Array):
+    """x (B, S, KV, hd) -> (int8 values, per-(B,S,KV) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / jnp.maximum(scale, 1e-9)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_cache(cache: dict) -> dict:
+    """Convert a full-precision prefilled KV cache to the int8 layout."""
+    k, ks = _quantize_kv(cache["k"])
+    v, vs = _quantize_kv(cache["v"])
+    return {"k": k, "v": v, "k_scale": ks, "v_scale": vs}

@@ -1,0 +1,155 @@
+"""Convolutional nets for the paper-faithful reproduction (the paper's own
+models: MCUNet-class separable-conv net and ResNet-18).
+
+These are the models the paper's Tables 1/2 use; we train reduced versions on
+synthetic/small data and drive the cost model with the paper's exact layer
+shapes.  The last ``last_k`` standard convolutions (counted from the end, as
+the paper counts fine-tuned layers) can be ASI- or HOSVD-compressed;
+depthwise (grouped) convs stay vanilla — their activations are the same size
+as the pointwise ones that follow, and the paper compresses standard convs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.asi import TuckerASIState
+from repro.core.compressed_conv import (ConvCompressionCfg, asi_conv2d, conv2d,
+                                        hosvd_conv2d)
+from repro.models.layers import initializer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayerSpec:
+    c_in: int
+    c_out: int
+    ksize: int
+    stride: int = 1
+    depthwise: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetConfig:
+    name: str
+    layers: tuple[ConvLayerSpec, ...]
+    num_classes: int = 10
+    input_hw: int = 32
+    compress: str = "none"           # none | asi | hosvd
+    last_k: int = 2                  # compressed tail, standard convs only
+    ranks: tuple[int, int, int, int] = (4, 4, 4, 4)
+
+
+def mcunet_mini(num_classes=10, compress="none", last_k=2,
+                ranks=(4, 4, 4, 4)) -> ConvNetConfig:
+    """MCUNet-style separable-conv net (stem + 4 separable stages)."""
+    ls = [ConvLayerSpec(3, 16, 3, 2)]
+    for c_in, c_out, s in ((16, 32, 2), (32, 64, 2), (64, 96, 1), (96, 128, 2)):
+        ls.append(ConvLayerSpec(c_in, c_in, 3, s, depthwise=True))
+        ls.append(ConvLayerSpec(c_in, c_out, 1, 1))
+    return ConvNetConfig("mcunet_mini", tuple(ls), num_classes, 32,
+                         compress, last_k, ranks)
+
+
+def resnet18_mini(num_classes=10, compress="none", last_k=2,
+                  ranks=(4, 4, 4, 4)) -> ConvNetConfig:
+    """ResNet-18 layer sequence (residual adds omitted in the mini variant —
+    the activation-memory behaviour under compression is identical)."""
+    ls = [ConvLayerSpec(3, 64, 3, 1)]
+    for c_in, c_out, s in ((64, 64, 1), (64, 128, 2), (128, 256, 2),
+                           (256, 512, 2)):
+        ls.append(ConvLayerSpec(c_in, c_out, 3, s))
+        ls.append(ConvLayerSpec(c_out, c_out, 3, 1))
+    return ConvNetConfig("resnet18_mini", tuple(ls), num_classes, 32,
+                         compress, last_k, ranks)
+
+
+def _compressed_indices(cfg: ConvNetConfig) -> set[int]:
+    if cfg.compress == "none":
+        return set()
+    idx = [i for i, l in enumerate(cfg.layers) if not l.depthwise]
+    return set(idx[-cfg.last_k:])
+
+
+def init_params(key: Array, cfg: ConvNetConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.layers) + 1)
+    convs = []
+    for k, l in zip(keys[:-1], cfg.layers):
+        c_in_g = 1 if l.depthwise else l.c_in
+        w = initializer(k, (l.c_out, c_in_g, l.ksize, l.ksize), jnp.float32,
+                        scale=(2.0 / (l.ksize * l.ksize * l.c_in)) ** 0.5)
+        convs.append({"w": w, "scale": jnp.ones((l.c_out,)),
+                      "bias": jnp.zeros((l.c_out,))})
+    head_w = initializer(keys[-1], (cfg.layers[-1].c_out, cfg.num_classes),
+                         jnp.float32)
+    return {"convs": convs, "head_w": head_w,
+            "head_b": jnp.zeros((cfg.num_classes,))}
+
+
+def activation_shapes(cfg: ConvNetConfig, batch: int) -> list[tuple]:
+    """Input shape of every conv layer (what would be stored for backward)."""
+    h = w = cfg.input_hw
+    shapes = []
+    for l in cfg.layers:
+        shapes.append((batch, l.c_in, h, w))
+        h = max(h // l.stride, 1)
+        w = max(w // l.stride, 1)
+    return shapes
+
+
+def init_asi_state(key: Array, cfg: ConvNetConfig, batch: int) -> dict:
+    comp = _compressed_indices(cfg)
+    shapes = activation_shapes(cfg, batch)
+    out = {}
+    for i in sorted(comp):
+        key, sub = jax.random.split(key)
+        out[f"conv_{i}"] = TuckerASIState.init(sub, shapes[i], cfg.ranks)
+    return out
+
+
+def forward(params: dict, x: Array, cfg: ConvNetConfig,
+            asi_state: dict | None = None):
+    """x (B, 3, H, W) NCHW.  Returns (logits, new_asi_state)."""
+    comp = _compressed_indices(cfg)
+    new_state: dict = {}
+    frozen_until = min(comp) if (comp and cfg.compress != "none") else None
+    for i, (l, p) in enumerate(zip(cfg.layers, params["convs"])):
+        stride = (l.stride, l.stride)
+        if i in comp and asi_state is not None:
+            ccfg = ConvCompressionCfg(ranks=cfg.ranks, stride=stride,
+                                      padding="SAME")
+            if cfg.compress == "asi":
+                x, ns = asi_conv2d(ccfg, x, p["w"], asi_state[f"conv_{i}"])
+                new_state[f"conv_{i}"] = ns
+            else:
+                x = hosvd_conv2d(ccfg, x, p["w"])
+        elif l.depthwise:
+            x = lax.conv_general_dilated(
+                x, p["w"], stride, "SAME",
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                feature_group_count=l.c_in)
+        else:
+            x = conv2d(x, p["w"], stride=stride, padding="SAME")
+        x = x * p["scale"][None, :, None, None] + p["bias"][None, :, None, None]
+        x = jax.nn.relu(x)
+        if frozen_until is not None and i + 1 == frozen_until:
+            x = jax.lax.stop_gradient(x)         # frozen backbone prefix
+    x = x.mean(axis=(2, 3))
+    logits = x @ params["head_w"] + params["head_b"]
+    return logits, (new_state if asi_state is not None else None)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ConvNetConfig,
+            asi_state: dict | None = None):
+    logits, new_asi = forward(params, batch["images"], cfg, asi_state)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = jnp.mean(lse - picked)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce, ({"ce": ce, "acc": acc}, new_asi)

@@ -1,0 +1,276 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, enc_len, d_model).  The backbone is real:
+bidirectional encoder blocks (LayerNorm + MHA + GELU MLP) and a decoder with
+causal self-attention + cross-attention, learned positions, biases — the
+Whisper block layout.  ASI fine-tuning wraps the decoder-tail linears.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.asi import MatrixASIState
+from repro.models.attention import (attn_decode, attn_forward, attn_init,
+                                    cross_kv, init_kv_cache)
+from repro.models.layers import (embed_init, initializer, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, sinusoidal_positions,
+                                 unembed_init)
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": norm_init(cfg, dtype), "attn": attn_init(k1, cfg, dtype),
+            "norm2": norm_init(cfg, dtype), "mlp": mlp_init(k2, cfg, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg, dtype), "self": attn_init(k1, cfg, dtype),
+        "norm2": norm_init(cfg, dtype), "cross": attn_init(k2, cfg, dtype),
+        "norm3": norm_init(cfg, dtype), "mlp": mlp_init(k3, cfg, dtype),
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt, ko, kp = jax.random.split(key, 5)
+    return {
+        "embed": embed_init(kt, cfg, dtype),
+        "dec_pos": initializer(kp, (4096, cfg.d_model), dtype),
+        "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(ke, cfg.n_enc_layers)),
+        "enc_norm": norm_init(cfg, dtype),
+        "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(kd, cfg.n_layers)),
+        "final_norm": norm_init(cfg, dtype),
+        "unembed": unembed_init(ko, cfg, dtype),
+    }
+
+
+def encode(params: dict, frames: Array, cfg: ModelConfig) -> Array:
+    """frames: precomputed embeddings (B, enc_len, d) — frontend stub."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = logical_shard(x, "batch", None, "embed")
+
+    def block(x, bp):
+        h = norm_apply(bp["norm1"], x, cfg)
+        y, _, _ = attn_forward(bp["attn"], h, cfg, causal=False)
+        x = x + y
+        h = norm_apply(bp["norm2"], x, cfg)
+        y, _ = mlp_apply(bp["mlp"], h, cfg)
+        return x + y, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(block) if cfg.remat != "none" else block,
+                        x, params["encoder"],
+                        unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return norm_apply(params["enc_norm"], x, cfg)
+
+
+def _dec_pos_emb(params, positions, dtype):
+    return params["dec_pos"].astype(dtype)[positions]
+
+
+def decode_train(params: dict, tokens: Array, enc_out: Array,
+                 cfg: ModelConfig, asi_state: dict | None = None):
+    """Teacher-forced decoder over a full target sequence."""
+    B, S = tokens.shape
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = x + _dec_pos_emb(params, jnp.arange(S) % params["dec_pos"].shape[0],
+                         x.dtype)[None]
+    tail = min(cfg.asi_last_k, cfg.n_layers) if cfg.compress != "none" else 0
+    n_prefix = cfg.n_layers - tail
+    new_asi: dict = {}
+
+    def block(x, bp, st=None):
+        ns: dict = {}
+        h = norm_apply(bp["norm1"], x, cfg)
+        y, s1, _ = attn_forward(bp["self"], h, cfg, causal=True,
+                                asi_state=st.get("self") if st else None)
+        if s1:
+            ns["self"] = s1
+        x = x + y
+        h = norm_apply(bp["norm2"], x, cfg)
+        ekv = cross_kv(bp["cross"], enc_out, cfg)
+        y, s2, _ = attn_forward(bp["cross"], h, cfg, causal=False, enc_kv=ekv,
+                                asi_state=st.get("cross") if st else None)
+        if s2:
+            ns["cross"] = s2
+        x = x + y
+        h = norm_apply(bp["norm3"], x, cfg)
+        y, s3 = mlp_apply(bp["mlp"], h, cfg, st.get("mlp") if st else None)
+        if s3:
+            ns["mlp"] = s3
+        return x + y, (ns or None)
+
+    def scan_body(x, bp):
+        x, _ = block(x, bp)
+        return x, None
+
+    body = jax.checkpoint(scan_body) if cfg.remat != "none" else scan_body
+    u = cfg.n_layers if cfg.scan_unroll else 1
+    if tail == 0:
+        x, _ = jax.lax.scan(body, x, params["decoder"], unroll=u)
+    else:
+        if n_prefix > 0:
+            prefix = jax.tree.map(lambda a: a[:n_prefix], params["decoder"])
+            x, _ = jax.lax.scan(body, x, prefix,
+                                unroll=n_prefix if cfg.scan_unroll else 1)
+            x = jax.lax.stop_gradient(x)
+        for i in range(n_prefix, cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["decoder"])
+            st = asi_state.get(f"layer_{i}") if asi_state else None
+            x, ns = block(x, bp, st)
+            if ns is not None:
+                new_asi[f"layer_{i}"] = ns
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logical_shard(logits, "batch", None, "vocab"), (new_asi or None)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            asi_state: dict | None = None):
+    enc_out = encode(params, batch["frames"], cfg)
+    if cfg.compress != "none":
+        enc_out = jax.lax.stop_gradient(enc_out)     # frozen encoder backbone
+    logits, new_asi = decode_train(params, batch["tokens"], enc_out, cfg,
+                                   asi_state)
+    t = batch["targets"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - picked)
+    return ce, ({"ce": ce, "aux": jnp.float32(0.0)}, new_asi)
+
+
+def init_asi_state(key: Array, cfg: ModelConfig) -> dict:
+    if cfg.compress == "none":
+        return {}
+    d, hd, h, f = cfg.d_model, cfg.hd, cfg.n_heads, cfg.d_ff
+    tail = min(cfg.asi_last_k, cfg.n_layers)
+    out = {}
+    for i in range(cfg.n_layers - tail, cfg.n_layers):
+        key, *ks = jax.random.split(key, 12)
+        r = cfg.asi_rank
+        out[f"layer_{i}"] = {
+            "self": {n: MatrixASIState.init(k, d if n != "wo" else h * hd, r)
+                     for n, k in zip(("wq", "wk", "wv", "wo"), ks[:4])},
+            "cross": {n: MatrixASIState.init(k, d if n != "wo" else h * hd, r)
+                      for n, k in zip(("wq", "wo"), ks[4:6])},
+            "mlp": {"up": MatrixASIState.init(ks[6], d, r),
+                    "down": MatrixASIState.init(ks[7], f, r)},
+        }
+    return out
+
+
+def trainable_mask(params: dict, cfg: ModelConfig):
+    if cfg.compress == "none":
+        return jax.tree.map(lambda _: True, params)
+    tail = min(cfg.asi_last_k, cfg.n_layers)
+    L = cfg.n_layers
+
+    def mask_stack(a):
+        m = jnp.zeros((L,), bool).at[L - tail:].set(True)
+        return jnp.broadcast_to(m.reshape((L,) + (1,) * (a.ndim - 1)), a.shape)
+
+    return {
+        "embed": False, "dec_pos": False,
+        "encoder": jax.tree.map(lambda _: False, params["encoder"]),
+        "enc_norm": jax.tree.map(lambda _: False, params["enc_norm"]),
+        "decoder": jax.tree.map(mask_stack, params["decoder"]),
+        "final_norm": jax.tree.map(lambda _: True, params["final_norm"]),
+        "unembed": True,
+    }
+
+
+# --- serving -------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    self_cache = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype),
+        init_kv_cache(cfg, batch, max_len, dtype))
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads,
+                        cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads,
+                        cfg.hd), dtype),
+    }
+    return {"self": self_cache, "cross": cross}
+
+
+def prime_cross_cache(params: dict, enc_out: Array, cfg: ModelConfig) -> dict:
+    def one(bp):
+        k, v = cross_kv(bp["cross"], enc_out, cfg)
+        return {"k": k, "v": v}
+    return jax.lax.map(one, params["decoder"])
+
+
+def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
+            max_len: int):
+    """Encode the audio stub + teacher-force the prompt, returning
+    (last_logits, primed {self, cross} caches)."""
+    B, S = tokens.shape
+    enc_out = encode(params, frames, cfg)
+    cross = prime_cross_cache(params, enc_out, cfg)
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = x + _dec_pos_emb(params, jnp.arange(S) % params["dec_pos"].shape[0],
+                         x.dtype)[None]
+    n = min(S, max_len)
+
+    def block_fn(x, bp):
+        h = norm_apply(bp["norm1"], x, cfg)
+        y, _, (k, v) = attn_forward(bp["self"], h, cfg, causal=True)
+        x = x + y
+        ck = jnp.zeros((B, max_len) + k.shape[2:], k.dtype)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k[:, -n:], 0, 1)
+        cv = jnp.zeros((B, max_len) + v.shape[2:], v.dtype)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, -n:], 0, 1)
+        h = norm_apply(bp["norm2"], x, cfg)
+        ekv = cross_kv(bp["cross"], enc_out, cfg)
+        y, _, _ = attn_forward(bp["cross"], h, cfg, causal=False, enc_kv=ekv)
+        x = x + y
+        h = norm_apply(bp["norm3"], x, cfg)
+        y, _ = mlp_apply(bp["mlp"], h, cfg)
+        return x + y, {"k": ck, "v": cv}
+
+    x, self_cache = jax.lax.scan(block_fn, x, params["decoder"],
+                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = (x[:, -1] @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, {"self": self_cache, "cross": cross}
+
+
+def decode_step(params: dict, cache: dict, token: Array, pos: Array,
+                cfg: ModelConfig):
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]
+    x = x + _dec_pos_emb(params, (pos % params["dec_pos"].shape[0])[None],
+                         x.dtype)[None]
+
+    def block_fn(x, xs):
+        bp, bc = xs
+        h = norm_apply(bp["norm1"], x, cfg)
+        y, new_self = attn_decode(bp["self"], h, bc["self"], pos, cfg)
+        x = x + y
+        h = norm_apply(bp["norm2"], x, cfg)
+        y, _ = attn_decode(bp["cross"], h, bc["cross"], pos, cfg, cross=True)
+        x = x + y
+        h = norm_apply(bp["norm3"], x, cfg)
+        y, _ = mlp_apply(bp["mlp"], h, cfg)
+        return x + y, {"self": new_self, "cross": bc["cross"]}
+
+    x, new_cache = jax.lax.scan(block_fn, x, (params["decoder"], cache),
+                                unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], new_cache

@@ -1,0 +1,131 @@
+"""Shared building blocks: norms, embeddings, rotary embeddings, MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed_linear import (LinearCompressionCfg, asi_linear,
+                                          dense_linear, hosvd_linear)
+from repro.core.asi import MatrixASIState
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+
+
+def initializer(key: Array, shape, dtype, scale: float = 0.02) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
+    if "bias" in params:
+        return layer_norm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rms_norm(x, params["scale"], cfg.norm_eps)
+
+
+def norm_init(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.use_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# --- rotary embeddings --------------------------------------------------------
+
+def rope_tables(positions: Array, head_dim: int, theta: float):
+    """cos/sin tables for given integer positions (any shape)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, hd) with cos/sin (..., S, half) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # cos/sin arrive as (..., S, half); add the head axis when needed
+    c, s = cos, sin
+    if c.ndim == x.ndim - 1:
+        c, s = c[..., None, :], s[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# --- MLP ----------------------------------------------------------------------
+
+def mlp_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if cfg.act == "silu":       # SwiGLU
+        p["gate"] = initializer(k1, (cfg.d_model, cfg.d_ff), dtype)
+        p["up"] = initializer(k2, (cfg.d_model, cfg.d_ff), dtype)
+    else:                        # GELU
+        p["up"] = initializer(k2, (cfg.d_model, cfg.d_ff), dtype)
+        if cfg.use_bias:
+            p["up_b"] = jnp.zeros((cfg.d_ff,), dtype)
+    p["down"] = initializer(k3, (cfg.d_ff, cfg.d_model), dtype)
+    if cfg.use_bias:
+        p["down_b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: Array, cfg: ModelConfig,
+              asi_state: dict | None = None):
+    """Returns (y, new_asi_state).  When ``asi_state`` is given the up/gate/
+    down projections store ASI-compressed activations (paper §3.4)."""
+    new_state = {}
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+
+    def lin(name, inp, w, b=None):
+        if asi_state is not None and name in asi_state:
+            if cfg.compress == "hosvd":     # per-step SVD baseline
+                new_state[name] = asi_state[name]
+                return hosvd_linear(ccfg, inp, w, b)
+            y, ns = asi_linear(ccfg, inp, w, b, asi_state[name])
+            new_state[name] = ns
+            return y
+        return dense_linear(inp, w, b)
+
+    if cfg.act == "silu":
+        g = lin("gate", x, params["gate"])
+        u = lin("up", x, params["up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    else:
+        u = lin("up", x, params["up"], params.get("up_b"))
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(u.dtype)
+    h = logical_shard(h, "batch", None, "mlp")
+    y = lin("down", h, params["down"], params.get("down_b"))
+    return y, (new_state if asi_state is not None else None)
+
+
+def embed_init(key: Array, cfg: ModelConfig, dtype) -> Array:
+    return initializer(key, (cfg.vocab_size, cfg.d_model), dtype, scale=1.0)
+
+
+def unembed_init(key: Array, cfg: ModelConfig, dtype) -> Array:
+    return initializer(key, (cfg.d_model, cfg.vocab_size), dtype)

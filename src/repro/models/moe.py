@@ -1,0 +1,123 @@
+"""Token-choice top-k MoE with capacity-based scatter dispatch.
+
+Dispatch is the Switch/GShard cumsum-position scheme realized with scatter/
+gather (no (T, E, C) one-hot einsum — that tensor is TB-scale at our shapes).
+Experts are einsum-grouped (E, C, d) x (E, d, ff) so the expert dimension
+shards cleanly over the 'model'/'experts' mesh axis (expert parallelism).
+
+ASI integration: in fine-tune mode each expert FFN stores its activation
+slice compressed with a per-expert warm-started factor (GroupedASIState).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed_linear import (GroupedASIState,
+                                          LinearCompressionCfg,
+                                          grouped_asi_linear)
+from repro.models.layers import initializer
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": initializer(k1, (d, e), dtype),
+        "gate": initializer(k2, (e, d, f), dtype),
+        "up": initializer(k3, (e, d, f), dtype),
+        "down": initializer(k4, (e, f, d), dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.experts_per_tok * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)       # round up to a multiple of 8
+
+
+def moe_apply(params: dict, x: Array, cfg: ModelConfig,
+              asi_state: dict | None = None):
+    """x (B, S, d) -> (y, aux_loss, new_asi_state).
+
+    GShard-style grouped dispatch: each batch row is its own dispatch group
+    (capacity positions via a cumsum *within the row*), so scatter/gather
+    indices never cross the batch dim and GSPMD keeps the whole dispatch
+    sharded over the data axes — no all-gather of the token buffer.  The
+    expert dim of the (B, E, C, d) buffer shards over 'model' (EP).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    weights, sel = jax.lax.top_k(probs, k)                       # (B, S, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch):  E * Σ_e f_e · p_e
+    density = jnp.mean(jax.nn.one_hot(sel[..., 0], e, dtype=jnp.float32),
+                       (0, 1))
+    p_mean = probs.mean((0, 1))
+    aux = e * jnp.sum(density * p_mean) * cfg.router_aux_coef
+
+    cap = _capacity(cfg, s)                                      # per row
+    flat_sel = sel.reshape(b, s * k)                             # (B, S·k)
+    oh = jax.nn.one_hot(flat_sel, e, dtype=jnp.int32)            # (B, S·k, E)
+    pos = jnp.cumsum(oh, axis=1) - 1
+    pos_sel = jnp.take_along_axis(pos, flat_sel[..., None], 2)[..., 0]
+    keep = pos_sel < cap                                         # (B, S·k)
+    tok_idx = jnp.repeat(jnp.arange(s), k)                       # (S·k,)
+    w_flat = weights.reshape(b, s * k) * keep
+
+    # dispatch: (B, E, C, d) buffer via per-row scatter (batch stays sharded)
+    src = x[:, tok_idx] * keep[..., None].astype(x.dtype)        # (B, S·k, d)
+    pos_c = jnp.clip(pos_sel, 0, cap - 1)
+
+    def row_scatter(xr, er, pr):
+        return jnp.zeros((e, cap, d), x.dtype).at[er, pr].add(xr)
+
+    buf = jax.vmap(row_scatter)(src, flat_sel, pos_c)            # (B, E, C, d)
+    buf = logical_shard(buf, "batch", "experts", None, None)
+
+    # expert SwiGLU
+    new_state: dict = {}
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+
+    def glin(name, inp, w):
+        if asi_state is not None and name in asi_state:
+            flat = jnp.swapaxes(inp, 0, 1).reshape(e, b * cap, -1)
+            y, ns = grouped_asi_linear(ccfg, flat, w, asi_state[name])
+            new_state[name] = ns
+            return jnp.swapaxes(y.reshape(e, b, cap, -1), 0, 1)
+        return jnp.einsum("becd,edf->becf", inp, w.astype(inp.dtype))
+
+    g = glin("gate", buf, params["gate"])
+    u = glin("up", buf, params["up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u)
+    h = logical_shard(h, "batch", "experts", None, None)
+    out_buf = glin("down", h, params["down"])                    # (B, E, C, d)
+
+    # combine: per-row gather
+    def row_gather(ob, er, pr):
+        return ob[er, pr]                                        # (S·k, d)
+
+    gathered = jax.vmap(row_gather)(out_buf, flat_sel, pos_c)
+    contrib = gathered.astype(jnp.float32) * w_flat[..., None]
+    y = contrib.reshape(b, s, k, d).sum(axis=2).astype(x.dtype)
+    return y, aux, (new_state if asi_state is not None else None)
+
+
+def moe_asi_state_init(key: Array, cfg: ModelConfig, n_tokens: int,
+                       dtype=jnp.float32) -> dict:
+    """Per-expert ASI factors for gate/up (input dim d) and down (input ff)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    e, d, f, r = cfg.n_experts, cfg.d_model, cfg.d_ff, cfg.asi_rank
+    return {
+        "gate": GroupedASIState.init(k1, e, d, r, dtype),
+        "up": GroupedASIState.init(k2, e, d, r, dtype),
+        "down": GroupedASIState.init(k3, e, f, r, dtype),
+    }

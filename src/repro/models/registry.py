@@ -1,0 +1,46 @@
+"""Uniform model API over the families, consumed by the launcher/dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Array], dict]
+    loss: Callable                    # (params, batch, asi_state=None)
+    init_asi: Callable[[Array], dict]
+    trainable_mask: Callable[[dict], Any]
+    decode_step: Callable             # (params, cache, token, pos)
+    init_cache: Callable[[int, int], dict]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b, s=None: encdec.loss_fn(p, b, cfg, s),
+            init_asi=lambda key: encdec.init_asi_state(key, cfg),
+            trainable_mask=lambda p: encdec.trainable_mask(p, cfg),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
+            init_cache=lambda b, n: encdec.init_cache(cfg, b, n),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        loss=lambda p, b, s=None: transformer.loss_fn(p, b, cfg, s),
+        init_asi=lambda key: transformer.init_asi_state(key, cfg),
+        trainable_mask=lambda p: transformer.trainable_mask(p, cfg),
+        decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
+        init_cache=lambda b, n: transformer.init_cache(cfg, b, n),
+    )

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu 2024): sequential
+scan over chunks carrying the (B, H, P, N) state; within a chunk everything is
+matmuls (quadratic in the chunk length only), which is the TPU/MXU-friendly
+formulation and exactly the structure of the Pallas kernel in
+``repro/kernels/ssd_scan.py``.  Decode is the O(1) state recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import initializer, rms_norm
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+
+
+def mamba_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, din, h, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state
+    conv_ch = din + 2 * n                       # x, B, C share the causal conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * din + 2 * n + h             # z, x, B, C, dt
+    return {
+        "in_proj": initializer(k1, (d, d_in_proj), dtype),
+        "conv_w": initializer(k2, (cfg.ssm_conv_width, conv_ch), dtype, 0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),              # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": initializer(k4, (din, d), dtype),
+    }
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv over (B, S, C); state = last width-1 inputs."""
+    width = w.shape[0]
+    w = w.astype(xbc.dtype)
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # (B, S+w-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(width)) \
+        + b.astype(xbc.dtype)
+    new_state = xp[:, -(width - 1):]
+    return out, new_state
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b: Array, c: Array,
+                chunk: int, h0: Array | None = None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H), a (H,) negative, b/c (B,S,N)  [single group].
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:          # largest divisor of S <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+    xc, dtc, bc, cc = (jnp.moveaxis(t, 1, 0) for t in (xc, dtc, bc, cc))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def chunk_step(hstate, xs):
+        xq, dtq, bq, cq = xs                    # (B,chunk,H,P) etc.
+        da = dtq * a                            # (B,chunk,H)  log-decay per step
+        seg = jnp.cumsum(da, axis=1)            # within-chunk cumulative decay
+        # intra-chunk:  y_q = Σ_{j<=q} (C_q·B_j) exp(seg_q - seg_j) dt_j x_j
+        att = jnp.einsum("bqn,bjn->bqj", cq, bq,
+                         preferred_element_type=jnp.float32)
+        decay = seg[:, :, None, :] - seg[:, None, :, :]       # (B,q,j,H)
+        mask = jnp.tril(jnp.ones((xq.shape[1], xq.shape[1]), bool))
+        l = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        w = att[..., None] * l * dtq[:, None, :, :]           # (B,q,j,H)
+        y_intra = jnp.einsum("bqjh,bjhp->bqhp", w,
+                             xq.astype(jnp.float32))
+        # inter-chunk:  y += C_q · h_in · exp(seg_q)
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", cq.astype(jnp.float32),
+                             hstate, jnp.exp(seg))
+        # state update:  h_out = exp(Σ da) h_in + Σ_j exp(seg_end - seg_j) dt_j B_j x_jᵀ
+        dec_end = jnp.exp(seg[:, -1:, :] - seg)               # (B,chunk,H)
+        contrib = jnp.einsum("bjh,bjn,bjhp->bhpn",
+                             dec_end * dtq, bq.astype(jnp.float32),
+                             xq.astype(jnp.float32))
+        h_out = hstate * jnp.exp(seg[:, -1])[:, :, None, None] + contrib
+        return h_out, (y_intra + y_inter).astype(x.dtype)
+
+    h_final, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, P)
+    return y, h_final
+
+
+def mamba_forward(params: dict, u: Array, cfg: ModelConfig,
+                  state: dict | None = None, asi_state: dict | None = None):
+    """Full-sequence Mamba2 block.  u (B,S,d).
+
+    Returns (y, new_state, new_asi_state).  ASI wraps the in/out projections
+    (the SSD scan itself keeps O(1) state, not per-token activations — see
+    DESIGN.md §Arch-applicability)."""
+    from repro.core.compressed_linear import (LinearCompressionCfg,
+                                              asi_linear)
+    B, S, d = u.shape
+    din, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    new_asi: dict = {}
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    if asi_state is not None and "in_proj" in asi_state:
+        zxbcdt, ns = asi_linear(ccfg, u, params["in_proj"], None,
+                                asi_state["in_proj"])
+        new_asi["in_proj"] = ns
+    else:
+        zxbcdt = u @ params["in_proj"].astype(u.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(u.dtype)
+    x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+    x = x.reshape(B, S, h, p)
+    x = logical_shard(x, "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    h0 = state["ssm"] if state is not None else None
+    y, h_final = ssd_chunked(x, dt, a, b, c, cfg.ssm_chunk, h0)
+    y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, din).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    if asi_state is not None and "out_proj" in asi_state:
+        out, ns = asi_linear(ccfg, y, params["out_proj"], None,
+                             asi_state["out_proj"])
+        new_asi["out_proj"] = ns
+    else:
+        out = y @ params["out_proj"].astype(y.dtype)
+    new_state = {"ssm": h_final, "conv": new_conv}
+    return out, new_state, (new_asi or None)
+
+
+def mamba_decode(params: dict, u: Array, state: dict, cfg: ModelConfig):
+    """One-token decode.  u (B,1,d); state {'ssm': (B,H,P,N), 'conv': ...}."""
+    B = u.shape[0]
+    din, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = u[:, 0] @ params["in_proj"].astype(u.dtype)                   # (B, ·)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    # conv ring: state['conv'] (B, w-1, C) holds previous inputs
+    w = params["conv_w"]
+    width = w.shape[0]
+    hist = state["conv"]
+    full = jnp.concatenate([hist, xbc[:, None]], axis=1)   # (B, w, C)
+    out = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                     w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(out).astype(u.dtype)
+    new_conv = full[:, 1:]
+    x, b, c = jnp.split(xbc, [din, din + n], axis=-1)
+    x = x.reshape(B, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a)                                   # (B,H)
+    hs = state["ssm"]                                      # (B,H,P,N)
+    contrib = jnp.einsum("bh,bn,bhp->bhpn", dt, b.astype(jnp.float32),
+                         x.astype(jnp.float32))
+    hs = hs * da[:, :, None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), hs)
+    y = y + params["d_skip"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, din).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(y.dtype))[:, None]
+    return out, {"ssm": hs, "conv": new_conv}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    din, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = din + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }

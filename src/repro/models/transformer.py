@@ -1,0 +1,414 @@
+"""Unified decoder-only LM stack covering the dense / MoE / SSM / hybrid
+families with one implementation.
+
+Layers are grouped into *periods* (jamba: 8 sublayers = 1 attention + 7 mamba;
+everything else: period 1) and the stack scans over stacked period params —
+HLO stays small regardless of depth, which is what makes the 72-layer 398B
+dry-run compile in minutes on one CPU core.
+
+Paper integration (``cfg.compress == 'asi' | 'hosvd'``): the first
+``n_periods - tail`` periods run under ``stop_gradient`` (frozen backbone, no
+activations stored — on-device fine-tuning regime); the last ``asi_last_k``
+periods are unrolled with ASI-compressed linears whose warm-start factor
+states thread through the step as explicit inputs/outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.asi import MatrixASIState
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (attn_decode, attn_forward, attn_init,
+                                    init_kv_cache)
+from repro.models.layers import (embed_init, mlp_apply, mlp_init, norm_apply,
+                                 norm_init, unembed_init)
+from repro.parallel.sharding import logical_shard
+
+Array = jax.Array
+
+
+# --- layer pattern -----------------------------------------------------------
+
+def period_pattern(cfg: ModelConfig) -> list[tuple[str, str | None]]:
+    """One period of (mixer, ffn) sublayer specs."""
+    if cfg.family in ("dense", "vlm"):
+        return [("attn", "dense")]
+    if cfg.family == "moe":
+        return [("attn", "moe")]
+    if cfg.family == "ssm":
+        return [("mamba", None)]
+    if cfg.family == "hybrid":
+        period = cfg.attn_layer_period
+        out = []
+        for j in range(period):
+            mixer = "attn" if j == 0 else "mamba"
+            ffn = "moe" if (j % cfg.moe_layer_period == 1) else "dense"
+            out.append((mixer, ffn))
+        return out
+    raise ValueError(cfg.family)
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    plen = len(period_pattern(cfg))
+    assert cfg.n_layers % plen == 0, (cfg.n_layers, plen)
+    return cfg.n_layers // plen
+
+
+# --- init ---------------------------------------------------------------------
+
+def _sublayer_init(key: Array, cfg: ModelConfig, spec, dtype) -> dict:
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": norm_init(cfg, dtype)}
+    p["mixer"] = (attn_init(k1, cfg, dtype) if mixer == "attn"
+                  else ssm_lib.mamba_init(k1, cfg, dtype))
+    if ffn:
+        p["norm2"] = norm_init(cfg, dtype)
+        p["ffn"] = (mlp_init(k2, cfg, dtype) if ffn == "dense"
+                    else moe_lib.moe_init(k2, cfg, dtype))
+    return p
+
+
+def _period_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    specs = period_pattern(cfg)
+    keys = jax.random.split(key, len(specs))
+    return {f"sub{j}": _sublayer_init(keys[j], cfg, s, dtype)
+            for j, s in enumerate(specs)}
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    np_ = n_periods(cfg)
+    stack = jax.vmap(lambda k: _period_init(k, cfg, dtype))(
+        jax.random.split(k_stack, np_))
+    params = {
+        "embed": embed_init(k_embed, cfg, dtype),
+        "stack": stack,
+        "final_norm": norm_init(cfg, dtype),
+        "unembed": unembed_init(k_out, cfg, dtype),
+    }
+    return params
+
+
+# --- sublayer application -------------------------------------------------------
+
+def _sublayer_apply(params: dict, x: Array, cfg: ModelConfig, spec,
+                    positions, asi_state: dict | None):
+    mixer, ffn = spec
+    aux = jnp.float32(0.0)
+    new_asi: dict = {}
+    h = norm_apply(params["norm1"], x, cfg)
+    if mixer == "attn":
+        st = asi_state.get("mixer") if asi_state is not None else None
+        y, ns, _ = attn_forward(params["mixer"], h, cfg, positions, st)
+        if ns is not None:
+            new_asi["mixer"] = ns
+    else:
+        st = asi_state.get("mixer") if asi_state is not None else None
+        y, _, ns = ssm_lib.mamba_forward(params["mixer"], h, cfg,
+                                         asi_state=st)
+        if ns is not None:
+            new_asi["mixer"] = ns
+    x = x + y
+    if ffn:
+        h = norm_apply(params["norm2"], x, cfg)
+        st = asi_state.get("ffn") if asi_state is not None else None
+        if ffn == "dense":
+            y, ns = mlp_apply(params["ffn"], h, cfg, st)
+        else:
+            y, aux, ns = moe_lib.moe_apply(params["ffn"], h, cfg, st)
+        if ns is not None:
+            new_asi["ffn"] = ns
+        x = x + y
+    # sequence-parallel TP (hillclimb lever): shard the seq dim over the TP
+    # axis between blocks; GSPMD turns the per-block all-reduce into
+    # reduce-scatter + all-gather (half the wire bytes).  No-op unless the
+    # active rules map 'seq_tp' to a mesh axis.
+    x = logical_shard(x, "batch", "seq_tp", None)
+    return x, aux, (new_asi or None)
+
+
+def _period_apply(params: dict, x: Array, cfg: ModelConfig, positions,
+                  asi_state: dict | None):
+    specs = period_pattern(cfg)
+    total_aux = jnp.float32(0.0)
+    new_asi: dict = {}
+    for j, spec in enumerate(specs):
+        st = asi_state.get(f"sub{j}") if asi_state is not None else None
+        x, aux, ns = _sublayer_apply(params[f"sub{j}"], x, cfg, spec,
+                                     positions, st)
+        total_aux = total_aux + aux
+        if ns is not None:
+            new_asi[f"sub{j}"] = ns
+    return x, total_aux, (new_asi or None)
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat == "offload":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[], names_which_can_be_offloaded=[],
+                offload_src="device", offload_dst="pinned_host"))
+    return jax.checkpoint(f)
+
+
+# --- full forward -----------------------------------------------------------------
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig,
+            asi_state: dict | None = None, prefix_embeds: Array | None = None):
+    """Training/prefill forward.  Returns (logits, aux_loss, new_asi_state)."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if prefix_embeds is not None:                       # VLM: image patches
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = logical_shard(x, "batch", None, "embed")
+    positions = jnp.arange(S)[None, :]
+    np_ = n_periods(cfg)
+    tail = min(cfg.asi_last_k, np_) if cfg.compress != "none" else 0
+
+    total_aux = jnp.float32(0.0)
+    new_asi: dict = {}
+
+    def scan_body(carry, pparams):
+        x, aux = carry
+        x, a, _ = _period_apply(pparams, x, cfg, positions, None)
+        return (x, aux + a), None
+
+    body = _remat(scan_body, cfg)
+
+    unroll = np_ if cfg.scan_unroll else 1
+    if tail == 0:
+        (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), params["stack"],
+                                         unroll=unroll)
+    else:
+        n_prefix = np_ - tail
+        if n_prefix > 0:
+            prefix = jax.tree.map(lambda a: a[:n_prefix], params["stack"])
+            # frozen backbone: no grads flow, no activations stored
+            (x, total_aux), _ = jax.lax.scan(body, (x, total_aux), prefix,
+                                             unroll=n_prefix if cfg.scan_unroll else 1)
+            x = jax.lax.stop_gradient(x)
+            total_aux = jax.lax.stop_gradient(total_aux)
+        for i in range(n_prefix, np_):
+            pparams = jax.tree.map(lambda a: a[i], params["stack"])
+            st = asi_state.get(f"period_{i}") if asi_state else None
+            x, a, ns = _period_apply(pparams, x, cfg, positions, st)
+            total_aux = total_aux + a
+            if ns is not None:
+                new_asi[f"period_{i}"] = ns
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = logical_shard(logits, "batch", None, "vocab")
+    return logits, total_aux, (new_asi or None)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            asi_state: dict | None = None):
+    """Next-token cross-entropy.  batch: {'tokens','targets'} (+ 'embeds')."""
+    logits, aux, new_asi = forward(params, batch["tokens"], cfg, asi_state,
+                                   batch.get("embeds"))
+    targets = batch["targets"]
+    if batch.get("embeds") is not None:                 # drop image positions
+        logits = logits[:, -targets.shape[1]:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - picked)
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux, (metrics, new_asi)
+
+
+# --- ASI state construction ------------------------------------------------------
+
+def init_asi_state(key: Array, cfg: ModelConfig) -> dict:
+    """Warm-start factors for the fine-tuned tail (cfg.asi_last_k periods)."""
+    if cfg.compress == "none":
+        return {}
+    np_ = n_periods(cfg)
+    tail = min(cfg.asi_last_k, np_)
+    specs = period_pattern(cfg)
+    d, hd, h = cfg.d_model, cfg.hd, cfg.n_heads
+    out = {}
+    for i in range(np_ - tail, np_):
+        key, sub = jax.random.split(key)
+        period_state: dict = {}
+        for j, (mixer, ffn) in enumerate(specs):
+            sub, *ks = jax.random.split(sub, 8)
+            st: dict = {}
+            if mixer == "attn":
+                st["mixer"] = {
+                    "wq": MatrixASIState.init(ks[0], d, cfg.asi_rank),
+                    "wk": MatrixASIState.init(ks[1], d, cfg.asi_rank),
+                    "wv": MatrixASIState.init(ks[2], d, cfg.asi_rank),
+                    "wo": MatrixASIState.init(ks[3], h * hd, cfg.asi_rank),
+                }
+            else:       # mamba: compress the in/out projections
+                st["mixer"] = {
+                    "in_proj": MatrixASIState.init(ks[0], d, cfg.asi_rank),
+                    "out_proj": MatrixASIState.init(
+                        ks[1], cfg.ssm_d_inner, cfg.asi_rank),
+                }
+            if ffn == "dense":
+                st["ffn"] = {
+                    "gate": MatrixASIState.init(ks[4], d, cfg.asi_rank),
+                    "up": MatrixASIState.init(ks[5], d, cfg.asi_rank),
+                    "down": MatrixASIState.init(ks[6], cfg.d_ff, cfg.asi_rank),
+                } if cfg.act == "silu" else {
+                    "up": MatrixASIState.init(ks[5], d, cfg.asi_rank),
+                    "down": MatrixASIState.init(ks[6], cfg.d_ff, cfg.asi_rank),
+                }
+            elif ffn == "moe":
+                st["ffn"] = moe_lib.moe_asi_state_init(ks[4], cfg, 0)
+            if st:
+                period_state[f"sub{j}"] = st
+        out[f"period_{i}"] = period_state
+    return out
+
+
+def trainable_mask(params: dict, cfg: ModelConfig):
+    """True where the optimizer should update (fine-tune tail only in
+    compressed mode; everything in full-training mode)."""
+    if cfg.compress == "none":
+        return jax.tree.map(lambda _: True, params)
+    np_ = n_periods(cfg)
+    tail = min(cfg.asi_last_k, np_)
+
+    def mask_stack(a):
+        m = jnp.zeros((np_,), bool).at[np_ - tail:].set(True)
+        return jnp.broadcast_to(m.reshape((np_,) + (1,) * (a.ndim - 1)), a.shape)
+
+    return {
+        "embed": False,
+        "stack": jax.tree.map(mask_stack, params["stack"]),
+        "final_norm": jax.tree.map(lambda _: True, params["final_norm"]),
+        "unembed": True,
+    }
+
+
+# --- decode -----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    specs = period_pattern(cfg)
+    np_ = n_periods(cfg)
+    one = {}
+    for j, (mixer, _) in enumerate(specs):
+        if mixer == "attn":
+            one[f"sub{j}"] = init_kv_cache(cfg, batch, max_len, dtype)
+        else:
+            one[f"sub{j}"] = ssm_lib.init_mamba_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((np_,) + a.shape, a.dtype), one)
+
+
+def _sublayer_decode(params, x, cache, pos, cfg, spec):
+    mixer, ffn = spec
+    h = norm_apply(params["norm1"], x, cfg)
+    if mixer == "attn":
+        y, new_cache = attn_decode(params["mixer"], h, cache, pos, cfg)
+    else:
+        y, new_cache = ssm_lib.mamba_decode(params["mixer"], h, cache, cfg)
+    x = x + y
+    if ffn:
+        h = norm_apply(params["norm2"], x, cfg)
+        if ffn == "dense":
+            y, _ = mlp_apply(params["ffn"], h, cfg)
+        else:
+            y, _, _ = moe_lib.moe_apply(params["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params: dict, cache: dict, token: Array, pos: Array,
+                cfg: ModelConfig):
+    """One decode step.  token (B,) int32; pos scalar.  Returns (logits, cache)."""
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]   # (B,1,d)
+    specs = period_pattern(cfg)
+
+    def period_fn(x, xs):
+        pparams, pcache = xs
+        new_pc = {}
+        for j, spec in enumerate(specs):
+            x, nc = _sublayer_decode(pparams[f"sub{j}"], x, pcache[f"sub{j}"],
+                                     pos, cfg, spec)
+            new_pc[f"sub{j}"] = nc
+        return x, new_pc
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["stack"], cache),
+                                unroll=n_periods(cfg) if cfg.scan_unroll else 1)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = logical_shard(logits, "batch", None, "vocab")
+    return logits[:, 0], new_cache
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int,
+            prefix_embeds: Array | None = None):
+    """Run the prompt through the stack, returning (last_logits, cache).
+
+    Reuses the training forward for activations and projects K/V per layer
+    (exact, cache-capacity ``max_len``; SWA archs keep a ring of window size).
+    """
+    B, S = tokens.shape[0], tokens.shape[1]
+    if prefix_embeds is not None:
+        S = S + prefix_embeds.shape[1]
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(S)[None, :]
+    specs = period_pattern(cfg)
+    cache = init_cache(cfg, B, max_len)
+    s_cache = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+    def period_fn(x, pparams):
+        new_pc = {}
+        for j, (mixer, ffn) in enumerate(specs):
+            sp = pparams[f"sub{j}"]
+            h = norm_apply(sp["norm1"], x, cfg)
+            if mixer == "attn":
+                y, _, (k, v) = attn_forward(sp["mixer"], h, cfg, positions)
+                ck = jnp.zeros((B, s_cache) + k.shape[2:], k.dtype)
+                n = min(S, s_cache)
+                ck = jax.lax.dynamic_update_slice_in_dim(ck, k[:, -n:], 0, 1)
+                cv = jnp.zeros((B, s_cache) + v.shape[2:], v.dtype)
+                cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, -n:], 0, 1)
+                if cfg.sliding_window and S > s_cache:
+                    # ring alignment: token at position p lives in slot p % cache
+                    ck = jnp.roll(ck, S % s_cache, axis=1)
+                    cv = jnp.roll(cv, S % s_cache, axis=1)
+                new_pc[f"sub{j}"] = {"k": ck, "v": cv}
+            else:
+                y, st, _ = ssm_lib.mamba_forward(sp["mixer"], h, cfg)
+                new_pc[f"sub{j}"] = st
+            x = x + y
+            if ffn:
+                h = norm_apply(sp["norm2"], x, cfg)
+                if ffn == "dense":
+                    y, _ = mlp_apply(sp["ffn"], h, cfg)
+                else:
+                    y, _, _ = moe_lib.moe_apply(sp["ffn"], h, cfg)
+                x = x + y
+            x = logical_shard(x, "batch", "seq_tp", None)
+        return x, new_pc
+
+    x, caches = jax.lax.scan(period_fn, x, params["stack"],
+                             unroll=n_periods(cfg) if cfg.scan_unroll else 1)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = (x[:, -1] @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, caches

@@ -1,0 +1,166 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+* ``sgdm``      — SGD + momentum: the paper's fine-tuning setup.
+* ``adamw``     — decoupled weight decay Adam: default pretraining choice.
+* ``adafactor`` — factored second moments: keeps optimizer HBM ~0 for the
+                  398B jamba config (see DESIGN.md §6).
+
+All support a trainable-``mask`` pytree (True = update): frozen params get
+neither updates nor weight decay — required for the paper's frozen-backbone
+fine-tuning so decay cannot erode the pretrained weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params, step, mask)
+
+
+def _masked(new, old, mask):
+    if mask is None:
+        return new
+    return jax.tree.map(
+        lambda n, o, m: jnp.where(m, n, o) if not isinstance(m, bool)
+        else (n if m else o), new, old, mask)
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgdm(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0,
+         clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params, step, mask=None):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        mu = _masked(mu, state["mu"], mask)
+
+        def upd(p, m):
+            d = m + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        new_params = _masked(jax.tree.map(upd, params, mu), params, mask)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"mu": jax.tree.map(z, params), "nu": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step, mask=None):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        mu = _masked(mu, state["mu"], mask)
+        nu = _masked(nu, state["nu"], mask)
+        c1 = 1 - b1 ** t
+        c2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            d = (m / c1) / (jnp.sqrt(v / c2) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        new_params = _masked(jax.tree.map(upd, params, mu, nu), params, mask)
+        return new_params, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              clip_norm: float = 0.0) -> Optimizer:
+    """Factored second moments over the trailing two dims (stacked leading
+    scan dims keep their own factors), RMS-scaled updates (Shazeer&Stern)."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def z(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"f": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step, mask=None):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * f["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * f["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            d = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), nf
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_f = treedef.flatten_up_to(state["f"])
+        outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_f = treedef.unflatten([o[1] for o in outs])
+        new_params = _masked(new_params, params, mask)
+        # keep factored stats only where trainable
+        if mask is not None:
+            new_f = jax.tree.map(
+                lambda nf, of: nf, new_f, state["f"])
+        return new_params, {"f": new_f}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    return {"sgdm": sgdm, "adamw": adamw, "adafactor": adafactor}[name](lr_fn, **kw)

@@ -1,0 +1,110 @@
+"""Beyond-paper: ASI/PowerSGD-style *compressed gradient all-reduce*.
+
+The paper compresses stored activations; at multi-pod scale the analogous
+bottleneck is the DP gradient all-reduce over the slow cross-pod links.  The
+same warm-started single subspace iteration compresses it: instead of
+all-reducing G (d_in x d_out), all-reduce P = G·Q (d_in x r) and
+Q' = Gᵀ·P̂ (d_out x r) — 2r(d_in+d_out)/(d_in·d_out) of the dense bytes,
+with error feedback keeping the optimizer unbiased in the long run
+(Vogels et al. 2019, the paper's own foundation).
+
+Used inside ``shard_map`` over the data axes; measured in EXPERIMENTS.md
+§Perf as the collective-term hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asi import orthonormalize
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PowerSGDState:
+    q: Array        # (d_out, r) warm-start co-factor
+    err: Array      # (d_in, d_out) local error-feedback memory
+
+
+def init_state(key: Array, shape: tuple[int, int], rank: int) -> PowerSGDState:
+    return PowerSGDState(
+        q=jax.random.normal(key, (shape[1], rank), jnp.float32),
+        err=jnp.zeros(shape, jnp.float32),
+    )
+
+
+def compressed_psum(g: Array, state: PowerSGDState, axis_name: str
+                    ) -> tuple[Array, PowerSGDState]:
+    """Mean-reduce a 2-D gradient across ``axis_name`` in rank-r space.
+
+    Wire cost per step: r·(d_in + d_out) floats instead of d_in·d_out.
+    """
+    m = g.astype(jnp.float32) + state.err                 # error feedback
+    n = jax.lax.psum(1, axis_name)
+    p = m @ state.q                                       # (d_in, r)
+    p = jax.lax.psum(p, axis_name)
+    p_hat = orthonormalize(p)
+    q = m.T @ p_hat                                       # (d_out, r)
+    q = jax.lax.psum(q, axis_name) / n
+    g_hat = p_hat @ q.T
+    new_err = m - g_hat
+    return g_hat.astype(g.dtype), PowerSGDState(q=q, err=new_err)
+
+
+def dense_psum(g: Array, axis_name: str) -> Array:
+    return jax.lax.pmean(g, axis_name)
+
+
+def compressed_psum_tree(grads: Any, states: dict[str, PowerSGDState],
+                         axis_name: str):
+    """Compress every >=2-D leaf that has a state (keyed by flat path);
+    small leaves (norms, biases) go dense — their bytes are negligible."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    new_states = {}
+    out = []
+    for path, g in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key in states and g.ndim >= 2:
+            m2 = g.reshape(-1, g.shape[-1])
+            gh, ns = compressed_psum(m2, states[key], axis_name)
+            out.append(gh.reshape(g.shape))
+            new_states[key] = ns
+        else:
+            out.append(dense_psum(g, axis_name))
+    return jax.tree_util.tree_unflatten(treedef, out), new_states
+
+
+def init_states_for(grads_struct: Any, key: Array, rank: int
+                    ) -> dict[str, PowerSGDState]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads_struct)
+    states = {}
+    for path, g in flat:
+        if len(g.shape) >= 2:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            key, sub = jax.random.split(key)
+            d_in = 1
+            for d in g.shape[:-1]:
+                d_in *= d
+            states[name] = init_state(sub, (d_in, g.shape[-1]), rank)
+    return states
+
+
+def wire_bytes_dense(shape, dtype_bytes: int = 4) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * dtype_bytes
+
+
+def wire_bytes_compressed(shape, rank: int, dtype_bytes: int = 4) -> int:
+    d_in = 1
+    for d in shape[:-1]:
+        d_in *= d
+    return (d_in + shape[-1]) * rank * dtype_bytes

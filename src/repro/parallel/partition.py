@@ -1,0 +1,194 @@
+"""Partition rules: map every leaf of params / optimizer state / ASI state /
+KV-caches / batches to a PartitionSpec for the current mesh.
+
+Scheme (Megatron-TP x DP, optional FSDP/ZeRO-3):
+  batch                  -> ('pod','data')        [multi-pod] or 'data'
+  heads / kv / d_ff / vocab / experts -> 'model'
+  weight d_model dim     -> FSDP axes when cfg.fsdp (ZeRO-3)
+  optimizer state        -> mirrors its parameter (ZeRO-1 comes free)
+  KV cache               -> kv-heads on 'model' when divisible, else the
+                            sequence dim (decode softmax over a sharded seq
+                            is handled by GSPMD with a partial-max/sum pair)
+
+All specs pass through ``safe_spec`` so a non-divisible dim degrades to
+replication instead of failing — this is what lets ONE rule set cover all
+40 (arch x shape) cells.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.parallel.sharding import safe_spec
+
+MODEL = "model"
+
+# Layout selector: 'tp' (Megatron TP x DP, default) or 'fsdp' (ZeRO-3: all
+# mesh axes shard batch+weights, no tensor parallelism).  A hillclimb lever —
+# set via set_layout() before building specs (dryrun --layout fsdp).
+LAYOUT = "tp"
+
+
+def set_layout(name: str):
+    global LAYOUT
+    assert name in ("tp", "fsdp")
+    LAYOUT = name
+
+
+def batch_axes(mesh: Mesh):
+    base = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if LAYOUT == "fsdp":
+        base = base + (MODEL,)
+    return base if len(base) > 1 else base[0]
+
+
+def _fsdp(cfg: ModelConfig, mesh: Mesh):
+    return batch_axes(mesh) if (cfg.fsdp or LAYOUT == "fsdp") else None
+
+
+def _strip_model(spec: P) -> P:
+    return P(*[None if ax == MODEL else ax for ax in tuple(spec)])
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _param_rule(name: str, ndim: int, cfg: ModelConfig, mesh: Mesh) -> P:
+    fsdp = _fsdp(cfg, mesh)
+    last = name.split("/")[-1]
+    stacked = name.startswith(("stack", "encoder", "decoder"))
+    lead = (None,) if stacked else ()
+
+    def sp(*axes):
+        axes = lead + axes
+        # pad/truncate to ndim
+        axes = axes + (None,) * (ndim - len(axes))
+        return P(*axes[:ndim])
+
+    if last == "embed":
+        return P(MODEL, fsdp)
+    if last in ("unembed", "head_w"):
+        return P(fsdp, MODEL)
+    if last == "dec_pos":
+        return P(None, None)
+    if last in ("wq", "wk", "wv", "gate", "up", "in_proj"):
+        if "ffn" in name and cfg.n_experts and "router" not in last:
+            # MoE expert weights (L, E, d, f)
+            if cfg.n_experts % mesh.shape[MODEL] == 0:
+                return sp(MODEL, fsdp, None)
+            return sp(None, fsdp, MODEL)
+        return sp(fsdp, MODEL)
+    if last == "down":
+        if "ffn" in name and cfg.n_experts:
+            if cfg.n_experts % mesh.shape[MODEL] == 0:
+                return sp(MODEL, None, fsdp)
+            return sp(None, MODEL, fsdp)
+        return sp(MODEL, fsdp)
+    if last in ("wo", "out_proj"):
+        return sp(MODEL, fsdp)
+    if last == "router":
+        return sp(fsdp, None)
+    if last in ("conv_w", "conv_b"):
+        return sp(None, MODEL) if last == "conv_w" else sp(MODEL)
+    if last in ("a_log", "d_skip", "dt_bias"):
+        return sp(MODEL)
+    # norms, biases, scalars
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg: ModelConfig, params_struct: Any, mesh: Mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_struct)
+    out = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        spec = _param_rule(name, len(leaf.shape), cfg, mesh)
+        if LAYOUT == "fsdp":
+            spec = _strip_model(spec)
+        out.append(safe_spec(leaf.shape, spec, mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_specs(cfg: ModelConfig, opt_struct: Any, mesh: Mesh):
+    """Optimizer state mirrors parameters; adafactor's factored vr/vc drop
+    the corresponding trailing dim of the parameter spec."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_struct)
+    out = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        # strip state prefixes: mu/nu/f + trailing vr/vc/v markers
+        parts = [p for p in name.split("/") if p not in ("mu", "nu", "f")]
+        marker = parts[-1] if parts and parts[-1] in ("vr", "vc", "v") else None
+        core = "/".join(p for p in parts if p not in ("vr", "vc", "v"))
+        base_nd = len(leaf.shape) + (1 if marker in ("vr", "vc") else 0)
+        spec = _param_rule(core, base_nd, cfg, mesh)
+        axes = tuple(spec)
+        if marker == "vr":            # param spec minus last dim
+            axes = axes[:-1]
+        elif marker == "vc":          # param spec minus second-to-last dim
+            axes = axes[:-2] + axes[-1:]
+        spec2 = P(*axes)
+        if LAYOUT == "fsdp":
+            spec2 = _strip_model(spec2)
+        out.append(safe_spec(leaf.shape, spec2, mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def asi_specs(asi_struct: Any, mesh: Mesh):
+    """ASI factors are small (K x r); replicate."""
+    return jax.tree.map(lambda leaf: P(*([None] * len(leaf.shape))),
+                        asi_struct)
+
+
+def batch_specs(cfg: ModelConfig, batch_struct: Any, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def rule(leaf):
+        nd = len(leaf.shape)
+        return safe_spec(leaf.shape, P(ba, *([None] * (nd - 1))), mesh)
+
+    return jax.tree.map(rule, batch_struct)
+
+
+def cache_specs(cfg: ModelConfig, cache_struct: Any, mesh: Mesh):
+    """KV caches (L, B, S, KV, hd) and mamba states (L, B, H, P, N) /
+    (L, B, w, C).  kv-heads on 'model' when divisible, else sequence."""
+    ba = batch_axes(mesh)
+    msize = mesh.shape[MODEL]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    out = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        last = name.split("/")[-1]
+        shape = leaf.shape
+        if last in ("k", "v", "k_scale", "v_scale") and len(shape) == 5:
+            if shape[3] % msize == 0 and shape[4] > 1:    # kv heads
+                spec = P(None, ba, None, MODEL, None)
+            elif last in ("k_scale", "v_scale"):
+                spec = P(None, ba, None,
+                         MODEL if shape[3] % msize == 0 else None, None)
+            else:
+                spec = P(None, ba, MODEL, None, None)     # sequence
+        elif last == "ssm" and len(shape) == 5:
+            spec = P(None, ba, MODEL, None, None)         # SSD heads
+        elif last == "conv" and len(shape) == 4:
+            spec = P(None, ba, None, MODEL)
+        else:
+            spec = P(*([None] * len(shape)))
+        out.append(safe_spec(shape, spec, mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,108 @@
+"""Logical-axis sharding: models annotate tensors with logical names; a
+rules context maps names to mesh axes (t5x/MaxText style), so the same model
+code runs on a laptop (no rules -> no-op) and on a 512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, Optional[str | tuple[str, ...]]]):
+    """Activate a (mesh, logical->mesh-axis) mapping for model tracing."""
+    prev = _current()
+    _STATE.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def resolve(*names: Optional[str]) -> P:
+    ctx = _current()
+    if ctx is None:
+        return P(*[None] * len(names))
+    _, rules = ctx
+    return P(*[rules.get(n) if n else None for n in names])
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+def safe_spec(shape: Sequence[int], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries that do not evenly divide the dim (keeps GSPMD happy
+    and makes rules robust across the 40 arch x shape cells)."""
+    out = []
+    for i, axis in enumerate(spec):
+        if axis is None:
+            out.append(None)
+            continue
+        size = _mesh_axis_size(mesh, axis)
+        out.append(axis if (i < len(shape) and shape[i] % size == 0) else None)
+    return P(*out)
+
+
+def logical_shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without active rules."""
+    ctx = _current()
+    if ctx is None or not hasattr(x, "shape"):
+        return x
+    mesh, _ = ctx
+    spec = safe_spec(x.shape, resolve(*names), mesh)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Canonical rule sets ---------------------------------------------------------
+
+def single_pod_rules() -> dict:
+    return {
+        "batch": "data", "fsdp": "data", "seq": None, "long_seq": "data",
+        "model": "model", "heads": "model", "kv": "model", "mlp": "model",
+        "vocab": "model", "experts": "model", "embed": None, "cache_seq": "model",
+        "seq_tp": None,
+    }
+
+
+def multi_pod_rules() -> dict:
+    return {
+        "batch": ("pod", "data"), "fsdp": ("pod", "data"), "seq": None,
+        "long_seq": "data", "model": "model", "heads": "model", "kv": "model",
+        "mlp": "model", "vocab": "model", "experts": "model", "embed": None,
+        "cache_seq": "model", "seq_tp": None,
+    }
+
+
+def fsdp_rules(multi_pod: bool) -> dict:
+    """ZeRO-3 layout: every mesh axis shards batch/weights; no TP."""
+    ba = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {"batch": ba, "fsdp": ba, "seq": None, "long_seq": "data",
+            "model": None, "heads": None, "kv": None, "mlp": None,
+            "vocab": None, "experts": None, "embed": None,
+            "cache_seq": None, "seq_tp": None}
+
+
+def rules_for(mesh: Mesh, layout: str = "tp") -> dict:
+    if layout == "fsdp":
+        return fsdp_rules("pod" in mesh.axis_names)
+    return multi_pod_rules() if "pod" in mesh.axis_names else single_pod_rules()

@@ -1,0 +1,101 @@
+"""Unit tests for the paper's core: subspace iteration, warm start, storage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asi import (MatrixASIState, TuckerASIState, compression_ratio,
+                            matrix_asi_step, matrix_reconstruct,
+                            matrix_storage_elems, orthonormalize,
+                            tucker_asi_step, tucker_reconstruct,
+                            tucker_storage_elems)
+
+
+def _lowrank_matrix(key, m, k, r, noise=0.01):
+    k1, k2, k3 = jax.random.split(key, 3)
+    u = jax.random.normal(k1, (m, r))
+    v = jax.random.normal(k2, (k, r))
+    return u @ v.T + noise * jax.random.normal(k3, (m, k))
+
+
+def test_orthonormalize_columns():
+    p = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+    q = orthonormalize(p)
+    gram = q.T @ q
+    np.testing.assert_allclose(np.asarray(gram), np.eye(8), atol=1e-5)
+
+
+def test_matrix_asi_converges_to_svd():
+    key = jax.random.PRNGKey(1)
+    x = _lowrank_matrix(key, 128, 48, 6)
+    st = MatrixASIState.init(key, 48, 6)
+    errs = []
+    for _ in range(5):
+        p, q, st = matrix_asi_step(x, st)
+        errs.append(float(jnp.linalg.norm(x - matrix_reconstruct(p, q))
+                          / jnp.linalg.norm(x)))
+    # truncated-SVD optimum for reference
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    opt = float(jnp.linalg.norm(x - (u[:, :6] * s[:6]) @ vt[:6])
+                / jnp.linalg.norm(x))
+    assert errs[-1] <= errs[0] + 1e-6          # iterations do not diverge
+    assert errs[-1] < 2.0 * opt + 1e-3         # close to optimal
+
+
+def test_warm_start_beats_cold_start_on_drifting_stream():
+    """Paper §3.4: under slow activation drift, reusing the previous factors
+    gives a strictly better single-iteration approximation than a fresh
+    random start (this is the +3.87% accuracy mechanism)."""
+    key = jax.random.PRNGKey(2)
+    x = _lowrank_matrix(key, 256, 64, 8, noise=0.02)
+    warm = MatrixASIState.init(jax.random.PRNGKey(3), 64, 8)
+    warm_errs, cold_errs = [], []
+    for t in range(12):
+        key, sub = jax.random.split(key)
+        x = x + 0.01 * jax.random.normal(sub, x.shape)   # slow drift
+        p, q, warm = matrix_asi_step(x, warm)
+        warm_errs.append(float(jnp.linalg.norm(x - matrix_reconstruct(p, q))))
+        cold = MatrixASIState.init(jax.random.fold_in(key, t), 64, 8)
+        pc, qc, _ = matrix_asi_step(x, cold)
+        cold_errs.append(float(jnp.linalg.norm(x - matrix_reconstruct(pc, qc))))
+    assert np.mean(warm_errs[3:]) < np.mean(cold_errs[3:])
+
+
+def test_tucker_asi_recovers_lowrank_tensor():
+    key = jax.random.PRNGKey(4)
+    ranks = (3, 4, 3, 2)
+    core = jax.random.normal(key, ranks)
+    factors = [orthonormalize(jax.random.normal(jax.random.fold_in(key, i),
+                                                (d, r)))
+               for i, (d, r) in enumerate(zip((8, 12, 10, 6), ranks))]
+    a = tucker_reconstruct(core, factors)
+    st = TuckerASIState.init(jax.random.PRNGKey(5), a.shape, ranks)
+    for _ in range(6):
+        c, f, st = tucker_asi_step(a, st)
+    err = float(jnp.linalg.norm(a - tucker_reconstruct(c, f))
+                / jnp.linalg.norm(a))
+    assert err < 1e-3
+
+
+def test_storage_formulas_match_actual_arrays():
+    key = jax.random.PRNGKey(6)
+    a = jax.random.normal(key, (8, 16, 10, 12))
+    ranks = (2, 3, 4, 5)
+    st = TuckerASIState.init(key, a.shape, ranks)
+    core, factors, _ = tucker_asi_step(a, st)
+    actual = core.size + sum(f.size for f in factors)
+    assert actual == tucker_storage_elems(a.shape, ranks)      # paper eq. 5
+    # matrix variant
+    x = jax.random.normal(key, (64, 32))
+    ms = MatrixASIState.init(key, 32, 7)
+    p, q, _ = matrix_asi_step(x, ms)
+    assert p.size + q.size == matrix_storage_elems(64, 32, 7)
+
+
+def test_compression_ratio_eq19():
+    dims, ranks = (128, 32, 28, 28), (1, 1, 1, 1)
+    rc = compression_ratio(dims, ranks)
+    full = int(np.prod(dims))
+    stored = 1 + sum(dims)
+    assert abs(rc - full / stored) < 1e-9
+    assert rc > 100     # the "120x" regime of the paper exists at rank 1

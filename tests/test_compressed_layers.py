@@ -1,0 +1,184 @@
+"""Gradient-correctness tests for the ASI/HOSVD compressed layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asi import MatrixASIState, TuckerASIState, tucker_asi_step
+from repro.core.compressed_conv import (ConvCompressionCfg, asi_conv2d, conv2d,
+                                        hosvd_conv2d)
+from repro.core.compressed_linear import (GroupedASIState,
+                                          LinearCompressionCfg, asi_linear,
+                                          dense_linear, grouped_asi_linear,
+                                          hosvd_linear)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup_linear(m=32, b=4, k=24, n=16):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, m, k))
+    w = jax.random.normal(ks[1], (k, n)) * 0.2
+    bias = jax.random.normal(ks[2], (n,)) * 0.1
+    return x, w, bias
+
+
+def test_asi_linear_dx_exact_any_rank():
+    """Paper eq. 2: activation grads never approximated."""
+    x, w, bias = _setup_linear()
+    for rank in (2, 8, 24):
+        st = MatrixASIState.init(KEY, x.shape[-1], rank)
+        cfg = LinearCompressionCfg(rank=rank)
+
+        def f(x):
+            y, _ = asi_linear(cfg, x, w, bias, st)
+            return jnp.sum(jnp.sin(y))
+
+        def f0(x):
+            return jnp.sum(jnp.sin(dense_linear(x, w, bias)))
+
+        np.testing.assert_allclose(np.asarray(jax.grad(f)(x)),
+                                   np.asarray(jax.grad(f0)(x)), atol=1e-5)
+
+
+def test_asi_linear_dw_exact_at_full_rank():
+    x, w, bias = _setup_linear()
+    k = x.shape[-1]
+    st = MatrixASIState.init(KEY, k, k)           # full rank
+    cfg = LinearCompressionCfg(rank=k)
+
+    def f(w):
+        y, _ = asi_linear(cfg, x, w, bias, st)
+        return jnp.sum(y ** 2)
+
+    def f0(w):
+        return jnp.sum(dense_linear(x, w, bias) ** 2)
+
+    gw = jax.grad(f)(w)
+    gw0 = jax.grad(f0)(w)
+    rel = float(jnp.linalg.norm(gw - gw0) / jnp.linalg.norm(gw0))
+    assert rel < 1e-4
+
+
+def test_asi_linear_dw_error_decreases_with_rank():
+    x, w, bias = _setup_linear()
+    k = x.shape[-1]
+
+    def dw_err(rank):
+        st = MatrixASIState.init(KEY, k, rank)
+        # warm the subspace a couple of iterations (paper's warm start)
+        x2 = x.reshape(-1, k)
+        for _ in range(3):
+            from repro.core.asi import matrix_asi_step
+            _, _, st = matrix_asi_step(x2, st)
+        cfg = LinearCompressionCfg(rank=rank)
+
+        def f(w):
+            y, _ = asi_linear(cfg, x, w, bias, st)
+            return jnp.sum(y ** 2)
+
+        def f0(w):
+            return jnp.sum(dense_linear(x, w, bias) ** 2)
+
+        return float(jnp.linalg.norm(jax.grad(f)(w) - jax.grad(f0)(w)))
+
+    errs = [dw_err(r) for r in (2, 8, 16, 24)]
+    assert errs[-1] < errs[0]
+    assert errs[-1] < 1e-3
+
+
+def test_hosvd_linear_matches_asi_backward_contract():
+    x, w, bias = _setup_linear()
+    cfg = LinearCompressionCfg(rank=x.shape[-1])
+
+    def f(w):
+        return jnp.sum(hosvd_linear(cfg, x, w, bias) ** 2)
+
+    def f0(w):
+        return jnp.sum(dense_linear(x, w, bias) ** 2)
+
+    rel = float(jnp.linalg.norm(jax.grad(f)(w) - jax.grad(f0)(w))
+                / jnp.linalg.norm(jax.grad(f0)(w)))
+    assert rel < 1e-4
+
+
+def test_grouped_asi_linear_per_expert():
+    e, t, k, n, r = 3, 16, 12, 8, 12
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (e, t, k))
+    w = jax.random.normal(ks[1], (e, k, n)) * 0.2
+    st = GroupedASIState.init(KEY, e, k, r)
+    cfg = LinearCompressionCfg(rank=r)
+
+    def f(w):
+        y, _ = grouped_asi_linear(cfg, x, w, st)
+        return jnp.sum(y ** 2)
+
+    def f0(w):
+        return jnp.sum(jnp.einsum("etk,ekn->etn", x, w) ** 2)
+
+    rel = float(jnp.linalg.norm(jax.grad(f)(w) - jax.grad(f0)(w))
+                / jnp.linalg.norm(jax.grad(f0)(w)))
+    assert rel < 1e-4
+
+
+def test_asi_conv_gradients():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (4, 6, 10, 12))
+    w = jax.random.normal(ks[1], (8, 6, 3, 3)) * 0.1
+    ranks = (4, 6, 10, 12)                        # full ranks -> exact
+    ccfg = ConvCompressionCfg(ranks=ranks)
+    st = TuckerASIState.init(KEY, x.shape, ranks)
+    for _ in range(3):
+        _, _, st = tucker_asi_step(x, st)
+
+    def f(x, w):
+        y, _ = asi_conv2d(ccfg, x, w, st)
+        return jnp.sum(y ** 2)
+
+    def f0(x, w):
+        return jnp.sum(conv2d(x, w) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    gx0, gw0 = jax.grad(f0, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx0), atol=1e-4)
+    rel = float(jnp.linalg.norm(gw - gw0) / jnp.linalg.norm(gw0))
+    assert rel < 1e-4
+
+
+def test_hosvd_conv_strided():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (2, 4, 8, 8))
+    w = jax.random.normal(ks[1], (6, 4, 3, 3)) * 0.1
+    ccfg = ConvCompressionCfg(ranks=(2, 4, 8, 8), stride=(2, 2))
+
+    def f(w):
+        return jnp.sum(hosvd_conv2d(ccfg, x, w) ** 2)
+
+    def f0(w):
+        return jnp.sum(conv2d(x, w, stride=(2, 2)) ** 2)
+
+    rel = float(jnp.linalg.norm(jax.grad(f)(w) - jax.grad(f0)(w))
+                / jnp.linalg.norm(jax.grad(f0)(w)))
+    assert rel < 1e-4        # full spatial/batch rank, rank-2 on B: B dim is
+                             # exactly rank<=2 here? no: rank 2 of 2 = full
+
+
+def test_residuals_are_compressed_not_full():
+    """The custom_vjp must save only the factors: differentiate and inspect
+    the jaxpr for any residual of the full activation size."""
+    m, k, n, r = 64, 32, 16, 4
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(KEY, (k, n))
+    st = MatrixASIState.init(KEY, k, r)
+    cfg = LinearCompressionCfg(rank=r)
+
+    def f(w):
+        y, _ = asi_linear(cfg, x, w, None, st)
+        return jnp.sum(y ** 2)
+
+    # vjp residuals: closure of the backward — check P̂/Q shapes exist and no
+    # (m, k) array other than the input x itself is carried.
+    _, vjp = jax.vjp(lambda w: f(w), w)
+    res_shapes = [v.shape for v in jax.tree.leaves(vjp)]
+    assert (m, r) in res_shapes and (k, r) in res_shapes

@@ -1,0 +1,143 @@
+"""Numerical-equivalence tests: chunked attention vs naive, SSD vs sequential
+recurrence, decode vs teacher-forced forward, prefill-then-decode continuity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.models import transformer as tfm
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(1)
+
+
+def _naive_attn(q, k, v, causal, window=0):
+    B, S, KV, G, hd = q.shape
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q, k) / jnp.sqrt(hd)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.moveaxis(jnp.einsum("bkgqc,bckh->bkgqh", p, v), 3, 1)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 8)])
+@pytest.mark.parametrize("chunks", [(16, 16), (8, 32), (64, 64)])
+def test_chunked_attention_matches_naive(causal, window, chunks):
+    ks = jax.random.split(KEY, 3)
+    B, S, KV, G, hd = 2, 64, 2, 3, 16
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    o1 = chunked_attention(q, k, v, causal=causal, window=window,
+                           q_chunk=chunks[0], kv_chunk=chunks[1])
+    o2 = _naive_attn(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-6)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_sequential(chunk):
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 2, 32, 3, 4, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N))
+    c = jax.random.normal(ks[4], (B, S, N))
+
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        da = jnp.exp(dt[:, t] * a)
+        h = h * da[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], b[:, t], x[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", c[:, t], h))
+    y_ref = jnp.stack(ys, 1)
+    y, hf = ssd_chunked(x, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m",
+                                  "jamba-1.5-large-398b",
+                                  "granite-moe-3b-a800m", "h2o-danube-3-4b"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits_full, _, _ = tfm.forward(params, toks, cfg)
+    cache = api.init_cache(B, S)
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i))
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_full[:, t]),
+                                   atol=3e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m"])
+def test_prefill_then_decode_continuity(arch):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    # route A: prefill S tokens, decode token S
+    logits_pre, cache = tfm.prefill(params, toks[:, :S], cfg, max_len=S + 4)
+    lg_a, _ = api.decode_step(params, cache, toks[:, S], jnp.int32(S))
+    # route B: full teacher forcing
+    logits_full, _, _ = tfm.forward(params, toks, cfg)
+    np.testing.assert_allclose(np.asarray(lg_a),
+                               np.asarray(logits_full[:, S]),
+                               atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(logits_pre),
+                               np.asarray(logits_full[:, S - 1]),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_swa_ring_cache_decode():
+    """Decode with a ring cache smaller than the context must equal decode
+    with a full cache restricted to the window."""
+    cfg = get_config("h2o-danube-3-4b").reduced().replace(sliding_window=8)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    B, S = 1, 24
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits_full, _, _ = tfm.forward(params, toks, cfg)   # masked full attn
+    cache = api.init_cache(B, S)                          # ring of size 8
+    step = jax.jit(lambda p, c, t, i: api.decode_step(p, c, t, i))
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, -1]),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_int8_kv_cache_decode():
+    """C3 lever: int8 KV cache decode must track the fp cache closely."""
+    cfg0 = get_config("tinyllama-1.1b").reduced()
+    cfg8 = cfg0.replace(kv_cache_dtype="int8")
+    api0, api8 = build_model(cfg0), build_model(cfg8)
+    params = api0.init(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg0.vocab_size)
+    c0, c8 = api0.init_cache(B, S), api8.init_cache(B, S)
+    assert jax.tree.leaves(c8)[0].dtype == jnp.int8
+    errs = []
+    for t in range(S):
+        l0, c0 = api0.decode_step(params, c0, toks[:, t], jnp.int32(t))
+        l8, c8 = api8.decode_step(params, c8, toks[:, t], jnp.int32(t))
+        errs.append(float(jnp.abs(jax.nn.softmax(l0)
+                                  - jax.nn.softmax(l8)).max()))
+    assert max(errs) < 0.05, max(errs)

@@ -1,0 +1,98 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (per the deliverable-(c) contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (128, 128, 128, 8), (256, 128, 192, 16), (100, 70, 50, 8),
+    (512, 256, 256, 128), (64, 300, 40, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sketch(m, k, n, r, dtype):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.1).astype(dtype)
+    v = jax.random.normal(ks[2], (k, r), jnp.float32).astype(dtype)
+    y, p = ops.matmul_sketch(x, w, v)
+    y0, p0 = ref.matmul_sketch_ref(x, w, v)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y0, np.float32),
+                               atol=tol * k, rtol=tol)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p0),
+                               atol=tol * k, rtol=tol)
+
+
+@pytest.mark.parametrize("bh,sq,skv,d", [
+    (4, 128, 128, 64), (2, 64, 128, 32), (1, 256, 256, 128), (3, 96, 96, 48),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 32)])
+def test_flash_attention(bh, sq, skv, d, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (bh, sq, d))
+    k = jax.random.normal(ks[1], (bh, skv, d))
+    v = jax.random.normal(ks[2], (bh, skv, d))
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            bq=32, bk=32, q_offset=skv - sq)
+    o0 = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o0), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 64, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 64, 64)).astype(dtype)
+    o = ops.flash_attention(q, k, v, causal=True, bq=32, bk=32)
+    o0 = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o0, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("b,h,s,p,n,chunk", [
+    (2, 3, 64, 8, 16, 16), (1, 2, 128, 16, 8, 32), (2, 1, 32, 4, 4, 8),
+])
+def test_ssd_scan(b, h, s, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b * h, s, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b * h, s)))
+    a = -jnp.exp(jax.random.normal(ks[2], (b * h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    y, hf = ops.ssd_scan(x, dt, a, bb, cc, n_heads=h, chunk=chunk)
+    y0, h0 = ref.ssd_ref(x, dt, a, jnp.repeat(bb, h, 0), jnp.repeat(cc, h, 0))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h0),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_scan_matches_model_ssd():
+    """Kernel agrees with the model's chunked-scan implementation too."""
+    from repro.models.ssm import ssd_chunked
+    b, h, s, p, n = 2, 4, 64, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    y_model, h_model = ssd_chunked(x, dt, a, bb, cc, chunk=16)
+    xk = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtk = dt.transpose(0, 2, 1).reshape(b * h, s)
+    ak = jnp.tile(a, b)
+    yk, hk = ops.ssd_scan(xk, dtk, ak, bb, cc, n_heads=h, chunk=16)
+    yk = yk.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(yk),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_model),
+                               np.asarray(hk.reshape(b, h, p, n)),
+                               atol=1e-4, rtol=1e-3)

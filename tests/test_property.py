@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asi import (MatrixASIState, matrix_asi_step,
+                            matrix_storage_elems, orthonormalize,
+                            tucker_storage_elems)
+from repro.core.gradient_filter import patch_pool, pooled_storage_elems
+from repro.launch.roofline import collective_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(m=st.integers(8, 64), k=st.integers(4, 32), r=st.integers(1, 4),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_asi_factors_always_orthonormal_and_sized(m, k, r, seed):
+    r = min(r, k, m)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (m, k))
+    state = MatrixASIState.init(key, k, r)
+    p, q, new = matrix_asi_step(x, state)
+    assert p.shape == (m, r) and q.shape == (k, r)
+    gram = np.asarray(p.T @ p)
+    np.testing.assert_allclose(gram, np.eye(r), atol=1e-3)
+    assert p.size + q.size == matrix_storage_elems(m, k, r)
+    # state round-trips: next step consumes what this step produced
+    p2, q2, _ = matrix_asi_step(x, new)
+    assert np.isfinite(np.asarray(q2)).all()
+
+
+@given(dims=st.tuples(*[st.integers(2, 12)] * 4),
+       ranks=st.tuples(*[st.integers(1, 12)] * 4))
+@settings(**SETTINGS)
+def test_tucker_storage_formula_bounds(dims, ranks):
+    elems = tucker_storage_elems(dims, ranks)
+    full = int(np.prod(dims))
+    assert elems > 0
+    capped = [min(r, d) for r, d in zip(ranks, dims)]
+    if all(c == d for c, d in zip(capped, dims)):
+        assert elems >= full            # full rank never smaller than dense
+    if all(c == 1 for c in capped):
+        assert elems == 1 + sum(dims)   # rank-1 closed form
+
+
+@given(b=st.integers(1, 3), c=st.integers(1, 4), h=st.integers(2, 16),
+       w=st.integers(2, 16), r=st.sampled_from([2, 4]),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_patch_pool_mean_preserved(b, c, h, w, r, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, c, h, w))
+    y = patch_pool(x, r)
+    assert y.size == pooled_storage_elems((b, c, h, w), r)
+    if h % r == 0 and w % r == 0:       # exact mean on full patches
+        np.testing.assert_allclose(float(y.mean()), float(x.mean()),
+                                   atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([8, 16]),
+       future=st.integers(0, 7))
+@settings(**SETTINGS)
+def test_causal_attention_ignores_future(seed, s, future):
+    """Perturbing token t+1.. must not change output at positions <= t."""
+    from repro.models.attention import chunked_attention
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    B, KV, G, hd = 1, 1, 2, 8
+    q = jax.random.normal(ks[0], (B, s, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, s, KV, hd))
+    v = jax.random.normal(ks[2], (B, s, KV, hd))
+    t = s - future - 1
+    o1 = chunked_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+    k2 = k.at[:, t + 1:].add(100.0)
+    v2 = v.at[:, t + 1:].add(-50.0)
+    o2 = chunked_attention(q, k2, v2, causal=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(o1[:, :t + 1]),
+                               np.asarray(o2[:, :t + 1]), atol=1e-5)
+
+
+@given(n=st.integers(1, 6), g=st.integers(2, 8), d1=st.integers(1, 64),
+       d2=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_collective_parser_on_synthetic_hlo(n, g, d1, d2):
+    lines = ["HloModule m"]
+    expected = 0
+    for i in range(n):
+        lines.append(f"  %p.{i} = f32[{d1},{d2}] parameter({i})")
+        lines.append(f"  %all-reduce.{i} = f32[{d1},{d2}] all-reduce(%p.{i}),"
+                     f" replica_groups=[1,{g}]<=[{g}]")
+        expected += d1 * d2 * 4
+    stats = collective_bytes("\n".join(lines))
+    assert stats.total_bytes == expected
+    assert stats.count == n
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_orthonormalize_idempotent(seed):
+    p = jax.random.normal(jax.random.PRNGKey(seed), (32, 4))
+    q1 = orthonormalize(p)
+    q2 = orthonormalize(q1)
+    np.testing.assert_allclose(np.abs(np.asarray(q1.T @ q2)), np.eye(4),
+                               atol=1e-3)

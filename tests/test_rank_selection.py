@@ -1,0 +1,105 @@
+"""Rank-selection tests: perplexity estimation + budget search (paper §3.3)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.rank_selection import (LayerCalibration, apply_selection,
+                                       estimate_perplexity,
+                                       select_ranks_backtracking,
+                                       select_ranks_knapsack)
+
+RNG = np.random.default_rng(0)
+
+
+def _calib_layers(n=4, lowrank=True):
+    layers = []
+    for i in range(n):
+        if lowrank:
+            a = (RNG.normal(size=(48, 5)) @ RNG.normal(size=(5, 32))
+                 ).astype(np.float32).reshape(8, 6, 32)
+            a += 0.05 * RNG.normal(size=a.shape).astype(np.float32)
+        else:
+            a = RNG.normal(size=(8, 6, 32)).astype(np.float32)
+        g = RNG.normal(size=(8, 6, 16)).astype(np.float32)
+        layers.append(LayerCalibration(name=f"l{i}", activation=a, grad_out=g))
+    return layers
+
+
+def test_perplexity_decreases_with_eps():
+    """Paper Fig. 6: higher explained variance -> lower gradient perplexity."""
+    t = estimate_perplexity(_calib_layers(), (0.5, 0.7, 0.9, 0.99))
+    for row in t.perplexity:
+        assert row[0] >= row[-1]
+        assert all(np.diff(row) <= 1e-6)
+
+
+def test_memory_increases_with_eps():
+    t = estimate_perplexity(_calib_layers(), (0.5, 0.7, 0.9, 0.99))
+    for row in t.memory:
+        assert all(np.diff(row) >= 0)
+
+
+def test_backtracking_is_optimal_vs_bruteforce():
+    t = estimate_perplexity(_calib_layers(3), (0.5, 0.7, 0.9, 0.99))
+    budget = float(np.sort(t.memory, axis=1)[:, 2].sum())
+    best = select_ranks_backtracking(t.perplexity, t.memory, budget)
+    # exhaustive check
+    best_p = np.inf
+    for combo in itertools.product(range(4), repeat=3):
+        mem = sum(t.memory[i, j] for i, j in enumerate(combo))
+        if mem <= budget:
+            p = sum(t.perplexity[i, j] for i, j in enumerate(combo))
+            best_p = min(best_p, p)
+    got = sum(t.perplexity[i, j] for i, j in enumerate(best))
+    assert abs(got - best_p) < 1e-9
+
+
+def test_knapsack_feasible_and_near_optimal():
+    t = estimate_perplexity(_calib_layers(4), (0.5, 0.7, 0.9, 0.99))
+    budget = float(np.sort(t.memory, axis=1)[:, 2].sum())
+    bt = select_ranks_backtracking(t.perplexity, t.memory, budget)
+    ks = select_ranks_knapsack(t.perplexity, t.memory, budget)
+    mem_ks = sum(t.memory[i, j] for i, j in enumerate(ks))
+    assert mem_ks <= budget            # quantization is conservative
+    p_bt = sum(t.perplexity[i, j] for i, j in enumerate(bt))
+    p_ks = sum(t.perplexity[i, j] for i, j in enumerate(ks))
+    assert p_ks <= p_bt * 1.25 + 1e-6  # near-optimal under quantization
+
+
+def test_infeasible_budget_raises():
+    t = estimate_perplexity(_calib_layers(2), (0.5, 0.9))
+    with pytest.raises(ValueError):
+        select_ranks_backtracking(t.perplexity, t.memory,
+                                  float(t.memory.min(1).sum()) - 1)
+
+
+def test_apply_selection_structure():
+    t = estimate_perplexity(_calib_layers(2), (0.5, 0.9))
+    budget = float(t.memory[:, 1].sum())
+    sel = apply_selection(t, select_ranks_backtracking(
+        t.perplexity, t.memory, budget))
+    assert set(sel) == {"l0", "l1"}
+    for v in sel.values():
+        assert v["ranks"] and v["memory_elems"] > 0
+
+
+def test_conv_calibration_path():
+    """4-mode HOSVD perplexity on a conv layer (weight_grad_fn route)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compressed_conv import conv2d
+
+    a = RNG.normal(size=(4, 3, 8, 8)).astype(np.float32)
+    g = RNG.normal(size=(4, 5, 8, 8)).astype(np.float32)
+
+    def wgrad(a_, g_):
+        f = lambda w: conv2d(jnp.asarray(a_), w)
+        _, vjp = jax.vjp(f, jnp.zeros((5, 3, 3, 3)))
+        return np.asarray(vjp(jnp.asarray(g_))[0])
+
+    layers = [LayerCalibration(name="c0", activation=a, grad_out=g,
+                               kind="conv", weight_grad_fn=wgrad)]
+    t = estimate_perplexity(layers, (0.5, 0.9))
+    assert t.perplexity[0, 0] >= t.perplexity[0, 1] - 1e-5
+    assert (t.ranks[0, 0, :4] > 0).all()

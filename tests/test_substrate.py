@@ -1,0 +1,202 @@
+"""Substrate tests: optimizers, schedules, checkpointing, data determinism,
+fault-tolerant train loop, serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.configs.registry import get_config
+from repro.data.synthetic import (ImageStream, ImageStreamCfg, LMStream,
+                                  LMStreamCfg)
+from repro.models import build_model
+from repro.optim.optimizers import (adafactor, adamw, clip_by_global_norm,
+                                    global_norm, make_optimizer, sgdm)
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.train_loop import (SimulatedFailure, TrainLoopCfg,
+                                      make_train_step, run)
+from repro.runtime.serve_loop import Engine, Request, ServeCfg
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --- optimizers ----------------------------------------------------------------
+
+def _quadratic_converges(opt, steps=200):
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    for t in range(steps):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params, jnp.int32(t))
+    return float(jnp.abs(params["w"]).max())
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgdm", {}), ("adamw", {}), ("adafactor", {}),
+])
+def test_optimizer_converges_quadratic(name, kw):
+    opt = make_optimizer(name, lambda s: 0.05, **kw)
+    assert _quadratic_converges(opt) < 0.05
+
+
+def test_mask_freezes_params_and_no_decay_leak():
+    opt = adamw(lambda s: 0.1, weight_decay=0.1)
+    params = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    state = opt.init(params)
+    grads = {"a": jnp.ones(3), "b": jnp.ones(3)}
+    mask = {"a": True, "b": False}
+    new, _ = opt.update(grads, state, params, jnp.int32(0), mask)
+    assert bool(jnp.all(new["b"] == 1.0))          # frozen: no update, no decay
+    assert bool(jnp.all(new["a"] != 1.0))
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(lambda s: 0.01)
+    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((32,))}
+    st = opt.init(params)
+    assert st["f"]["w"]["vr"].shape == (64,)
+    assert st["f"]["w"]["vc"].shape == (32,)
+    assert st["f"]["b"]["v"].shape == (32,)
+    # factored state is ~ (64+32)/(64*32) of adam's
+    n_fact = sum(x.size for x in jax.tree.leaves(st))
+    n_adam = 2 * sum(x.size for x in jax.tree.leaves(params))
+    assert n_fact < 0.1 * n_adam
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_warmup_cosine_shape():
+    sch = warmup_cosine(1.0, 10, 100)
+    assert float(sch(0)) == 0.0
+    assert abs(float(sch(10)) - 1.0) < 1e-6
+    assert float(sch(100)) < 1e-6
+    assert float(sch(55)) < float(sch(20))
+
+
+# --- checkpointing ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.ones(3)]}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (10, 20, 30, 40):
+            checkpointer.save(d, step, tree, keep=2)
+        assert checkpointer.latest_step(d) == 40
+        kept = sorted(os.listdir(d))
+        assert kept == ["step_00000030", "step_00000040"]
+        restored, step, meta = checkpointer.restore(d, tree)
+        assert step == 40
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 1, tree)
+        with pytest.raises(ValueError):
+            checkpointer.restore(d, {"a": jnp.zeros((3, 3))})
+
+
+def test_checkpoint_atomicity_no_tmp_left():
+    with tempfile.TemporaryDirectory() as d:
+        checkpointer.save(d, 5, {"x": jnp.ones(3)})
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+# --- data -------------------------------------------------------------------------
+
+def test_lm_stream_deterministic_and_host_sharded():
+    cfg = LMStreamCfg(vocab_size=64, seq_len=16, global_batch=8)
+    a = LMStream(cfg, host_id=0, n_hosts=2)
+    b = LMStream(cfg, host_id=1, n_hosts=2)
+    x1, x2 = a.batch(3), a.batch(3)
+    np.testing.assert_array_equal(np.asarray(x1["tokens"]),
+                                  np.asarray(x2["tokens"]))   # pure in step
+    y = b.batch(3)
+    assert not np.array_equal(np.asarray(x1["tokens"]),
+                              np.asarray(y["tokens"]))        # host disjoint
+    assert x1["tokens"].shape == (4, 16)
+    # targets are next-token shifted
+    np.testing.assert_array_equal(np.asarray(x1["tokens"][:, 1:]),
+                                  np.asarray(x1["targets"][:, :-1]))
+
+
+def test_image_stream_learnable_structure():
+    cfg = ImageStreamCfg(num_classes=4, hw=8, global_batch=16, noise=0.1)
+    s = ImageStream(cfg)
+    b = s.batch(0)
+    assert b["images"].shape == (16, 3, 8, 8)
+    # images of the same class are closer than different classes
+    img, lab = np.asarray(b["images"]), np.asarray(b["labels"])
+    same, diff = [], []
+    for i in range(8):
+        for j in range(i + 1, 8):
+            d = np.linalg.norm(img[i] - img[j])
+            (same if lab[i] == lab[j] else diff).append(d)
+    if same and diff:
+        assert np.mean(same) < np.mean(diff)
+
+
+# --- train loop ---------------------------------------------------------------------
+
+def test_train_loop_restart_resumes_from_checkpoint():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(n_layers=2)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    opt = make_optimizer("adamw", warmup_cosine(3e-3, 2, 40), clip_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                              donate=False)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=4, branching=2))
+    with tempfile.TemporaryDirectory() as d:
+        res = run(step_fn, params, opt_state, {}, data,
+                  TrainLoopCfg(total_steps=40, ckpt_dir=d, ckpt_every=10,
+                               log_every=10, fail_at_step=25))
+        assert res.restarts == 1
+        assert res.step == 40
+        assert res.history[-1]["loss"] < res.history[0]["loss"]
+
+
+def test_train_loop_gives_up_after_max_restarts():
+    class AlwaysFails:
+        def batch(self, step):
+            raise SimulatedFailure("boom")
+    step_fn = lambda *a: a                     # never reached
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(SimulatedFailure):
+            run(step_fn, {}, {}, {}, AlwaysFails(),
+                TrainLoopCfg(total_steps=5, ckpt_dir=d, max_restarts=2,
+                             fail_at_step=-1))
+
+
+# --- serving -----------------------------------------------------------------------
+
+def test_engine_greedy_decode_matches_manual():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(n_layers=2)
+    api = build_model(cfg)
+    params = api.init(KEY)
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=32))
+    reqs = [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4)]
+    done = eng.run(reqs)
+    assert len(done[0].out) == 4
+    # manual single-slot reference
+    cache = api.init_cache(2, 32)
+    toks = [1, 2, 3]
+    logits = None
+    for pos, t in enumerate(toks):
+        vec = jnp.array([t, 0], jnp.int32)
+        logits, cache = api.decode_step(params, cache, vec, jnp.int32(pos))
+    first = int(jnp.argmax(logits[0]))
+    assert done[0].out[0] == first
