@@ -1,0 +1,91 @@
+"""A/B: fused ASI kernel pipeline vs the unfused two-pass formulation.
+
+Two numbers per (fwd, bwd) phase:
+
+* **HBM passes over the streamed operand** — analytic, backend-independent.
+  Unfused, X is read for Y = X·W and again for P = X·V (and g for g_x = g·Wᵀ
+  plus again for R = P̂ᵀ·g); fused, each is read once.  At paper shapes the
+  streamed operand dominates traffic, so pass count is the roofline lever.
+* **wall-clock** — measured through ``repro.kernels.dispatch`` on the active
+  backend.  On TPU this times the compiled Pallas kernels; on CPU it times
+  the jnp reference (the interpreter would only measure Python overhead), so
+  the CPU wall-clock column is a sanity check, not the headline.
+
+Run:  PYTHONPATH=src python -m benchmarks.fused_asi
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+
+# (M tokens, K in-features, N out-features, r sketch rank)
+SHAPES = [
+    (4096, 1024, 1024, 32),       # attention-projection scale
+    (4096, 1024, 4096, 32),       # MLP up-projection scale
+    (16384, 2048, 2048, 32),      # long-batch fine-tune step
+]
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = jax.block_until_ready(fn(*args))          # compile + warm cache
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    del out
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True) -> dict:
+    backend = dispatch.resolve("auto")
+    timed_backend = "auto"
+    # Analytic, by construction of the kernels: unfused streams X twice
+    # (Y = X·W then P = X·V) and g twice (g_x = g·Wᵀ then R = P̂ᵀ·g);
+    # fused streams each exactly once.  Constant 2x, independent of shape.
+    hbm_pass_ratio = 2.0
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for m, k, n, r in SHAPES:
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (m, k), jnp.float32)
+        w = jax.random.normal(ks[1], (k, n)) * 0.05
+        v = jax.random.normal(ks[2], (k, r))
+        g = jax.random.normal(ks[3], (m, n))
+        p_hat = jax.random.normal(ks[2], (m, r))
+
+        # --- wall clock through dispatch ------------------------------------
+        fused_fwd = jax.jit(
+            lambda x, w, v: dispatch.matmul_sketch(x, w, v,
+                                                   backend=timed_backend))
+        unfused_fwd = jax.jit(lambda x, w, v: (x @ w, x @ v))
+        fused_bwd = jax.jit(
+            lambda g, w, p: dispatch.matmul_grad_sketch(g, w, p,
+                                                        backend=timed_backend))
+        unfused_bwd = jax.jit(lambda g, w, p: (g @ w.T, p.T @ g))
+
+        row = {
+            "shape": f"{m}x{k}x{n}r{r}",
+            "fwd_fused_us": _time(fused_fwd, x, w, v),
+            "fwd_unfused_us": _time(unfused_fwd, x, w, v),
+            "bwd_fused_us": _time(fused_bwd, g, w, p_hat),
+            "bwd_unfused_us": _time(unfused_bwd, g, w, p_hat),
+        }
+        rows.append(row)
+        if verbose:
+            print(f"{row['shape']}: fwd {row['fwd_fused_us']:.0f}us fused / "
+                  f"{row['fwd_unfused_us']:.0f}us unfused, "
+                  f"bwd {row['bwd_fused_us']:.0f}us / "
+                  f"{row['bwd_unfused_us']:.0f}us "
+                  f"({hbm_pass_ratio:.0f}x fewer streamed-operand passes)")
+    out = {"backend": backend, "rows": rows,
+           "hbm_pass_ratio": hbm_pass_ratio}
+    if verbose:
+        print(f"active backend: {backend}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

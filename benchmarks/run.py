@@ -17,7 +17,7 @@ def _timed(name, fn, derive):
 
 
 def main() -> None:
-    from benchmarks import (latency_ondevice, table1_imagenet,
+    from benchmarks import (fused_asi, latency_ondevice, table1_imagenet,
                             table4_tinyllama, warm_start)
 
     print("name,us_per_call,derived")
@@ -31,6 +31,9 @@ def main() -> None:
                      f"asi_step_speedup={o['ratios']['asi_step_speedup']:.2f}x")
     _timed("fig3_warmstart", warm_start.run,
            lambda o: f"gerr_warm={o['gerr_warm']:.3f};gerr_cold={o['gerr_cold']:.3f}")
+    _timed("fused_asi", fused_asi.run,
+           lambda o: f"backend={o['backend']};"
+                     f"hbm_pass_ratio={o['hbm_pass_ratio']:.0f}x")
 
 
 if __name__ == "__main__":

@@ -66,6 +66,9 @@ class ModelConfig:
     compress: str = "none"            # none | asi | hosvd
     asi_rank: int = 20
     asi_last_k: int = 2               # fine-tune the last k blocks
+    kernel_backend: str = "auto"      # fused ASI kernels: auto (pallas on TPU,
+                                      # jnp reference elsewhere) | pallas
+                                      # (interpret off-TPU) | reference
 
     @property
     def hd(self) -> int:

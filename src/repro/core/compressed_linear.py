@@ -7,6 +7,12 @@ realized natively in JAX.  The forward output is EXACT (compression only
 changes what is stored); ∂L/∂x is EXACT (eq. 2 needs only W); ∂L/∂W is the
 paper's low-rank estimate  Q·(P̂ᵀ·g)  (eq. 15's matrix analogue).
 
+Both halves route through ``repro.kernels.dispatch``
+(``LinearCompressionCfg.backend``): the forward streams X once through the
+fused Y/P sketch kernel, the backward streams the cotangent g once through the
+dual-accumulator g_x/R kernel — the HBM-traffic story of DESIGN.md §3.  The
+``reference`` backend reproduces the plain-jnp contractions bit-for-bit.
+
 Variants:
   * ``asi_linear``          — warm-started subspace iteration (the paper).
   * ``hosvd_linear``        — fixed-rank truncated-SVD storage (HOSVD_ε
@@ -25,7 +31,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.asi import MatrixASIState, matrix_asi_step, orthonormalize
+from repro.core.asi import MatrixASIState, orthonormalize
+from repro.kernels import dispatch
 
 Array = jax.Array
 
@@ -34,6 +41,7 @@ Array = jax.Array
 class LinearCompressionCfg:
     rank: int
     precision: jax.lax.Precision = jax.lax.Precision.DEFAULT
+    backend: str = "auto"             # kernel dispatch: auto | pallas | reference
 
 
 def _flatten(x: Array) -> Array:
@@ -44,36 +52,45 @@ def _flatten(x: Array) -> Array:
 # ASI linear
 # ---------------------------------------------------------------------------
 
+def _fused_fwd(cfg: LinearCompressionCfg, x: Array, w: Array,
+               b: Array | None, state: MatrixASIState):
+    """Shared fwd: one pass over X yields Y and the warm-started sketch P,
+    then Algorithm 2 finishes with P̂ = orth(P), Q = Xᵀ·P̂ (second pass)."""
+    x2d = _flatten(x)
+    y2d, p = dispatch.matmul_sketch(x2d, w.astype(x.dtype), state.q,
+                                    backend=cfg.backend)
+    p_hat = orthonormalize(p)
+    q = x2d.T @ p_hat
+    y = y2d.reshape(x.shape[:-1] + (w.shape[-1],))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y, p_hat, q
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array, b: Array | None,
                state: MatrixASIState):
     """y = x @ w (+ b);  stores only rank-``cfg.rank`` factors of x for bwd."""
-    y = jnp.tensordot(x, w.astype(x.dtype), axes=((-1,), (0,)))
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    _, _, new_state = matrix_asi_step(_flatten(x), state)
-    return y, new_state
+    y, _, q = _fused_fwd(cfg, x, w, b, state)
+    return y, MatrixASIState(q=q)
 
 
 def _asi_linear_fwd(cfg, x, w, b, state):
-    x2d = _flatten(x)
-    p_hat, q, new_state = matrix_asi_step(x2d, state)
-    y = jnp.tensordot(x, w.astype(x.dtype), axes=((-1,), (0,)))
-    if b is not None:
-        y = y + b.astype(y.dtype)
+    y, p_hat, q = _fused_fwd(cfg, x, w, b, state)
     # Residuals: compressed factors only — X itself is NOT saved.
     res = (p_hat, q, w, x.shape, b is not None)
-    return (y, new_state), res
+    return (y, MatrixASIState(q=q)), res
 
 
 def _asi_linear_bwd(cfg, res, cts):
     g_y, _ = cts                                   # cotangent on new_state unused
     p_hat, q, w, x_shape, has_b = res
     g2d = g_y.reshape(-1, g_y.shape[-1])
-    # ∂L/∂x — exact, uses only W (paper eq. 2).
-    g_x = (g2d @ w.T.astype(g2d.dtype)).reshape(x_shape)
-    # ∂L/∂W — low-rank contraction:  Q · (P̂ᵀ g)   ~ 2Mr(N) + 2Kr(N) FLOPs.
-    g_w = q.astype(g2d.dtype) @ (p_hat.astype(g2d.dtype).T @ g2d)
+    # One pass over g:  exact ∂L/∂x = g·Wᵀ (paper eq. 2) and the rank-r
+    # reduction R = P̂ᵀ·g — then ∂L/∂W = Q·R  ~ 2Mr(N) + 2Kr(N) FLOPs.
+    g_x2d, r = dispatch.matmul_grad_sketch(g2d, w, p_hat, backend=cfg.backend)
+    g_x = g_x2d.reshape(x_shape)
+    g_w = q.astype(g2d.dtype) @ r.astype(g2d.dtype)
     g_b = g2d.sum(axis=0) if has_b else None
     # state is an input we do not differentiate through: zero cotangent.
     g_state = jax.tree.map(jnp.zeros_like, MatrixASIState(q=q))
@@ -134,38 +151,43 @@ class GroupedASIState:
         return GroupedASIState(q=q)
 
 
+def _grouped_fused_fwd(cfg: LinearCompressionCfg, x: Array, w: Array,
+                       state: GroupedASIState):
+    """One pass over each expert's activation slice: fused Y/P sketch, then
+    per-expert orth + co-factor (vmapped Algorithm 2)."""
+    y, p = dispatch.grouped_matmul_sketch(x, w.astype(x.dtype), state.q,
+                                          backend=cfg.backend)
+
+    def finish(xe, pe):
+        p_hat = orthonormalize(pe)
+        return p_hat, xe.T @ p_hat
+
+    p_hat, q = jax.vmap(finish)(x, p)
+    return y, p_hat, q
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def grouped_asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array,
                        state: GroupedASIState):
     """x (E, T, K) @ w (E, K, N) -> (E, T, N), ASI per expert."""
-    y = jnp.einsum("etk,ekn->etn", x, w.astype(x.dtype))
-    new_q = _grouped_iterate(x, state.q)
-    return y, GroupedASIState(q=new_q)
-
-
-def _grouped_iterate(x, q_prev):
-    def one(xe, qe):
-        p = orthonormalize(xe @ qe)
-        return xe.T @ p
-    return jax.vmap(one)(x, q_prev)
+    y, _, q = _grouped_fused_fwd(cfg, x, w, state)
+    return y, GroupedASIState(q=q)
 
 
 def _grouped_fwd(cfg, x, w, state):
-    def one(xe, qe):
-        p = orthonormalize(xe @ qe)
-        return p, xe.T @ p
-    p_hat, q = jax.vmap(one)(x, state.q)
-    y = jnp.einsum("etk,ekn->etn", x, w.astype(x.dtype))
+    y, p_hat, q = _grouped_fused_fwd(cfg, x, w, state)
     return (y, GroupedASIState(q=q)), (p_hat, q, w)
 
 
 def _grouped_bwd(cfg, res, cts):
     g_y, _ = cts
     p_hat, q, w = res
-    g_x = jnp.einsum("etn,ekn->etk", g_y, w.astype(g_y.dtype))
-    # per-expert low-rank weight grad: Q_e (K,r) @ (P̂_eᵀ g_e) (r,N)
-    g_w = jnp.einsum("ekr,etr,etn->ekn", q.astype(g_y.dtype),
-                     p_hat.astype(g_y.dtype), g_y)
+    # one pass over each expert's cotangent: exact g_x and R_e = P̂_eᵀ g_e,
+    # then the per-expert low-rank weight grad  Q_e (K,r) @ R_e (r,N).
+    g_x, r = dispatch.grouped_matmul_grad_sketch(g_y, w, p_hat,
+                                                 backend=cfg.backend)
+    g_w = jnp.einsum("ekr,ern->ekn", q.astype(g_y.dtype),
+                     r.astype(g_y.dtype))
     g_state = GroupedASIState(q=jnp.zeros_like(q))
     return g_x, g_w.astype(w.dtype), g_state
 

@@ -1,12 +1,18 @@
-"""Fused forward-matmul + ASI-sketch Pallas TPU kernel.
+"""Fused forward-matmul + ASI-sketch Pallas TPU kernels (fwd and bwd).
 
 ASI's per-step cost on TPU is not FLOPs (the sketch is a tall-skinny matmul,
 cheap on the MXU) but HBM traffic: unfused, X (M, K) is streamed from HBM once
-for Y = X·W and again for P = X·V.  This kernel computes both in ONE pass:
-each (bm, bk) VMEM tile of X feeds the Y-accumulator and, on the n == 0 grid
-column, the P-accumulator.  Arithmetic intensity of the sketch becomes
+for Y = X·W and again for P = X·V.  ``matmul_sketch`` computes both in ONE
+pass: each (bm, bk) VMEM tile of X feeds the Y-accumulator and, on the n == 0
+grid column, the P-accumulator.  Arithmetic intensity of the sketch becomes
 infinite (zero extra HBM reads), which is the TPU-native formulation of the
 paper's Algorithm 2 (see DESIGN.md §3).
+
+``matmul_grad_sketch`` is the backward-pass twin: unfused, the output
+cotangent g (M, N) is streamed once for the exact input gradient
+g_x = g·Wᵀ and again for the rank-r reduction R = P̂ᵀ·g that feeds the
+paper's low-rank weight gradient g_w = Q·R.  Fused, each g tile feeds both
+accumulators, so g crosses the HBM boundary exactly once (DESIGN.md §3).
 
 Blocking: (bm, bn, bk) multiples of 128 keep the 128x128 MXU systolic array
 full; the r (rank) dimension is zero-padded to the lane width by the wrapper.
@@ -100,3 +106,100 @@ def matmul_sketch(x: Array, w: Array, v: Array, *, bm: int = 128,
         interpret=interpret,
     )(x, w, v)
     return y[:m, :n], p[:m, :r]
+
+
+def _grad_kernel(g_ref, w_ref, p_ref, gx_ref, r_ref, acc_ref, *,
+                 nl: int, bn: int):
+    """Dual-accumulator backward: the two products reduce over DIFFERENT dims
+    (g_x over N, R over M), so g_x uses a per-(i, j) tile accumulator reset on
+    the innermost (l over N) axis, while R accumulates directly into its
+    output block — mapped to the SAME (r, N_pad) block on every grid step, so
+    it lives in VMEM for the whole grid and is flushed to HBM exactly once."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...]
+    # g_x tile:  g (bm, bn) · wᵀ (bn, bk)  — contract the shared N dim.
+    acc_ref[...] += jax.lax.dot_general(
+        g, w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _sketch():
+        # R strip column l:  P̂ᵀ (r, bm) · g (bm, bn), accumulated over i.
+        contrib = jax.lax.dot_general(
+            p_ref[...], g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        col = pl.dslice(l * bn, bn)
+
+        @pl.when(i == 0)
+        def _rinit():
+            r_ref[:, col] = contrib
+
+        @pl.when(i > 0)
+        def _racc():
+            r_ref[:, col] += contrib
+
+    @pl.when(l == nl - 1)
+    def _out():
+        gx_ref[...] = acc_ref[...].astype(gx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *, bm: int = 128,
+                       bk: int = 128, bn: int = 128,
+                       interpret: bool = False):
+    """Returns (g_x = g·Wᵀ in g.dtype, R = P̂ᵀ·g in fp32) in one pass over g.
+
+    g (M, N), w (K, N) — note: same layout as the forward weight —
+    p_hat (M, r).  Dims are zero-padded to block multiples; padding
+    contributes exact zeros.  The R accumulator holds a full (r_pad, N_pad)
+    fp32 strip in VMEM (r_pad = 128), so N is bounded per call — callers go
+    through ``dispatch.matmul_grad_sketch``, which falls back to the
+    reference contraction when the strip would not fit (e.g. jamba's
+    d_ff = 24576 down-projection).
+    """
+    m, n = g.shape
+    k = w.shape[0]
+    r = p_hat.shape[1]
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    pr = (-r) % 128 if r % 128 else 0
+    if pm or pn:
+        g = jnp.pad(g, ((0, pm), (0, pn)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    if pm or pr:
+        p_hat = jnp.pad(p_hat, ((0, pm), (0, pr)))
+    mm, nn, kk = g.shape[0], g.shape[1], w.shape[0]
+    rr = p_hat.shape[1]
+    nm, nl = mm // bm, nn // bn
+    grid = (nm, kk // bk, nl)
+
+    gx, rmat = pl.pallas_call(
+        functools.partial(_grad_kernel, nl=nl, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (j, l)),
+            pl.BlockSpec((bm, rr), lambda i, j, l: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
+            pl.BlockSpec((rr, nn), lambda i, j, l: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, kk), g.dtype),
+            jax.ShapeDtypeStruct((rr, nn), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, w, p_hat)
+    return gx[:m, :k], rmat[:r, :n]

@@ -1,0 +1,121 @@
+"""Backend dispatch for the fused ASI kernels.
+
+One flag — ``ModelConfig.kernel_backend`` / ``LinearCompressionCfg.backend``
+(``auto`` | ``pallas`` | ``reference``) — picks the execution mode for every
+fused forward/backward sketch contraction:
+
+* ``auto``       — compiled Pallas on TPU, pure-jnp reference elsewhere (XLA
+                   fuses the jnp formulation well enough on CPU/GPU, and the
+                   interpreter would be orders of magnitude slower).
+* ``pallas``     — force the kernel code path: compiled on TPU,
+                   ``interpret=True`` elsewhere (bit-for-bit the TPU program,
+                   executed by the Pallas interpreter — this is what CI runs).
+* ``reference``  — force the pure-jnp oracles from ``ref.py`` everywhere.
+
+The reference backward uses exactly the same contraction XLA derives for the
+dense layer's ``jax.grad``, so ``asi_linear`` under ``reference`` produces
+bit-identical g_x to an uncompressed layer (tested in
+tests/test_fused_asi_kernels.py).
+
+Kernel modes cast the small side operands (sketch factor V, subspace P̂) to
+the streamed operand's dtype: Mosaic requires matched MXU operand dtypes, and
+the fp32 accumulators make the cast harmless at sketch ranks.  Grouped (MoE
+per-expert) variants ``vmap`` the same kernels — Pallas lifts the expert dim
+into an extra grid dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.asi_sketch import matmul_grad_sketch as _grad_kernel
+from repro.kernels.asi_sketch import matmul_sketch as _fwd_kernel
+
+Array = jax.Array
+
+BACKENDS = ("auto", "pallas", "reference")
+
+# The backward kernel keeps a grid-persistent (128, N_pad) fp32 R strip in
+# VMEM; past this many output features the strip (plus double-buffered input
+# blocks) would not fit the ~16 MB budget, so kernel modes fall back to the
+# reference contraction for that call.  Shapes are static, so the choice is
+# made at trace time, per linear.
+GRAD_SKETCH_MAX_N = 16384
+
+
+def resolve(backend: str = "auto") -> str:
+    """Map the user flag to an execution mode: pallas | interpret | reference.
+
+    Raises early on unknown flags so a config typo fails at trace time, not
+    by silently training on a different code path.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"kernel_backend={backend!r}; expected one of {BACKENDS}")
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "reference":
+        return "reference"
+    if backend == "pallas":
+        return "pallas" if on_tpu else "interpret"
+    return "pallas" if on_tpu else "reference"
+
+
+def matmul_sketch(x: Array, w: Array, v: Array, *, backend: str = "auto",
+                  **kw):
+    """Fused forward:  (Y = X·W in x.dtype, P = X·V in fp32), one pass over X."""
+    mode = resolve(backend)
+    if mode == "reference":
+        # no downcast: x @ v promotes (bf16 x, fp32 v -> fp32 sketch), exactly
+        # the pre-dispatch matrix_asi_step numerics.
+        return ref.matmul_sketch_ref(x, w, v)
+    kw.setdefault("interpret", mode == "interpret")
+    return _fwd_kernel(x, w.astype(x.dtype), v.astype(x.dtype), **kw)
+
+
+def matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *,
+                       backend: str = "auto", **kw):
+    """Fused backward:  (g_x = g·Wᵀ in g.dtype, R = P̂ᵀ·g in fp32), one pass
+    over g.  ``w`` is the forward-layout (K, N) weight."""
+    mode = resolve(backend)
+    w = w.astype(g.dtype)
+    if mode == "reference" or g.shape[-1] > GRAD_SKETCH_MAX_N:
+        # Same contraction (and dtype) jax.grad emits for the dense layer:
+        # bit-identical g_x, plus the fp32 rank-r reduction.
+        g_x = g @ w.T
+        r = jnp.dot(p_hat.astype(g.dtype).T, g,
+                    preferred_element_type=jnp.float32)
+        return g_x, r
+    kw.setdefault("interpret", mode == "interpret")
+    return _grad_kernel(g, w, p_hat.astype(g.dtype), **kw)
+
+
+def grouped_matmul_sketch(x: Array, w: Array, v: Array, *,
+                          backend: str = "auto", **kw):
+    """Per-expert fused forward: x (E, T, K), w (E, K, N), v (E, K, r)."""
+    mode = resolve(backend)
+    if mode == "reference":
+        y = jnp.einsum("etk,ekn->etn", x, w.astype(x.dtype))
+        p = jnp.einsum("etk,ekr->etr", x, v,
+                       preferred_element_type=jnp.float32)
+        return y, p
+    kw.setdefault("interpret", mode == "interpret")
+    return jax.vmap(lambda xe, we, ve: _fwd_kernel(xe, we, ve, **kw))(
+        x, w.astype(x.dtype), v.astype(x.dtype))
+
+
+def grouped_matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *,
+                               backend: str = "auto", **kw):
+    """Per-expert fused backward: g (E, T, N), w (E, K, N), p_hat (E, T, r)."""
+    mode = resolve(backend)
+    w = w.astype(g.dtype)
+    if mode == "reference":
+        g_x = jnp.einsum("etn,ekn->etk", g, w)
+        r = jnp.einsum("etr,etn->ern", p_hat.astype(g.dtype), g,
+                       preferred_element_type=jnp.float32)
+        return g_x, r
+    if g.shape[-1] > GRAD_SKETCH_MAX_N:
+        return grouped_matmul_grad_sketch(g, w, p_hat, backend="reference")
+    kw.setdefault("interpret", mode == "interpret")
+    return jax.vmap(lambda ge, we, pe: _grad_kernel(ge, we, pe, **kw))(
+        g, w, p_hat.astype(g.dtype))

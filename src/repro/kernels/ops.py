@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.asi_sketch import matmul_sketch as _matmul_sketch
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
@@ -21,8 +21,13 @@ def _interpret() -> bool:
 
 
 def matmul_sketch(x: Array, w: Array, v: Array, **kw):
-    kw.setdefault("interpret", _interpret())
-    return _matmul_sketch(x, w, v, **kw)
+    # backend="pallas": compiled on TPU, interpret elsewhere — these wrappers
+    # exist to exercise the kernel code path; policy lives in dispatch.
+    return dispatch.matmul_sketch(x, w, v, backend="pallas", **kw)
+
+
+def matmul_grad_sketch(g: Array, w: Array, p_hat: Array, **kw):
+    return dispatch.matmul_grad_sketch(g, w, p_hat, backend="pallas", **kw)
 
 
 def flash_attention(q: Array, k: Array, v: Array, **kw):

@@ -19,6 +19,16 @@ def matmul_sketch_ref(x: Array, w: Array, v: Array):
     return y.astype(x.dtype), p.astype(jnp.float32)
 
 
+def matmul_grad_sketch_ref(g: Array, w: Array, p_hat: Array):
+    """Fused backward oracle:  g_x = g·Wᵀ,  R = P̂ᵀ·g  (fp32 accumulation).
+
+    ``w`` is (K, N) — the forward weight layout, transposed inside — and the
+    low-rank weight gradient is recovered outside as g_w = Q·R."""
+    g_x = jnp.dot(g, w.T, preferred_element_type=jnp.float32)
+    r = jnp.dot(p_hat.T, g, preferred_element_type=jnp.float32)
+    return g_x.astype(g.dtype), r.astype(jnp.float32)
+
+
 def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                   window: int = 0) -> Array:
     """Naive attention.  q (BH, Sq, d), k/v (BH, Skv, d)."""

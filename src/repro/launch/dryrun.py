@@ -255,7 +255,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         mem["error"] = str(e)
     cost = {}
     try:
-        cost = dict(compiled.cost_analysis() or {})
+        cost = flops_model.cost_analysis_dict(compiled)
     except Exception as e:                                  # noqa: BLE001
         cost = {"error": str(e)}
     hlo = compiled.as_text()

@@ -20,6 +20,19 @@ from repro.configs.base import ModelConfig, ShapeCfg
 from repro.models.transformer import period_pattern as _tfm_period_pattern
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX releases.
+
+    Older JAX returns one properties dict; current JAX returns a list with
+    one dict per device program (entry computation first).  Either way the
+    caller wants a plain dict — empty when analysis is unavailable.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def period_pattern(cfg: ModelConfig):
     if cfg.family == "encdec":
         return [("attn", "dense")]        # decoder block pattern

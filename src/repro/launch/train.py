@@ -66,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--compress", default="none",
                     choices=("none", "asi", "hosvd"))
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=("auto", "pallas", "reference"),
+                    help="fused ASI kernel dispatch (see repro.kernels.dispatch)")
     ap.add_argument("--asi-rank", type=int, default=None)
     ap.add_argument("--asi-last-k", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -78,7 +81,8 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    overrides = {"compress": args.compress}
+    overrides = {"compress": args.compress,
+                 "kernel_backend": args.kernel_backend}
     if args.asi_rank is not None:
         overrides["asi_rank"] = args.asi_rank
     if args.asi_last_k is not None:
@@ -96,7 +100,8 @@ def main(argv=None):
         clip_norm=2.0)                      # paper: L2 clip threshold 2.0
     opt_state = opt.init(params)
     step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
-                              trainable_mask=mask)
+                              trainable_mask=mask,
+                              kernel_backend=cfg.kernel_backend)
     data = build_data(cfg, args.seq_len, args.batch, args.seed)
     loop_cfg = TrainLoopCfg(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                             ckpt_every=args.ckpt_every,

@@ -39,7 +39,7 @@ def attn_init(key: Array, cfg: ModelConfig, dtype) -> dict:
 
 
 def _project(params, x, cfg, asi_state, new_state, names=("wq", "wk", "wv")):
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
     outs = []
     for n in names:
         b = params.get("b" + n[1])
@@ -161,7 +161,7 @@ def attn_forward(params: dict, x: Array, cfg: ModelConfig,
     o = chunked_attention(q, k, v, causal=causal, window=cfg.sliding_window,
                           q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
     o = o.reshape(B, S, h * hd)
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
     if asi_state is not None and "wo" in asi_state:
         if cfg.compress == "hosvd":
             y = hosvd_linear(ccfg, o, params["wo"], params.get("bo"))

@@ -99,7 +99,7 @@ def mlp_apply(params: dict, x: Array, cfg: ModelConfig,
     """Returns (y, new_asi_state).  When ``asi_state`` is given the up/gate/
     down projections store ASI-compressed activations (paper §3.4)."""
     new_state = {}
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
 
     def lin(name, inp, w, b=None):
         if asi_state is not None and name in asi_state:

@@ -85,7 +85,7 @@ def moe_apply(params: dict, x: Array, cfg: ModelConfig,
 
     # expert SwiGLU
     new_state: dict = {}
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
 
     def glin(name, inp, w):
         if asi_state is not None and name in asi_state:

@@ -113,7 +113,7 @@ def mamba_forward(params: dict, u: Array, cfg: ModelConfig,
     B, S, d = u.shape
     din, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
     new_asi: dict = {}
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
     if asi_state is not None and "in_proj" in asi_state:
         zxbcdt, ns = asi_linear(ccfg, u, params["in_proj"], None,
                                 asi_state["in_proj"])

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.asi import MatrixASIState
+from repro.kernels import dispatch
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.attention import (attn_decode, attn_forward, attn_init,
@@ -170,6 +171,10 @@ def _remat(f, cfg: ModelConfig):
 def forward(params: dict, tokens: Array, cfg: ModelConfig,
             asi_state: dict | None = None, prefix_embeds: Array | None = None):
     """Training/prefill forward.  Returns (logits, aux_loss, new_asi_state)."""
+    # Fail fast on kernel_backend typos at trace time — every ASI-wrapped
+    # linear below routes through this flag, and an unknown value must not
+    # silently fall back to a different code path mid-training.
+    dispatch.resolve(cfg.kernel_backend)
     x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
     if prefix_embeds is not None:                       # VLM: image patches
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)

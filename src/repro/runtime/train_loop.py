@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import checkpointer
+from repro.kernels import dispatch
 from repro.optim.optimizers import Optimizer
 
 Array = jax.Array
@@ -46,8 +47,16 @@ class TrainLoopCfg:
 
 
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
-                    trainable_mask=None, donate: bool = True):
-    """loss_fn(params, batch, asi_state) -> (loss, (metrics, new_asi_state))."""
+                    trainable_mask=None, donate: bool = True,
+                    kernel_backend: str | None = None):
+    """loss_fn(params, batch, asi_state) -> (loss, (metrics, new_asi_state)).
+
+    ``kernel_backend`` is the model's fused-ASI dispatch flag; passing it here
+    resolves it once up front, so an invalid flag aborts before the first
+    (expensive) compile instead of deep inside the traced step.
+    """
+    if kernel_backend is not None:
+        dispatch.resolve(kernel_backend)
 
     def train_step(params, opt_state, asi_state, batch, step):
         (loss, (metrics, new_asi)), grads = jax.value_and_grad(

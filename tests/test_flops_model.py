@@ -20,7 +20,8 @@ def _cost_flops(cfg, b, s):
     def fwd_loss(p, bt):
         return api.loss(p, bt)[0]
 
-    c = jax.jit(fwd_loss).lower(params, batch).compile().cost_analysis()
+    compiled = jax.jit(fwd_loss).lower(params, batch).compile()
+    c = flops_model.cost_analysis_dict(compiled)
     return float(c.get("flops", 0.0))
 
 

@@ -1,0 +1,243 @@
+"""Parity + gradient-semantics tests for the fused ASI kernel pipeline.
+
+Three layers of guarantees:
+
+1. Kernel parity — ``matmul_sketch`` (fwd) and ``matmul_grad_sketch`` (bwd)
+   in interpret mode match the pure-jnp oracles across shapes that are and
+   are not multiples of the 128-lane blocking, in fp32 and bf16.
+2. Dispatch policy — the backend flag resolves as documented on this host
+   and rejects typos at call time.
+3. Gradient semantics — ``asi_linear`` routed through dispatch produces
+   bit-identical g_x to ``jax.grad`` of the dense layer (reference backend)
+   and the paper's Q·(P̂ᵀg) weight gradient on every backend, so the
+   custom_vjp rewiring cannot silently change training math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asi import MatrixASIState, orthonormalize
+from repro.core.compressed_linear import (GroupedASIState,
+                                          LinearCompressionCfg, asi_linear,
+                                          dense_linear, grouped_asi_linear)
+from repro.kernels import dispatch, ops, ref
+
+KEY = jax.random.PRNGKey(11)
+
+# shapes that exercise both the aligned fast path and the zero-padding
+# wrappers (M/K/N multiples of 128 and deliberately ragged ones)
+SHAPES = [
+    (128, 128, 128, 8),      # exact single block
+    (256, 128, 256, 16),     # multi-block, aligned
+    (100, 70, 50, 8),        # everything ragged
+    (130, 300, 136, 20),     # ragged + multi-block reduction
+    (64, 256, 40, 4),        # tall-K, narrow-N
+]
+TOLS = {jnp.float32: 1e-4, jnp.bfloat16: 5e-2}
+
+
+def _rand(ks, m, k, n, r, dtype):
+    x = jax.random.normal(ks[0], (m, k), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.1).astype(dtype)
+    v = jax.random.normal(ks[2], (k, r), jnp.float32).astype(dtype)
+    return x, w, v
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel parity (interpret mode == the TPU program, run on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,r", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_sketch_parity(m, k, n, r, dtype):
+    x, w, v = _rand(jax.random.split(KEY, 3), m, k, n, r, dtype)
+    y, p = ops.matmul_sketch(x, w, v)
+    y0, p0 = ref.matmul_sketch_ref(x, w, v)
+    tol = TOLS[dtype]
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y0, np.float32),
+                               atol=tol * k, rtol=tol)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p0),
+                               atol=tol * k, rtol=tol)
+
+
+@pytest.mark.parametrize("m,k,n,r", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_backward_grad_sketch_parity(m, k, n, r, dtype):
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], (m, n), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.1).astype(dtype)
+    p_hat = jax.random.normal(ks[2], (m, r), jnp.float32).astype(dtype)
+    gx, rmat = ops.matmul_grad_sketch(g, w, p_hat)
+    gx0, rmat0 = ref.matmul_grad_sketch_ref(g, w, p_hat)
+    tol = TOLS[dtype]
+    np.testing.assert_allclose(np.asarray(gx, np.float32),
+                               np.asarray(gx0, np.float32),
+                               atol=tol * n, rtol=tol)
+    np.testing.assert_allclose(np.asarray(rmat), np.asarray(rmat0),
+                               atol=tol * m, rtol=tol)
+
+
+def test_backward_kernel_zero_padding_exact():
+    """Padding rows/cols must contribute exact zeros: the kernel on ragged
+    inputs must agree BITWISE with the kernel on manually zero-padded aligned
+    inputs (both run the same fp32-accumulating program)."""
+    m, k, n, r = 100, 70, 50, 8
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], (m, n))
+    w = jax.random.normal(ks[1], (k, n))
+    p_hat = jax.random.normal(ks[2], (m, r))
+    gx, rmat = ops.matmul_grad_sketch(g, w, p_hat)
+    assert gx.shape == (m, k) and rmat.shape == (r, n)
+    gp = jnp.pad(g, ((0, 128 - m), (0, 128 - n)))
+    wp = jnp.pad(w, ((0, 128 - k), (0, 128 - n)))
+    pp = jnp.pad(p_hat, ((0, 128 - m), (0, 0)))
+    gx_pad, rmat_pad = ops.matmul_grad_sketch(gp, wp, pp)
+    np.testing.assert_array_equal(np.asarray(gx),
+                                  np.asarray(gx_pad[:m, :k]))
+    np.testing.assert_array_equal(np.asarray(rmat),
+                                  np.asarray(rmat_pad[:, :n]))
+
+
+# ---------------------------------------------------------------------------
+# 2. dispatch policy
+# ---------------------------------------------------------------------------
+
+def test_dispatch_resolution():
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.resolve("reference") == "reference"
+    assert dispatch.resolve("pallas") == ("pallas" if on_tpu else "interpret")
+    assert dispatch.resolve("auto") == ("pallas" if on_tpu else "reference")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        dispatch.resolve("cuda")
+
+
+def test_grad_sketch_large_n_falls_back_to_reference():
+    """Past the VMEM R-strip cap, kernel modes must fall back to the
+    reference contraction at trace time instead of failing to fit."""
+    n = dispatch.GRAD_SKETCH_MAX_N + 128
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], (8, n))
+    w = jax.random.normal(ks[1], (16, n)) * 0.1
+    p_hat = jax.random.normal(ks[2], (8, 4))
+    gx, r = dispatch.matmul_grad_sketch(g, w, p_hat, backend="pallas")
+    gx0, r0 = ref.matmul_grad_sketch_ref(g, w, p_hat)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx0),
+                               atol=1e-4 * n, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r0),
+                               atol=1e-4 * n, rtol=1e-4)
+
+
+def test_dispatch_backends_agree():
+    x, w, v = _rand(jax.random.split(KEY, 3), 96, 80, 72, 8, jnp.float32)
+    y_r, p_r = dispatch.matmul_sketch(x, w, v, backend="reference")
+    y_p, p_p = dispatch.matmul_sketch(x, w, v, backend="pallas")
+    np.testing.assert_allclose(np.asarray(y_r), np.asarray(y_p),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(p_r), np.asarray(p_p),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# 3. gradient semantics through asi_linear / grouped_asi_linear
+# ---------------------------------------------------------------------------
+
+def _asi_grads(backend, x, w, b, state):
+    cfg = LinearCompressionCfg(rank=state.q.shape[-1], backend=backend)
+
+    def loss(x, w, b):
+        y, _ = asi_linear(cfg, x, w, b, state)
+        return jnp.sum(y * y)
+
+    return jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_asi_linear_gx_matches_dense_grad(backend):
+    """g_x is exact (eq. 2): identical contraction to the dense layer's
+    jax.grad — bitwise on the reference backend, fp32-tolerance through the
+    interpret kernel."""
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (4, 33, 72))         # ragged seq on purpose
+    w = jax.random.normal(ks[1], (72, 56)) * 0.05
+    b = jax.random.normal(ks[2], (56,)) * 0.01
+    state = MatrixASIState.init(ks[3], 72, 8)
+
+    def dense_loss(x, w, b):
+        return jnp.sum(dense_linear(x, w, b) ** 2)
+
+    gx_d, _, gb_d = jax.grad(dense_loss, argnums=(0, 1, 2))(x, w, b)
+    gx, _, gb = _asi_grads(backend, x, w, b, state)
+    if backend == "reference":
+        np.testing.assert_array_equal(np.asarray(gx), np.asarray(gx_d))
+    else:
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                                   atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_d), atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_asi_linear_gw_is_low_rank_estimate(backend):
+    """g_w equals the paper's Q·(P̂ᵀg) with (P̂, Q) from Algorithm 2."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (6, 16, 48))
+    w = jax.random.normal(ks[1], (48, 40)) * 0.05
+    state = MatrixASIState.init(ks[2], 48, 8)
+    cfg = LinearCompressionCfg(rank=8, backend=backend)
+
+    def loss(w):
+        y, _ = asi_linear(cfg, x, w, None, state)
+        return jnp.sum(y * y)
+
+    gw = jax.grad(loss)(w)
+    # hand-rolled Algorithm 2 + low-rank contraction, straight-line jnp
+    x2d = x.reshape(-1, 48)
+    p_hat = orthonormalize(
+        jnp.dot(x2d, state.q, preferred_element_type=jnp.float32))
+    q = x2d.T @ p_hat
+    g = 2.0 * (x2d @ w)
+    gw0 = q @ (p_hat.T @ g)
+    tol = 1e-4 if backend == "reference" else 1e-3
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw0),
+                               atol=tol * x2d.shape[0], rtol=tol)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_grouped_asi_linear_backends_consistent(backend):
+    """Per-expert (MoE) path: fused grouped kernels keep the same gradients
+    as the einsum reference formulation."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (3, 24, 32))
+    w = jax.random.normal(ks[1], (3, 32, 28)) * 0.1
+    state = GroupedASIState.init(ks[2], 3, 32, 4)
+    cfg = LinearCompressionCfg(rank=4, backend=backend)
+    ref_cfg = LinearCompressionCfg(rank=4, backend="reference")
+
+    def loss(cfg_, x, w):
+        y, _ = grouped_asi_linear(cfg_, x, w, state)
+        return jnp.sum(y * y)
+
+    gx0, gw0 = jax.grad(lambda x, w: loss(ref_cfg, x, w),
+                        argnums=(0, 1))(x, w)
+    gx, gw = jax.grad(lambda x, w: loss(cfg, x, w), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx0),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw0),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_asi_linear_state_threading_unchanged():
+    """The rewiring must not alter the warm-start contract: new_state.q is
+    Xᵀ·orth(X·Q_prev), ready to seed the next step."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (64, 32))
+    w = jax.random.normal(ks[1], (32, 24)) * 0.1
+    state = MatrixASIState.init(ks[2], 32, 4)
+    cfg = LinearCompressionCfg(rank=4, backend="reference")
+    _, new_state = asi_linear(cfg, x, w, None, state)
+    p_hat = orthonormalize(
+        jnp.dot(x, state.q, preferred_element_type=jnp.float32))
+    np.testing.assert_allclose(np.asarray(new_state.q),
+                               np.asarray(x.T @ p_hat),
+                               atol=1e-5, rtol=1e-5)
