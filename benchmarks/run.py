@@ -17,8 +17,8 @@ def _timed(name, fn, derive):
 
 
 def main() -> None:
-    from benchmarks import (fused_asi, latency_ondevice, table1_imagenet,
-                            table4_tinyllama, warm_start)
+    from benchmarks import (fused_asi, latency_ondevice, serve_throughput,
+                            table1_imagenet, table4_tinyllama, warm_start)
 
     print("name,us_per_call,derived")
     _timed("table1_imagenet", table1_imagenet.run,
@@ -34,6 +34,9 @@ def main() -> None:
     _timed("fused_asi", fused_asi.run,
            lambda o: f"backend={o['backend']};"
                      f"hbm_pass_ratio={o['hbm_pass_ratio']:.0f}x")
+    _timed("serve_throughput", serve_throughput.run,
+           lambda o: f"families_won={o['families_won']}/{len(o['rows'])};"
+                     f"min_speedup={min(r['speedup'] for r in o['rows']):.2f}x")
 
 
 if __name__ == "__main__":

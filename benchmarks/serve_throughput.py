@@ -1,0 +1,98 @@
+"""A/B: continuous-batching Engine vs the legacy SequentialEngine.
+
+For each architecture family (dense GQA, MoE, SSM, hybrid — reduced configs
+so the A/B runs anywhere, including CPU CI boxes) the same request stream is
+served by both engines and we report tokens/s, decode-step counts, and
+time-to-first-token.  The continuous engine advances all ``max_batch`` slots
+per jitted step and prefills whole prompts in one call, so at max_batch=4 it
+needs ~4x fewer device round-trips per generated token; the sequential
+engine decodes one slot at a time with per-token Python prefill.
+
+Also verifies the batch=1 greedy parity invariant (the continuous engine
+must reproduce the sequential engine token-for-token) before timing.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_throughput
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
+                                      ServeCfg)
+
+ARCHS = [
+    ("tinyllama-1.1b", "dense-gqa"),
+    ("moonshot-v1-16b-a3b", "moe"),
+    ("mamba2-130m", "ssm"),
+    ("jamba-1.5-large-398b", "hybrid"),
+]
+
+MAX_BATCH = 4
+MAX_LEN = 64
+MAX_NEW = 16
+N_REQUESTS = 8
+
+
+def _requests(n=N_REQUESTS, max_new=MAX_NEW):
+    # two prompt lengths: bounded prefill compiles, staggered slot positions
+    return [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(4 + i % 2)],
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    for arch, family in ARCHS:
+        cfg = get_config(arch).reduced()
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        scfg = ServeCfg(max_batch=MAX_BATCH, max_len=MAX_LEN)
+
+        # --- parity gate: batch=1 continuous == sequential, greedy --------
+        par = _requests(2, max_new=6)
+        a = Engine(api, params, ServeCfg(max_batch=1, max_len=MAX_LEN)).run(
+            [Request(uid=r.uid, prompt=list(r.prompt), max_new_tokens=6)
+             for r in par])
+        b = SequentialEngine(
+            api, params, ServeCfg(max_batch=1, max_len=MAX_LEN)).run(par)
+        parity = ({r.uid: r.out for r in a} == {r.uid: r.out for r in b})
+
+        # --- timed A/B (engines warmed so compiles don't count) -----------
+        cont = Engine(api, params, scfg)
+        seq = SequentialEngine(api, params, scfg)
+        cont.run(_requests(2, max_new=2))           # warm-up: compile
+        seq.run(_requests(2, max_new=2))
+        cont.run(_requests())
+        c = cont.last_stats
+        seq.run(_requests())
+        s = seq.last_stats
+
+        row = {
+            "arch": arch, "family": family, "parity_batch1": parity,
+            "cont_tok_s": c.tokens_per_s, "seq_tok_s": s.tokens_per_s,
+            "speedup": c.tokens_per_s / s.tokens_per_s if s.tokens_per_s else 0,
+            "cont_steps": c.decode_steps, "seq_steps": s.decode_steps,
+            "cont_ttft_mean_s": c.ttft_mean_s, "seq_ttft_mean_s": s.ttft_mean_s,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"{arch:22s} [{family:9s}] parity={'OK' if parity else 'FAIL'}"
+                  f"  continuous {row['cont_tok_s']:7.1f} tok/s"
+                  f" ({row['cont_steps']} steps)"
+                  f"  sequential {row['seq_tok_s']:7.1f} tok/s"
+                  f" ({row['seq_steps']} steps)"
+                  f"  speedup {row['speedup']:.2f}x")
+    wins = sum(r["speedup"] > 1.0 for r in rows)
+    out = {"max_batch": MAX_BATCH, "rows": rows, "families_won": wins}
+    if verbose:
+        print(f"continuous batching faster on {wins}/{len(rows)} families "
+              f"at max_batch={MAX_BATCH}")
+    return out
+
+
+if __name__ == "__main__":
+    out = run()
+    assert all(r["parity_batch1"] for r in out["rows"]), "batch=1 parity broke"
+    assert out["families_won"] >= 2, (
+        "continuous batching must beat sequential on >= 2 families")

@@ -13,6 +13,7 @@ import json
 import os
 import shutil
 import tempfile
+import time
 from typing import Any
 
 import jax
@@ -42,9 +43,36 @@ def _path_str(p) -> str:
     return str(p)
 
 
+# tmp dirs older than this are considered crash leftovers; younger ones may
+# belong to a concurrent writer (multi-host savers sharing a dir) mid-save
+STALE_TMP_TTL_S = 600.0
+
+
+def _sweep_stale_tmp(directory: str):
+    """Remove orphan ``.tmp_*`` dirs left by a crash between ``mkdtemp`` and
+    the atomic rename (the in-save exception handler never runs on a hard
+    kill).  Age-guarded so another process's in-flight tmp dir survives."""
+    now = time.time()
+    for d in os.listdir(directory):
+        full = os.path.join(directory, d)
+        if not d.startswith(".tmp_"):
+            continue
+        try:
+            # newest of the dir and its entries: the dir mtime alone does
+            # not advance while a writer streams into an existing shard file
+            mtimes = [os.path.getmtime(full)]
+            mtimes += [os.path.getmtime(os.path.join(full, f))
+                       for f in os.listdir(full)]
+        except OSError:
+            continue                      # vanished (e.g. renamed) mid-sweep
+        if now - max(mtimes) > STALE_TMP_TTL_S:
+            shutil.rmtree(full, ignore_errors=True)
+
+
 def save(directory: str, step: int, tree: Any, meta: dict | None = None,
          keep: int = 3) -> str:
     os.makedirs(directory, exist_ok=True)
+    _sweep_stale_tmp(directory)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_")
     try:
@@ -64,6 +92,7 @@ def save(directory: str, step: int, tree: Any, meta: dict | None = None,
 
 
 def _gc(directory: str, keep: int):
+    # stale-tmp sweep happens at the top of save(); _gc only trims steps
     steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

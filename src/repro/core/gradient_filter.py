@@ -18,16 +18,21 @@ Array = jax.Array
 def patch_pool(x: Array, r: int) -> Array:
     """Average-pool an NCHW tensor over non-overlapping r×r patches.
 
-    Pads H/W up to multiples of r (edge replication not needed for the cost
-    model; zero-pad + renormalize keeps the mean exact on full patches).
+    H/W are zero-padded up to multiples of r and each patch sum is divided
+    by the number of *real* elements it covers, so edge patches on ragged
+    shapes get their exact mean (dividing by the full r×r count would bias
+    them low).
     """
     b, c, h, w = x.shape
     ph, pw = (-h) % r, (-w) % r
     if ph or pw:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, ph), (0, pw)))
     hh, ww = (h + ph) // r, (w + pw) // r
-    x = x.reshape(b, c, hh, r, ww, r)
-    return x.mean(axis=(3, 5))
+    sums = x.reshape(b, c, hh, r, ww, r).sum(axis=(3, 5))
+    rows = jnp.minimum(jnp.arange(hh) * r + r, h) - jnp.arange(hh) * r
+    cols = jnp.minimum(jnp.arange(ww) * r + r, w) - jnp.arange(ww) * r
+    counts = (rows[:, None] * cols[None, :]).astype(sums.dtype)
+    return sums / counts
 
 
 def pooled_storage_elems(shape: tuple[int, int, int, int], r: int) -> int:

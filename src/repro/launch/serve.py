@@ -1,7 +1,11 @@
-"""Batched-decode serving launcher (reduced configs run on CPU).
+"""Continuous-batching serving launcher (reduced configs run on CPU).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 6 --max-new 12
+
+``--engine sequential`` selects the legacy one-request-at-a-time loop
+(useful for A/B sanity checks; ``benchmarks/serve_throughput.py`` does the
+systematic comparison).
 """
 from __future__ import annotations
 
@@ -12,20 +16,30 @@ import jax
 
 from repro.configs.registry import ARCHS, get_config
 from repro.models import build_model
-from repro.runtime.serve_loop import Engine, Request, ServeCfg
+from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
+                                      ServeCfg)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the reduced (CPU-sized) config; "
+                         "--no-reduced serves the full architecture")
+    ap.add_argument("--engine", choices=("continuous", "sequential"),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -36,16 +50,26 @@ def main(argv=None):
     api = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = api.init(key)
-    eng = Engine(api, params, ServeCfg(max_batch=args.max_batch,
-                                       max_len=args.max_len,
-                                       temperature=args.temperature),
-                 seed=args.seed)
+    engine_cls = Engine if args.engine == "continuous" else SequentialEngine
+    eng = engine_cls(api, params, ServeCfg(max_batch=args.max_batch,
+                                           max_len=args.max_len,
+                                           temperature=args.temperature),
+                     seed=args.seed)
     reqs = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     done = eng.run(reqs)
     for r in done:
-        print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out}))
+        print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out,
+                          "ttft_s": (None if r.ttft_s is None
+                                     else round(r.ttft_s, 4))}))
+    s = eng.last_stats
+    print(json.dumps({"engine": args.engine, "requests": s.requests,
+                      "generated_tokens": s.generated_tokens,
+                      "decode_steps": s.decode_steps,
+                      "tokens_per_s": round(s.tokens_per_s, 1),
+                      "ttft_mean_s": round(s.ttft_mean_s, 4)}))
+    return done
 
 
 if __name__ == "__main__":

@@ -187,6 +187,9 @@ def attn_decode(params: dict, x: Array, cache: dict, pos: Array,
                 cfg: ModelConfig, cross: bool = False):
     """One-token decode.  x (B, 1, d); cache {'k','v'} (B, S_cache, KV, hd).
 
+    ``pos`` is either a scalar (all rows at the same position — legacy path)
+    or a (B,) vector of per-slot positions (continuous batching: each batch
+    row is an independent request at its own depth).
     For SWA archs the cache is a ring buffer of ``sliding_window`` slots.
     Returns (y, new_cache).
     """
@@ -197,49 +200,45 @@ def attn_decode(params: dict, x: Array, cache: dict, pos: Array,
         (q,) = _project(params, x, cfg, None, {}, names=("wq",))
         q = _split_heads(q, h, hd)
         k, v = cache["k"], cache["v"]
-        valid = jnp.ones((k.shape[1],), bool)
+        valid = jnp.ones((B, k.shape[1]), bool)
         new_cache = cache
     else:
+        posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        rows = jnp.arange(B)
         q, k1, v1 = _project(params, x, cfg, None, {})
         q = _split_heads(q, h, hd)
         k1 = _split_heads(k1, kv, hd)
         v1 = _split_heads(v1, kv, hd)
         if not cfg.learned_pos:
-            cos, sin = rope_tables(pos[None, None], hd, cfg.rope_theta)
+            cos, sin = rope_tables(posb[:, None], hd, cfg.rope_theta)
             q = apply_rope(q, cos, sin)
             k1 = apply_rope(k1, cos, sin)
         s_cache = cache["k"].shape[1]
-        slot = pos % s_cache if cfg.sliding_window else pos
+        slot = posb % s_cache if cfg.sliding_window else posb
         if "k_scale" in cache:                       # int8 cache path
             k1q, k1s = _quantize_kv(k1)
             v1q, v1s = _quantize_kv(v1)
-            kq = jax.lax.dynamic_update_index_in_dim(cache["k"], k1q[:, 0],
-                                                     slot, 1)
-            vq = jax.lax.dynamic_update_index_in_dim(cache["v"], v1q[:, 0],
-                                                     slot, 1)
-            ks = jax.lax.dynamic_update_index_in_dim(cache["k_scale"],
-                                                     k1s[:, 0], slot, 1)
-            vs = jax.lax.dynamic_update_index_in_dim(cache["v_scale"],
-                                                     v1s[:, 0], slot, 1)
+            kq = cache["k"].at[rows, slot].set(k1q[:, 0])
+            vq = cache["v"].at[rows, slot].set(v1q[:, 0])
+            ks = cache["k_scale"].at[rows, slot].set(k1s[:, 0])
+            vs = cache["v_scale"].at[rows, slot].set(v1s[:, 0])
             new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
             k = (kq.astype(jnp.float32) * ks).astype(x.dtype)
             v = (vq.astype(jnp.float32) * vs).astype(x.dtype)
         else:
-            k = jax.lax.dynamic_update_index_in_dim(cache["k"], k1[:, 0],
-                                                    slot, 1)
-            v = jax.lax.dynamic_update_index_in_dim(cache["v"], v1[:, 0],
-                                                    slot, 1)
+            k = cache["k"].at[rows, slot].set(k1[:, 0])
+            v = cache["v"].at[rows, slot].set(v1[:, 0])
             new_cache = {"k": k, "v": v}
         idx = jnp.arange(s_cache)
         if cfg.sliding_window:
-            age = (slot - idx) % s_cache            # steps since written
-            valid = (age < jnp.minimum(pos + 1, s_cache))
+            age = (slot[:, None] - idx[None, :]) % s_cache   # steps since written
+            valid = (age < jnp.minimum(posb[:, None] + 1, s_cache))
         else:
-            valid = idx <= pos
+            valid = idx[None, :] <= posb[:, None]
     q = q.reshape(B, 1, kv, g, hd)
     s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
                    preferred_element_type=jnp.float32) / (hd ** 0.5)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.asi import MatrixASIState
 from repro.models.attention import (attn_decode, attn_forward, attn_init,
-                                    cross_kv, init_kv_cache)
+                                    cross_kv, init_kv_cache, quantize_cache)
 from repro.models.layers import (embed_init, initializer, mlp_apply, mlp_init,
                                  norm_apply, norm_init, sinusoidal_positions,
                                  unembed_init)
@@ -208,20 +208,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return {"self": self_cache, "cross": cross}
 
 
-def prime_cross_cache(params: dict, enc_out: Array, cfg: ModelConfig) -> dict:
-    def one(bp):
-        k, v = cross_kv(bp["cross"], enc_out, cfg)
-        return {"k": k, "v": v}
-    return jax.lax.map(one, params["decoder"])
-
-
 def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
             max_len: int):
     """Encode the audio stub + teacher-force the prompt, returning
-    (last_logits, primed {self, cross} caches)."""
+    (last_logits, primed {self, cross} caches).  Cross K/V are projected
+    once per layer inside the scan (the same ``ekv`` the cross-attention
+    consumes), not a second time via ``prime_cross_cache``."""
     B, S = tokens.shape
     enc_out = encode(params, frames, cfg)
-    cross = prime_cross_cache(params, enc_out, cfg)
     x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
     x = x + _dec_pos_emb(params, jnp.arange(S) % params["dec_pos"].shape[0],
                          x.dtype)[None]
@@ -236,25 +230,31 @@ def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
         cv = jnp.zeros((B, max_len) + v.shape[2:], v.dtype)
         cv = jax.lax.dynamic_update_slice_in_dim(cv, v[:, -n:], 0, 1)
         h = norm_apply(bp["norm2"], x, cfg)
-        ekv = cross_kv(bp["cross"], enc_out, cfg)
-        y, _, _ = attn_forward(bp["cross"], h, cfg, causal=False, enc_kv=ekv)
+        ek, ev = cross_kv(bp["cross"], enc_out, cfg)
+        y, _, _ = attn_forward(bp["cross"], h, cfg, causal=False,
+                               enc_kv=(ek, ev))
         x = x + y
         h = norm_apply(bp["norm3"], x, cfg)
         y, _ = mlp_apply(bp["mlp"], h, cfg)
-        return x + y, {"k": ck, "v": cv}
+        self_c = (quantize_cache({"k": ck, "v": cv})
+                  if cfg.kv_cache_dtype == "int8" else {"k": ck, "v": cv})
+        return x + y, {"self": self_c, "cross": {"k": ek, "v": ev}}
 
-    x, self_cache = jax.lax.scan(block_fn, x, params["decoder"],
-                                 unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x, caches = jax.lax.scan(block_fn, x, params["decoder"],
+                             unroll=cfg.n_layers if cfg.scan_unroll else 1)
     x = norm_apply(params["final_norm"], x, cfg)
     logits = (x[:, -1] @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
-    return logits, {"self": self_cache, "cross": cross}
+    return logits, {"self": caches["self"], "cross": caches["cross"]}
 
 
 def decode_step(params: dict, cache: dict, token: Array, pos: Array,
                 cfg: ModelConfig):
+    """token (B,) int32; pos scalar or (B,) per-slot positions."""
+    B = token.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]
-    x = x + _dec_pos_emb(params, (pos % params["dec_pos"].shape[0])[None],
-                         x.dtype)[None]
+    x = x + _dec_pos_emb(params, posb % params["dec_pos"].shape[0],
+                         x.dtype)[:, None]
 
     def block_fn(x, xs):
         bp, bc = xs

@@ -20,8 +20,13 @@ class ModelAPI:
     loss: Callable                    # (params, batch, asi_state=None)
     init_asi: Callable[[Array], dict]
     trainable_mask: Callable[[dict], Any]
-    decode_step: Callable             # (params, cache, token, pos)
+    decode_step: Callable             # (params, cache, token, pos) — pos may
+                                      # be scalar or (B,) per-slot positions
     init_cache: Callable[[int, int], dict]
+    prefill: Callable                 # (params, tokens, max_len, extra=None)
+                                      # -> (last_logits, cache); ``extra`` is
+                                      # prefix embeds (vlm) / audio frames
+                                      # (encdec), None otherwise
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
@@ -34,6 +39,7 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             trainable_mask=lambda p: encdec.trainable_mask(p, cfg),
             decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, n: encdec.init_cache(cfg, b, n),
+            prefill=lambda p, t, n, extra=None: encdec.prefill(p, extra, t, cfg, n),
         )
     return ModelAPI(
         cfg=cfg,
@@ -43,4 +49,5 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         trainable_mask=lambda p: transformer.trainable_mask(p, cfg),
         decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
         init_cache=lambda b, n: transformer.init_cache(cfg, b, n),
+        prefill=lambda p, t, n, extra=None: transformer.prefill(p, t, cfg, n, extra),
     )

@@ -27,7 +27,7 @@ from repro.kernels import dispatch
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.attention import (attn_decode, attn_forward, attn_init,
-                                    init_kv_cache)
+                                    init_kv_cache, quantize_cache)
 from repro.models.layers import (embed_init, mlp_apply, mlp_init, norm_apply,
                                  norm_init, unembed_init)
 from repro.parallel.sharding import logical_shard
@@ -341,7 +341,8 @@ def _sublayer_decode(params, x, cache, pos, cfg, spec):
 
 def decode_step(params: dict, cache: dict, token: Array, pos: Array,
                 cfg: ModelConfig):
-    """One decode step.  token (B,) int32; pos scalar.  Returns (logits, cache)."""
+    """One decode step.  token (B,) int32; pos scalar or (B,) per-slot
+    positions (continuous batching).  Returns (logits, cache)."""
     x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]   # (B,1,d)
     specs = period_pattern(cfg)
 
@@ -378,7 +379,6 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int,
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     positions = jnp.arange(S)[None, :]
     specs = period_pattern(cfg)
-    cache = init_cache(cfg, B, max_len)
     s_cache = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
 
     def period_fn(x, pparams):
@@ -397,7 +397,10 @@ def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int,
                     # ring alignment: token at position p lives in slot p % cache
                     ck = jnp.roll(ck, S % s_cache, axis=1)
                     cv = jnp.roll(cv, S % s_cache, axis=1)
-                new_pc[f"sub{j}"] = {"k": ck, "v": cv}
+                if cfg.kv_cache_dtype == "int8":
+                    new_pc[f"sub{j}"] = quantize_cache({"k": ck, "v": cv})
+                else:
+                    new_pc[f"sub{j}"] = {"k": ck, "v": cv}
             else:
                 y, st, _ = ssm_lib.mamba_forward(sp["mixer"], h, cfg)
                 new_pc[f"sub{j}"] = st

@@ -1,15 +1,36 @@
-"""Batched decode serving: continuous-batching style request loop.
+"""Continuous-batching decode serving.
 
-Requests carry a prompt; the scheduler packs up to ``max_batch`` active
-sequences, primes caches via prefill, then steps all of them together with
-one jitted ``decode_step``, retiring finished sequences and admitting new
-ones into freed slots (slot reuse = the KV cache row is overwritten by the
-next prefill).  Greedy sampling by default; temperature optional.
+``Engine`` keeps one KV/SSM cache of ``max_batch`` rows alive for the whole
+request stream and drives all active rows in lock-step:
+
+* **prefill** — a whole prompt runs through the model in one jitted call
+  (``ModelAPI.prefill``), and its batch-1 cache is scattered into a free slot
+  of the shared cache (``_write_slot``).  Freed rows are reused by later
+  admissions; the cache is allocated once per ``run``, never per wave.
+* **decode** — one jitted ``_step`` advances every slot together.  Each slot
+  carries its own position counter (per-slot ``pos`` threads through
+  ``decode_step`` into the attention cache writes/masks), its own
+  remaining-token budget, and an active flag; finished slots are frozen by
+  masking, so retirement and admission never trigger recompilation.
+* **sampling** — on device, inside the jitted step: greedy ``argmax`` or
+  temperature sampling via per-slot ``jax.random.categorical``.  The only
+  per-step host transfer is the sampled-token vector and the
+  finished-this-step mask (two ``(max_batch,)`` vectors).
+
+The scheduler (plain Python around the jitted calls) retires finished
+requests, admits pending ones into freed slots, and records throughput
+counters (tokens/s, per-request time-to-first-token) in ``Engine.last_stats``.
+
+``SequentialEngine`` preserves the original one-request-at-a-time loop
+(per-token Python prefill, host-side argmax) as the A/B baseline for
+``benchmarks/serve_throughput.py`` and the batch=1 parity tests.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Sequence
+import time
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +46,9 @@ class Request:
     max_new_tokens: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    embeds: Any = None            # vlm prefix embeds / encdec audio frames,
+                                  # shape (1, n, d) — threaded into prefill
+    ttft_s: float | None = None   # time-to-first-token, set by Engine.run
 
 
 @dataclasses.dataclass
@@ -35,21 +59,225 @@ class ServeCfg:
     eos_id: int = -1              # -1: never stop early
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Throughput/latency counters for one ``Engine.run``."""
+    requests: int = 0
+    generated_tokens: int = 0
+    prefill_calls: int = 0
+    decode_steps: int = 0
+    wall_s: float = 0.0
+    tokens_per_s: float = 0.0
+    ttft_mean_s: float = 0.0
+    ttft_max_s: float = 0.0
+
+
+def _mk_stats(results: list[Request], gen: int, prefills: int, steps: int,
+              wall: float) -> ServeStats:
+    ttfts = [r.ttft_s for r in results if r.ttft_s is not None]
+    return ServeStats(
+        requests=len(results), generated_tokens=gen,
+        prefill_calls=prefills, decode_steps=steps, wall_s=wall,
+        tokens_per_s=gen / wall if wall > 0 else 0.0,
+        ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
+        ttft_max_s=float(np.max(ttfts)) if ttfts else 0.0)
+
+
+def _prefix_len(req: Request, family: str) -> int:
+    """How many decoder positions ``req.embeds`` occupies: vlm prefix embeds
+    sit in front of the prompt; encdec frames feed the encoder (zero)."""
+    if req.embeds is None or family == "encdec":
+        return 0
+    return req.embeds.shape[1]
+
+
 class Engine:
-    """Single-host serving engine over a ModelAPI."""
+    """Single-host continuous-batching engine over a ModelAPI."""
 
     def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0):
         self.api = model_api
         self.params = params
         self.cfg = cfg
         self.key = jax.random.PRNGKey(seed)
+        self.last_stats = ServeStats()
+        self._prefill_jit: dict = {}      # (prompt_len, embeds_shape) -> fn
+        B, temp, eos, max_len = (cfg.max_batch, cfg.temperature, cfg.eos_id,
+                                 cfg.max_len)
+        # Donating the cache/state lets XLA update the (large) KV buffers in
+        # place each step; CPU ignores donation, so only request it off-CPU.
+        donate = jax.default_backend() != "cpu"
+
+        def sample(logits: Array, key: Array) -> Array:
+            """(n, V) logits -> (n,) sampled tokens, on device."""
+            if temp > 0:
+                keys = jax.random.split(key, logits.shape[0])
+                return jax.vmap(
+                    lambda k, l: jax.random.categorical(k, l / temp)
+                )(keys, logits).astype(jnp.int32)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def step_fn(params, cache, state, key):
+            """Advance all slots one token.  Frozen (inactive) slots keep
+            their position/budget; their sampled token is discarded."""
+            logits, cache = model_api.decode_step(params, cache,
+                                                  state["tok"], state["pos"])
+            tok = sample(logits, key)
+            pos = jnp.where(state["active"], state["pos"] + 1, state["pos"])
+            rem = jnp.where(state["active"], state["rem"] - 1, state["rem"])
+            done = (tok == eos) | (rem <= 0) | (pos + 1 >= max_len)
+            finished = state["active"] & done
+            tok = jnp.where(state["active"], tok, state["tok"])
+            state = {"tok": tok, "pos": pos, "rem": rem,
+                     "active": state["active"] & ~done}
+            return cache, state, tok, finished
+
+        def admit_fn(state, slot, logits, pos0, rem0, key):
+            """Occupy ``slot``: sample the first token from the prefill
+            logits and install the slot's counters."""
+            tok0 = sample(logits, key)[0]
+            done0 = (tok0 == eos) | (rem0 - 1 <= 0) | (pos0 + 1 >= max_len)
+            state = {"tok": state["tok"].at[slot].set(tok0),
+                     "pos": state["pos"].at[slot].set(pos0),
+                     "rem": state["rem"].at[slot].set(rem0 - 1),
+                     "active": state["active"].at[slot].set(~done0)}
+            return state, tok0, done0
+
+        def write_slot(cache, one, slot):
+            """Scatter a batch-1 prefill cache into row ``slot`` of the
+            shared cache (slot reuse: the freed row is simply overwritten)."""
+            return jax.tree.map(
+                lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+                    c, o.astype(c.dtype), slot, axis=1), cache, one)
+
+        self._step = jax.jit(step_fn,
+                             donate_argnums=(1, 2) if donate else ())
+        self._admit = jax.jit(admit_fn)
+        self._write_slot = jax.jit(write_slot,
+                                   donate_argnums=(0,) if donate else ())
+        self._B = B
+
+    # Each distinct (prompt length, embeds shape) compiles its own prefill;
+    # the memo is bounded (LRU-ish: oldest insertion evicted) so a long-lived
+    # engine over naturally varying lengths cannot grow compile state without
+    # bound.  Length-bucketing with right-padding would bound compiles harder
+    # but is not exactness-preserving for SSM/conv states (pad tokens enter
+    # the recurrence), so we keep exact per-length prefill.
+    _PREFILL_MEMO_MAX = 64
+
+    def _prefill(self, req: Request):
+        """Jitted whole-prompt prefill, cached per (length, embeds-shape)."""
+        key = (len(req.prompt), None if req.embeds is None
+               else tuple(req.embeds.shape))
+        fn = self._prefill_jit.get(key)
+        if fn is None:
+            while len(self._prefill_jit) >= self._PREFILL_MEMO_MAX:
+                self._prefill_jit.pop(next(iter(self._prefill_jit)))
+            max_len = self.cfg.max_len
+            if req.embeds is None:
+                fn = jax.jit(lambda p, t: self.api.prefill(p, t, max_len))
+            else:
+                fn = jax.jit(
+                    lambda p, t, e: self.api.prefill(p, t, max_len, e))
+            self._prefill_jit[key] = fn
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        if req.embeds is None:
+            return fn(self.params, toks)
+        return fn(self.params, toks, jnp.asarray(req.embeds))
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve ``requests``; returns them in completion order.  Counters
+        for the run land in ``self.last_stats``."""
+        cfg = self.cfg
+        B = self._B
+        family = getattr(self.api.cfg, "family", "")
+        for r in requests:
+            if family == "encdec" and r.embeds is None:
+                raise ValueError(f"request {r.uid}: encdec serving needs "
+                                 "encoder frames in Request.embeds")
+            if len(r.prompt) + _prefix_len(r, family) + 1 > cfg.max_len:
+                raise ValueError(
+                    f"request {r.uid}: prompt ({len(r.prompt)} tokens "
+                    f"+ {_prefix_len(r, family)} prefix) does not fit "
+                    f"max_len={cfg.max_len} with room to generate")
+        t0 = time.perf_counter()
+        # zero-budget requests complete immediately (matches the sequential
+        # engine, whose generate loop never runs for them)
+        results: list[Request] = [r for r in requests if r.max_new_tokens <= 0]
+        for r in results:
+            r.done = True
+        pending = collections.deque(r for r in requests
+                                    if r.max_new_tokens > 0)
+        slots: list[Request | None] = [None] * B
+        cache = self.api.init_cache(B, cfg.max_len)
+        state = {"tok": jnp.zeros((B,), jnp.int32),
+                 "pos": jnp.zeros((B,), jnp.int32),
+                 "rem": jnp.zeros((B,), jnp.int32),
+                 "active": jnp.zeros((B,), bool)}
+        gen = prefills = steps = 0
+
+        def _retire(req: Request):
+            req.done = True
+            results.append(req)
+
+        while pending or any(s is not None for s in slots):
+            # --- admission: fill every free slot from the queue ------------
+            for slot in range(B):
+                while slots[slot] is None and pending:
+                    req = pending.popleft()
+                    logits, pcache = self._prefill(req)
+                    cache = self._write_slot(cache, pcache, slot)
+                    self.key, sub = jax.random.split(self.key)
+                    pos0 = len(req.prompt) + _prefix_len(req, family)
+                    state, tok0, done0 = self._admit(
+                        state, slot, logits, pos0, req.max_new_tokens, sub)
+                    prefills += 1
+                    tok0_h, done0_h = jax.device_get((tok0, done0))
+                    req.out.append(int(tok0_h))
+                    req.ttft_s = time.perf_counter() - t0
+                    gen += 1
+                    if bool(done0_h):
+                        _retire(req)          # slot stays free for the next
+                    else:
+                        slots[slot] = req
+            if not any(s is not None for s in slots):
+                continue
+            # --- lock-step decode over all active slots --------------------
+            self.key, sub = jax.random.split(self.key)
+            cache, state, tok, finished = self._step(self.params, cache,
+                                                     state, sub)
+            steps += 1
+            tok_h, fin_h = jax.device_get((tok, finished))
+            for slot, req in enumerate(slots):
+                if req is None:
+                    continue
+                req.out.append(int(tok_h[slot]))
+                gen += 1
+                if bool(fin_h[slot]):
+                    _retire(req)
+                    slots[slot] = None
+
+        self.last_stats = _mk_stats(results, gen, prefills, steps,
+                                    time.perf_counter() - t0)
+        return results
+
+
+class SequentialEngine:
+    """The original strictly sequential loop: one slot at a time, a fresh
+    cache per wave, per-token Python prefill, and a host argmax round-trip
+    per generated token.  Kept as the A/B baseline — the continuous engine
+    must beat this in tokens/s and match it token-for-token at batch=1."""
+
+    def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0):
+        self.api = model_api
+        self.params = params
+        self.cfg = cfg
+        self.key = jax.random.PRNGKey(seed)
+        self.last_stats = ServeStats()
         self._decode = jax.jit(
             lambda p, c, t, pos: model_api.decode_step(p, c, t, pos))
 
     def _prefill_one(self, cache, slot: int, prompt: Sequence[int]):
-        """Feed a prompt token-by-token into one batch slot (slot-sliced
-        decode would need gather/scatter over caches; per-token prefill keeps
-        the engine simple and is exact)."""
+        """Feed a prompt token-by-token into one batch slot."""
         toks = list(prompt)
         logits = None
         for pos, t in enumerate(toks):
@@ -64,10 +292,10 @@ class Engine:
         return jnp.asarray(v)
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Sequential-slot scheduling: each request decodes in its own slot;
-        a shared position counter per slot tracks cache occupancy."""
+        t0 = time.perf_counter()
         pending = list(requests)
         results = []
+        gen = steps = 0
         while pending:
             active = pending[: self.cfg.max_batch]
             pending = pending[len(active):]
@@ -83,12 +311,18 @@ class Engine:
                     else:
                         tok = int(jnp.argmax(row))
                     req.out.append(tok)
+                    gen += 1
+                    if req.ttft_s is None:
+                        req.ttft_s = time.perf_counter() - t0
                     if tok == self.cfg.eos_id or pos + 1 >= self.cfg.max_len:
                         break
                     logits, cache = self._decode(
                         self.params, cache, self._slot_tokens(slot, tok),
                         jnp.int32(pos))
+                    steps += 1
                     pos += 1
                 req.done = True
                 results.append(req)
+        self.last_stats = _mk_stats(results, gen, 0, steps,
+                                    time.perf_counter() - t0)
         return results

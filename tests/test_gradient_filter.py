@@ -1,0 +1,46 @@
+"""patch_pool correctness: pooled means must be exact even when H/W are not
+multiples of r (edge patches renormalized by their true element counts)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gradient_filter import patch_pool, pooled_storage_elems
+
+
+def _oracle(x: np.ndarray, r: int) -> np.ndarray:
+    """Unpooled reference: mean over the actual elements of each patch."""
+    b, c, h, w = x.shape
+    hh, ww = (h + r - 1) // r, (w + r - 1) // r
+    out = np.zeros((b, c, hh, ww), x.dtype)
+    for i in range(hh):
+        for j in range(ww):
+            patch = x[:, :, i * r: min((i + 1) * r, h),
+                      j * r: min((j + 1) * r, w)]
+            out[:, :, i, j] = patch.mean(axis=(2, 3))
+    return out
+
+
+@pytest.mark.parametrize("h,w,r", [
+    (8, 8, 4),       # exact multiples
+    (7, 9, 4),       # ragged both dims
+    (5, 4, 4),       # ragged rows only
+    (4, 6, 4),       # ragged cols only
+    (3, 3, 4),       # single partial patch
+    (10, 7, 3),
+])
+def test_patch_pool_matches_unpooled_oracle(h, w, r):
+    x = jax.random.normal(jax.random.PRNGKey(h * 100 + w), (2, 3, h, w))
+    y = patch_pool(x, r)
+    assert y.shape[2:] == ((h + r - 1) // r, (w + r - 1) // r)
+    assert y.size == pooled_storage_elems((2, 3, h, w), r)
+    np.testing.assert_allclose(np.asarray(y), _oracle(np.asarray(x), r),
+                               atol=1e-6)
+
+
+def test_patch_pool_constant_input_is_exact_on_ragged_shapes():
+    """The old zero-pad-then-divide-by-r*r version biased edge patches low;
+    a constant input must pool to exactly that constant everywhere."""
+    x = jnp.full((1, 1, 7, 5), 3.25)
+    y = patch_pool(x, 4)
+    np.testing.assert_allclose(np.asarray(y), 3.25, atol=1e-7)

@@ -61,6 +61,15 @@ def test_patch_pool_mean_preserved(b, c, h, w, r, seed):
     if h % r == 0 and w % r == 0:       # exact mean on full patches
         np.testing.assert_allclose(float(y.mean()), float(x.mean()),
                                    atol=1e-5)
+    # every patch — edge patches included — is the exact mean of the real
+    # elements it covers (no zero-pad bias on ragged H/W)
+    xn = np.asarray(x)
+    for i in range((h + r - 1) // r):
+        for j in range((w + r - 1) // r):
+            patch = xn[:, :, i * r: min((i + 1) * r, h),
+                       j * r: min((j + 1) * r, w)]
+            np.testing.assert_allclose(np.asarray(y[:, :, i, j]),
+                                       patch.mean(axis=(2, 3)), atol=1e-5)
 
 
 @given(seed=st.integers(0, 2**16), s=st.sampled_from([8, 16]),

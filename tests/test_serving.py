@@ -1,0 +1,201 @@
+"""Continuous-batching serving engine tests: batch=1 parity with the legacy
+sequential path, batch-composition independence (slot staggering/reuse),
+admission beyond max_batch, eos early-stop, sampling determinism, and the
+serve launcher CLI."""
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch import serve as serve_cli
+from repro.models import build_model
+from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
+                                      ServeCfg)
+
+KEY = jax.random.PRNGKey(0)
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8], [9, 10, 11, 12, 13], [3, 1]]
+
+
+def _reqs(prompts=PROMPTS, max_new=6):
+    return [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _outs(done):
+    return {r.uid: r.out for r in done}
+
+
+def _api(arch, **replace):
+    cfg = get_config(arch).reduced()
+    if replace:
+        cfg = cfg.replace(**replace)
+    api = build_model(cfg)
+    return api, api.init(KEY)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-130m"])
+def test_batched_engine_matches_sequential_at_batch1(arch):
+    """Greedy, batch=1: the new engine must reproduce the legacy sequential
+    engine token-for-token on a fixed prompt set."""
+    api, params = _api(arch)
+    new = Engine(api, params, ServeCfg(max_batch=1, max_len=32)).run(_reqs())
+    old = SequentialEngine(api, params,
+                           ServeCfg(max_batch=1, max_len=32)).run(_reqs())
+    assert _outs(new) == _outs(old)
+
+
+def test_batch_composition_does_not_change_outputs():
+    """Greedy outputs must be identical whether a request decodes alone or
+    staggered against other slots at different positions (slot isolation +
+    per-slot position counters)."""
+    api, params = _api("tinyllama-1.1b")
+    alone = Engine(api, params, ServeCfg(max_batch=1, max_len=32)).run(_reqs())
+    packed = Engine(api, params,
+                    ServeCfg(max_batch=4, max_len=32)).run(_reqs())
+    assert _outs(packed) == _outs(alone)
+
+
+def test_admission_beyond_max_batch_and_slot_reuse():
+    """7 requests through 2 slots: every slot row is reused by later
+    admissions and all requests complete with their full budgets."""
+    api, params = _api("tinyllama-1.1b")
+    prompts = [[1 + i, 2, 3 + i] for i in range(7)]
+    # uneven budgets force retirements at different steps → reused slots
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3 + (i % 3))
+            for i, p in enumerate(prompts)]
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=32))
+    done = eng.run(reqs)
+    assert len(done) == 7
+    assert all(len(r.out) == 3 + (r.uid % 3) for r in done)
+    assert eng.last_stats.prefill_calls == 7
+    # reused rows must not leak the previous occupant: each request's output
+    # equals its solo (fresh-cache) run
+    solo = Engine(api, params, ServeCfg(max_batch=1, max_len=32)).run(
+        [Request(uid=i, prompt=list(p), max_new_tokens=3 + (i % 3))
+         for i, p in enumerate(prompts)])
+    assert _outs(done) == _outs(solo)
+
+
+def test_swa_ring_wraps_with_staggered_slots():
+    """Sliding-window arch: decode past the window so the per-slot ring
+    buffers wrap at different steps; must still match the sequential path
+    (includes a prompt longer than the window → prefill ring alignment)."""
+    api, params = _api("h2o-danube-3-4b")        # window 16 reduced
+    prompts = [list(range(1, 21)), [2, 3, 4]]    # S=20 > window, S=3
+    def mk():
+        return [Request(uid=i, prompt=list(p), max_new_tokens=10)
+                for i, p in enumerate(prompts)]
+    new = Engine(api, params, ServeCfg(max_batch=2, max_len=40)).run(mk())
+    old = SequentialEngine(api, params,
+                           ServeCfg(max_batch=2, max_len=40)).run(mk())
+    assert _outs(new) == _outs(old)
+
+
+def test_eos_early_stop_frees_slot():
+    api, params = _api("tinyllama-1.1b")
+    probe = Engine(api, params, ServeCfg(max_batch=1, max_len=32)).run(
+        _reqs([PROMPTS[0]], max_new=6))
+    out = probe[0].out
+    assert len(out) == 6
+    eos = out[2]                      # stop as soon as this token appears
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=32, eos_id=eos))
+    done = eng.run(_reqs([PROMPTS[0], PROMPTS[1]], max_new=6))
+    r0 = _outs(done)[0]
+    assert r0 == out[: out.index(eos) + 1]      # truncated at first eos
+    assert done[-1].done
+
+
+def test_temperature_sampling_deterministic_given_seed():
+    api, params = _api("tinyllama-1.1b")
+    scfg = ServeCfg(max_batch=2, max_len=32, temperature=0.8)
+    a = Engine(api, params, scfg, seed=7).run(_reqs(max_new=5))
+    b = Engine(api, params, scfg, seed=7).run(_reqs(max_new=5))
+    assert _outs(a) == _outs(b)
+
+
+def test_greedy_ignores_seed():
+    api, params = _api("tinyllama-1.1b")
+    scfg = ServeCfg(max_batch=2, max_len=32, temperature=0.0)
+    a = Engine(api, params, scfg, seed=1).run(_reqs(max_new=4))
+    b = Engine(api, params, scfg, seed=99).run(_reqs(max_new=4))
+    assert _outs(a) == _outs(b)
+
+
+def test_stats_counters_surface_throughput():
+    api, params = _api("tinyllama-1.1b")
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=32))
+    done = eng.run(_reqs(max_new=4))
+    s = eng.last_stats
+    assert s.requests == len(PROMPTS)
+    assert s.generated_tokens == sum(len(r.out) for r in done) == 16
+    assert s.tokens_per_s > 0
+    assert all(r.ttft_s is not None and r.ttft_s <= s.wall_s for r in done)
+    assert 0 < s.ttft_mean_s <= s.ttft_max_s <= s.wall_s
+
+
+def test_zero_budget_request_generates_nothing():
+    """max_new_tokens=0 must yield an empty output (sequential-engine
+    semantics), not the admission-sampled first token."""
+    api, params = _api("tinyllama-1.1b")
+    reqs = [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=0),
+            Request(uid=1, prompt=[4, 5], max_new_tokens=3)]
+    done = Engine(api, params, ServeCfg(max_batch=2, max_len=32)).run(reqs)
+    outs = _outs(done)
+    assert outs[0] == [] and len(outs[1]) == 3
+    assert all(r.done for r in done)
+
+
+def test_prompt_longer_than_max_len_rejected():
+    api, params = _api("tinyllama-1.1b")
+    eng = Engine(api, params, ServeCfg(max_batch=1, max_len=8))
+    with pytest.raises(ValueError):
+        eng.run([Request(uid=0, prompt=list(range(1, 9)), max_new_tokens=2)])
+
+
+def test_int8_kv_cache_serving():
+    """Prefill must quantize primed rows so the scattered tree matches the
+    int8 cache layout (k/v + scales)."""
+    api, params = _api("tinyllama-1.1b", kv_cache_dtype="int8")
+    done = Engine(api, params, ServeCfg(max_batch=2, max_len=32)).run(
+        _reqs(max_new=4))
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_encdec_request_without_frames_rejected():
+    api, params = _api("whisper-medium")
+    eng = Engine(api, params, ServeCfg(max_batch=1, max_len=16))
+    with pytest.raises(ValueError, match="encoder frames"):
+        eng.run([Request(uid=0, prompt=[1, 2], max_new_tokens=2)])
+
+
+def test_encdec_serving_with_frames():
+    """Whisper: frames feed the encoder; decoder slots still stagger."""
+    api, params = _api("whisper-medium")
+    cfg = api.cfg
+    frames = jax.random.normal(KEY, (1, cfg.enc_len, cfg.d_model))
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=16))
+    reqs = [Request(uid=i, prompt=[1, 2 + i], max_new_tokens=3,
+                    embeds=frames * (1.0 + 0.5 * i)) for i in range(3)]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert all(len(r.out) == 3 for r in done)
+
+
+# --- serve launcher CLI ---------------------------------------------------------
+
+
+def test_serve_cli_reduced_flag_is_toggleable():
+    ap = serve_cli.build_parser()
+    assert ap.parse_args(["--arch", "tinyllama-1.1b"]).reduced is True
+    assert ap.parse_args(["--arch", "tinyllama-1.1b",
+                          "--reduced"]).reduced is True
+    assert ap.parse_args(["--arch", "tinyllama-1.1b",
+                          "--no-reduced"]).reduced is False
+
+
+def test_serve_cli_end_to_end(capsys):
+    done = serve_cli.main(["--arch", "tinyllama-1.1b", "--reduced",
+                           "--requests", "3", "--max-new", "4",
+                           "--max-batch", "2", "--max-len", "32"])
+    assert len(done) == 3
+    assert all(len(r.out) == 4 for r in done)
+    assert "tokens_per_s" in capsys.readouterr().out

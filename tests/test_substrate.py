@@ -114,6 +114,51 @@ def test_checkpoint_atomicity_no_tmp_left():
         assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
 
 
+def test_checkpoint_stale_tmp_swept_after_simulated_crash():
+    """A hard crash between mkdtemp and os.rename leaves an orphan .tmp_*
+    dir (the in-save handler never runs); the next save must sweep it —
+    but only once it is old enough to not be a concurrent writer's."""
+    import time as _time
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"x": jnp.ones(3)}
+        checkpointer.save(d, 1, tree)
+        # simulate the post-crash state: partially written, *old* tmp dirs
+        old = _time.time() - 2 * checkpointer.STALE_TMP_TTL_S
+        for n in ("a", "b"):
+            crashed = os.path.join(d, f".tmp_crashed_{n}")
+            os.makedirs(crashed)
+            shard = os.path.join(crashed, "shard_0.npz")
+            with open(shard, "wb") as f:
+                f.write(b"partial")
+            os.utime(shard, (old, old))
+            os.utime(crashed, (old, old))
+        # a fresh tmp dir (concurrent writer mid-save) must survive
+        live = os.path.join(d, ".tmp_live")
+        os.makedirs(live)
+        checkpointer.save(d, 2, tree)
+        left = [f for f in os.listdir(d) if f.startswith(".tmp")]
+        assert left == [".tmp_live"]
+        # the swept dirs must not have corrupted real checkpoints
+        assert checkpointer.latest_step(d) == 2
+        restored, step, _ = checkpointer.restore(d, tree)
+        assert step == 2
+
+
+def test_windowed_median_matches_sorted_and_evicts():
+    from repro.runtime.train_loop import WindowedMedian
+    import random
+    rng = random.Random(0)
+    wm = WindowedMedian(window=16)
+    vals = []
+    for _ in range(100):
+        v = rng.random()
+        wm.push(v)
+        vals.append(v)
+        window = vals[-16:]
+        assert wm.median() == sorted(window)[len(window) // 2]
+    assert len(wm) == 16
+
+
 # --- data -------------------------------------------------------------------------
 
 def test_lm_stream_deterministic_and_host_sharded():
