@@ -18,7 +18,8 @@ def _timed(name, fn, derive):
 
 def main() -> None:
     from benchmarks import (fused_asi, latency_ondevice, serve_throughput,
-                            table1_imagenet, table4_tinyllama, warm_start)
+                            shard_scaling, table1_imagenet, table4_tinyllama,
+                            warm_start)
 
     print("name,us_per_call,derived")
     _timed("table1_imagenet", table1_imagenet.run,
@@ -37,6 +38,9 @@ def main() -> None:
     _timed("serve_throughput", serve_throughput.run,
            lambda o: f"families_won={o['families_won']}/{len(o['rows'])};"
                      f"min_speedup={min(r['speedup'] for r in o['rows']):.2f}x")
+    _timed("shard_scaling", shard_scaling.run,
+           lambda o: f"min_arg_mem_ratio_1to8="
+                     f"{o['min_arg_mem_ratio_1to8']:.1f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,156 @@
+"""Sharded-training scaling: step time and per-device memory vs device count.
+
+For dense / MoE / SSM reduced configs, run the mesh-sharded train step
+(layout=fsdp, the per-device-memory layout) on 1 / 2 / 4 / 8 forced
+host-platform devices and record:
+
+* ``step_ms``  — measured wall-clock per optimizer step (after warmup);
+* ``arg_mb``   — per-device bytes of the compiled step's live arguments
+                 (params + optimizer state + batch shards; this is what
+                 FSDP shrinks as the mesh grows);
+* ``temp_mb``  — per-device XLA temp allocation (activation workspace —
+                 what ASI's activation compression shrinks).
+
+Both memory numbers come from XLA's compiled-program
+``memory_analysis`` — the same per-device program a real accelerator would
+run, so the scaling trend (not the absolute CPU numbers) is the signal.
+
+Each device count needs its own XLA_FLAGS before jax import, so every cell
+runs in a subprocess; the parent aggregates CSV rows.
+
+Run:  PYTHONPATH=src python -m benchmarks.shard_scaling
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    ("tinyllama-1.1b", "dense"),
+    ("granite-moe-3b-a800m", "moe"),
+    ("mamba2-130m", "ssm"),
+]
+DEVICE_COUNTS = (1, 2, 4, 8)
+LAYOUT = "fsdp"
+STEPS = 4          # timed steps after 1 warmup/compile step
+BATCH = 8
+SEQ = 16
+
+
+def _cell(arch: str, n_dev: int, layout: str) -> dict:
+    """Runs inside the subprocess: one (arch, device-count) measurement."""
+    import contextlib
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import LMStream, LMStreamCfg
+    from repro.launch.mesh import make_layout_mesh
+    from repro.models import build_model
+    from repro.optim.optimizers import make_optimizer
+    from repro.optim.schedules import warmup_cosine
+    from repro.runtime.train_loop import make_mesh_plan, make_train_step
+
+    cfg = get_config(arch).reduced().replace(compress="asi")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    asi = api.init_asi(jax.random.PRNGKey(0))
+    mask = api.trainable_mask(params)
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 1, 100), clip_norm=2.0)
+    opt_state = opt.init(params)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                                global_batch=BATCH, seed=0, branching=2))
+
+    plan = None
+    if n_dev > 1:
+        plan = make_mesh_plan(cfg, make_layout_mesh(layout), layout,
+                              params, opt_state, asi, data.batch(0))
+        params, opt_state, asi = plan.shard_state(params, opt_state, asi)
+    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                              trainable_mask=mask, plan=plan)
+
+    ctx = plan.activate() if plan else contextlib.nullcontext()
+    with ctx:
+        batch = data.batch(0)
+        if plan:
+            batch = plan.shard_batch(batch)
+        mem = {}
+        try:
+            ma = (step_fn.lower(params, opt_state, asi, batch, jnp.int32(0))
+                  .compile().memory_analysis())
+            if ma is not None:
+                mem = {"arg_mb": ma.argument_size_in_bytes / 2**20,
+                       "temp_mb": ma.temp_size_in_bytes / 2**20}
+        except Exception as e:                                # noqa: BLE001
+            mem = {"error": str(e)}
+        # warmup (separate jit cache entry from the AOT compile above)
+        params, opt_state, asi, m = step_fn(params, opt_state, asi, batch,
+                                            jnp.int32(0))
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for t in range(1, STEPS + 1):
+            b = data.batch(t)
+            if plan:
+                b = plan.shard_batch(b)
+            params, opt_state, asi, m = step_fn(params, opt_state, asi, b,
+                                                jnp.int32(t))
+        jax.block_until_ready(m["loss"])
+        step_ms = (time.perf_counter() - t0) / STEPS * 1e3
+    return {"arch": arch, "n_dev": n_dev, "layout": layout,
+            "step_ms": round(step_ms, 2),
+            **{k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in mem.items()}}
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    for arch, family in ARCHS:
+        for n_dev in DEVICE_COUNTS:
+            env = dict(os.environ,
+                       XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+                       JAX_PLATFORMS="cpu",
+                       PYTHONPATH=os.path.join(
+                           os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))), "src"))
+            p = subprocess.run(
+                [sys.executable, "-m", "benchmarks.shard_scaling",
+                 "--cell", arch, str(n_dev), LAYOUT],
+                env=env, capture_output=True, text=True, timeout=1200)
+            if p.returncode != 0:
+                rows.append({"arch": arch, "n_dev": n_dev, "layout": LAYOUT,
+                             "error": p.stderr[-500:]})
+                continue
+            row = json.loads(p.stdout.strip().splitlines()[-1])
+            row["family"] = family
+            rows.append(row)
+            if verbose:
+                print(f"{arch},{family},{n_dev},{row.get('step_ms')},"
+                      f"{row.get('arg_mb')},{row.get('temp_mb')}")
+    ok = [r for r in rows if "error" not in r]
+    # headline: how much per-device argument memory FSDP sheds going 1 -> 8
+    ratios = []
+    for arch, _ in ARCHS:
+        one = next((r for r in ok if r["arch"] == arch and r["n_dev"] == 1), None)
+        eight = next((r for r in ok if r["arch"] == arch and r["n_dev"] == 8), None)
+        if one and eight and one.get("arg_mb") and eight.get("arg_mb"):
+            ratios.append(one["arg_mb"] / eight["arg_mb"])
+    return {"rows": rows,
+            "min_arg_mem_ratio_1to8": round(min(ratios), 2) if ratios else 0.0}
+
+
+def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--cell":
+        arch, n_dev, layout = sys.argv[2], int(sys.argv[3]), sys.argv[4]
+        print(json.dumps(_cell(arch, n_dev, layout)))
+        return
+    print("arch,family,n_dev,step_ms,arg_mb,temp_mb")
+    out = run(verbose=True)
+    print(json.dumps({"min_arg_mem_ratio_1to8": out["min_arg_mem_ratio_1to8"]}))
+
+
+if __name__ == "__main__":
+    main()

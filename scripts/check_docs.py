@@ -1,0 +1,111 @@
+"""Docs checker: README.md / DESIGN.md must stay in sync with the code.
+
+Three checks, run by the CI ``docs`` job (and locally via
+``PYTHONPATH=src python scripts/check_docs.py``):
+
+1. every ```python fenced block compiles (syntax; snippets with an
+   intentional ellipsis are skipped);
+2. every ``--flag`` used on a ``python -m <module>`` line inside a ```bash
+   block is accepted by that module's argparse parser (checked against its
+   ``--help`` output), and the module file exists;
+3. every relative markdown link points at an existing file.
+
+Exit status is non-zero on any failure, with one line per offence.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md"]
+
+# modules whose --help we interrogate for flag checks
+FLAGGED_MODULES = ("repro.launch.train", "repro.launch.serve",
+                   "repro.launch.dryrun")
+
+FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")
+
+
+def fences(text: str):
+    return [(m.group(1) or "", m.group(2)) for m in FENCE.finditer(text)]
+
+
+def check_python_block(code: str, where: str, errors: list):
+    if "..." in code or code.strip().startswith(">>>"):
+        return
+    try:
+        compile(code, where, "exec")
+    except SyntaxError as e:
+        errors.append(f"{where}: python block does not compile: {e}")
+
+
+def _help_text(module: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    p = subprocess.run([sys.executable, "-m", module, "--help"],
+                       env=env, capture_output=True, text=True, timeout=300,
+                       cwd=REPO)
+    return p.stdout + p.stderr
+
+
+def check_bash_block(code: str, where: str, errors: list,
+                     help_cache: dict):
+    # join backslash continuations so flags stay attached to their module
+    joined = re.sub(r"\\\s*\n\s*", " ", code)
+    for line in joined.splitlines():
+        m = re.search(r"-m\s+([\w.]+)", line)
+        if not m:
+            continue
+        module = m.group(1)
+        path = os.path.join(REPO, *module.split(".")) + ".py"
+        src_path = os.path.join(REPO, "src", *module.split(".")) + ".py"
+        if not (os.path.exists(path) or os.path.exists(src_path)
+                or module == "pytest"):
+            errors.append(f"{where}: module {module} not found in repo")
+            continue
+        flags = re.findall(r"(--[\w-]+)", line[m.end():])   # after the module
+        if not flags or module not in FLAGGED_MODULES:
+            continue
+        if module not in help_cache:
+            help_cache[module] = _help_text(module)
+        for flag in flags:
+            if flag not in help_cache[module]:
+                errors.append(f"{where}: {module} does not accept {flag}")
+
+
+def check_links(text: str, where: str, errors: list):
+    for target in LINK.findall(text):
+        if re.match(r"\w+://", target):
+            continue
+        if not os.path.exists(os.path.join(REPO, target)):
+            errors.append(f"{where}: broken link -> {target}")
+
+
+def main() -> int:
+    errors: list[str] = []
+    help_cache: dict[str, str] = {}
+    for doc in DOCS:
+        path = os.path.join(REPO, doc)
+        with open(path) as f:
+            text = f.read()
+        check_links(text, doc, errors)
+        for i, (lang, code) in enumerate(fences(text)):
+            where = f"{doc}#block{i}"
+            if lang == "python":
+                check_python_block(code, where, errors)
+            elif lang in ("bash", "sh", "shell"):
+                check_bash_block(code, where, errors, help_cache)
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print(f"OK: {len(DOCS)} docs checked "
+              f"({len(help_cache)} CLI parsers interrogated)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,14 @@ checkpoint, which is what the restart loop relies on.  On multi-host each
 process writes only its addressable shards (here: one process = everything);
 ``meta.json`` records the logical layout so ``elastic.py`` can reshard on
 resume onto a different mesh.
+
+Checkpoints are *layout-free*: ``save`` gathers every (possibly mesh-
+sharded) leaf to its logical host array before writing, and ``meta.json``
+records the mesh/layout it was trained on purely as provenance.  Restoring
+therefore never depends on the saving mesh — ``restore`` yields logical
+arrays, and ``restore_sharded`` immediately re-places them for whatever
+mesh the *resuming* job runs on (2x4 -> 1x8 -> single-device all work;
+tested in tests/test_sharded_train.py).
 """
 from __future__ import annotations
 
@@ -136,3 +144,16 @@ def restore(directory: str, template: Any, step: int | None = None):
         out.append(jax.numpy.asarray(val, dtype=getattr(leaf, "dtype", None)))
     tree = jax.tree_util.tree_unflatten(treedef, out)
     return tree, step, meta
+
+
+def restore_sharded(directory: str, template: Any, spec_tree: Any, mesh,
+                    step: int | None = None):
+    """``restore`` + re-placement onto ``mesh`` with ``spec_tree``.
+
+    The saving mesh (recorded in meta.json) is irrelevant: leaves come back
+    as logical arrays and are device_put with divisibility-checked
+    NamedShardings for the *current* mesh, so elastic rescales and layout
+    changes between save and resume need no array surgery."""
+    from repro.checkpoint.elastic import reshard
+    tree, step, meta = restore(directory, template, step)
+    return reshard(tree, spec_tree, mesh), step, meta

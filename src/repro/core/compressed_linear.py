@@ -42,6 +42,11 @@ class LinearCompressionCfg:
     rank: int
     precision: jax.lax.Precision = jax.lax.Precision.DEFAULT
     backend: str = "auto"             # kernel dispatch: auto | pallas | reference
+    out_axis: str | None = None       # logical name of the OUTPUT feature dim
+                                      # ("mlp", "heads", ...) — lets mesh-aware
+                                      # dispatch size the VMEM cap against the
+                                      # per-TP-shard width; None = treat the
+                                      # dim as replicated (conservative)
 
 
 def _flatten(x: Array) -> Array:
@@ -88,7 +93,8 @@ def _asi_linear_bwd(cfg, res, cts):
     g2d = g_y.reshape(-1, g_y.shape[-1])
     # One pass over g:  exact ∂L/∂x = g·Wᵀ (paper eq. 2) and the rank-r
     # reduction R = P̂ᵀ·g — then ∂L/∂W = Q·R  ~ 2Mr(N) + 2Kr(N) FLOPs.
-    g_x2d, r = dispatch.matmul_grad_sketch(g2d, w, p_hat, backend=cfg.backend)
+    g_x2d, r = dispatch.matmul_grad_sketch(g2d, w, p_hat, backend=cfg.backend,
+                                           out_axis=cfg.out_axis)
     g_x = g_x2d.reshape(x_shape)
     g_w = q.astype(g2d.dtype) @ r.astype(g2d.dtype)
     g_b = g2d.sum(axis=0) if has_b else None
@@ -185,7 +191,8 @@ def _grouped_bwd(cfg, res, cts):
     # one pass over each expert's cotangent: exact g_x and R_e = P̂_eᵀ g_e,
     # then the per-expert low-rank weight grad  Q_e (K,r) @ R_e (r,N).
     g_x, r = dispatch.grouped_matmul_grad_sketch(g_y, w, p_hat,
-                                                 backend=cfg.backend)
+                                                 backend=cfg.backend,
+                                                 out_axis=cfg.out_axis)
     g_w = jnp.einsum("ekr,ern->ekn", q.astype(g_y.dtype),
                      r.astype(g_y.dtype))
     g_state = GroupedASIState(q=jnp.zeros_like(q))

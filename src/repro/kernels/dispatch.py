@@ -17,6 +17,14 @@ dense layer's ``jax.grad``, so ``asi_linear`` under ``reference`` produces
 bit-identical g_x to an uncompressed layer (tested in
 tests/test_fused_asi_kernels.py).
 
+Dispatch is mesh-aware: inside a ``shard_local_kernels()`` scope (kernels
+wrapped in shard_map over the TP axis) the backward kernel's VMEM cap
+(``GRAD_SKETCH_MAX_N``) is checked against the *per-shard* feature dim of
+the axis the active rules shard (see ``local_feature_dim``), so
+tensor-parallel layouts keep the fused kernel for globally-wide ffns whose
+local blocks fit.  Outside that scope the global width is used — a bare
+pallas_call under GSPMD jit receives gathered full-width operands.
+
 Kernel modes cast the small side operands (sketch factor V, subspace P̂) to
 the streamed operand's dtype: Mosaic requires matched MXU operand dtypes, and
 the fp32 accumulators make the cast harmless at sketch ranks.  Grouped (MoE
@@ -25,12 +33,16 @@ into an extra grid dimension.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.asi_sketch import matmul_grad_sketch as _grad_kernel
 from repro.kernels.asi_sketch import matmul_sketch as _fwd_kernel
+from repro.parallel import sharding as _sharding
 
 Array = jax.Array
 
@@ -42,6 +54,67 @@ BACKENDS = ("auto", "pallas", "reference")
 # reference contraction for that call.  Shapes are static, so the choice is
 # made at trace time, per linear.
 GRAD_SKETCH_MAX_N = 16384
+
+
+# Per-shard VMEM accounting is only sound when the fused kernels execute on
+# actual shards — i.e. inside a shard_map over the TP axis.  A bare
+# pallas_call in a GSPMD-partitioned jit (our training pipeline) receives
+# gathered FULL-WIDTH operands, so relaxing the cap there would admit
+# kernels whose R strip overflows VMEM on real TPUs.  Deployments that wrap
+# the kernels in shard_map opt in with ``shard_local_kernels()``.
+# Thread-local, matching the sibling axis_rules state in parallel/sharding.
+_LOCAL_STATE = threading.local()
+
+
+def _shard_local() -> bool:
+    return getattr(_LOCAL_STATE, "shard_local", False)
+
+
+@contextlib.contextmanager
+def shard_local_kernels(enabled: bool = True):
+    """Declare that fused kernels run inside shard_map over the TP axis, so
+    mesh-aware dispatch may size the VMEM cap against per-shard widths."""
+    prev = _shard_local()
+    _LOCAL_STATE.shard_local = enabled
+    try:
+        yield
+    finally:
+        _LOCAL_STATE.shard_local = prev
+
+
+def local_feature_dim(n: int, out_axis: str | None = None) -> int:
+    """Column count of an ``n``-wide output-feature dim as the kernel will
+    actually see it, given the active ``axis_rules`` context (mesh-aware
+    dispatch).
+
+    Traced shapes are *global*; inside a ``shard_map`` over the TP axis a
+    device only materializes ``n / tp`` columns of a dim the rules actually
+    shard, so the VMEM cap may be checked against the local block — a
+    TP-sharded 64k-wide ffn then keeps the fused kernel because every
+    8k-wide shard fits the R strip.  The TP factor is the mesh-axis size the
+    rules map ``out_axis`` to.  Everything else means factor 1 — never
+    assume a dim is narrower than the kernel will receive: outside a
+    ``shard_local_kernels`` scope (GSPMD jit gathers pallas_call operands to
+    full width), with an ``out_axis`` of None (caller doesn't know — e.g.
+    o/down projections whose d_model output is replicated under TP), with no
+    rules context, an unmapped axis, or a non-divisible dim (safe_spec would
+    replicate it).
+    """
+    ctx = _sharding._current()
+    if ctx is None or out_axis is None or not _shard_local():
+        return n
+    mesh, rules = ctx
+    ax = rules.get(out_axis)
+    if ax is None:
+        return n
+    k = _sharding._mesh_axis_size(mesh, ax)
+    return n // k if (k > 1 and n % k == 0) else n
+
+
+def _grad_fits_vmem(n: int, out_axis: str | None = None) -> bool:
+    """True when the backward kernel's R strip fits for a per-shard block of
+    the ``n``-column global output."""
+    return local_feature_dim(n, out_axis) <= GRAD_SKETCH_MAX_N
 
 
 def resolve(backend: str = "auto") -> str:
@@ -74,12 +147,14 @@ def matmul_sketch(x: Array, w: Array, v: Array, *, backend: str = "auto",
 
 
 def matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *,
-                       backend: str = "auto", **kw):
+                       backend: str = "auto", out_axis: str | None = None,
+                       **kw):
     """Fused backward:  (g_x = g·Wᵀ in g.dtype, R = P̂ᵀ·g in fp32), one pass
-    over g.  ``w`` is the forward-layout (K, N) weight."""
+    over g.  ``w`` is the forward-layout (K, N) weight.  ``out_axis`` is the
+    logical name of g's feature dim for the mesh-aware VMEM cap."""
     mode = resolve(backend)
     w = w.astype(g.dtype)
-    if mode == "reference" or g.shape[-1] > GRAD_SKETCH_MAX_N:
+    if mode == "reference" or not _grad_fits_vmem(g.shape[-1], out_axis):
         # Same contraction (and dtype) jax.grad emits for the dense layer:
         # bit-identical g_x, plus the fp32 rank-r reduction.
         g_x = g @ w.T
@@ -105,7 +180,8 @@ def grouped_matmul_sketch(x: Array, w: Array, v: Array, *,
 
 
 def grouped_matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *,
-                               backend: str = "auto", **kw):
+                               backend: str = "auto",
+                               out_axis: str | None = None, **kw):
     """Per-expert fused backward: g (E, T, N), w (E, K, N), p_hat (E, T, r)."""
     mode = resolve(backend)
     w = w.astype(g.dtype)
@@ -114,7 +190,7 @@ def grouped_matmul_grad_sketch(g: Array, w: Array, p_hat: Array, *,
         r = jnp.einsum("etr,etn->ern", p_hat.astype(g.dtype), g,
                        preferred_element_type=jnp.float32)
         return g_x, r
-    if g.shape[-1] > GRAD_SKETCH_MAX_N:
+    if not _grad_fits_vmem(g.shape[-1], out_axis):
         return grouped_matmul_grad_sketch(g, w, p_hat, backend="reference")
     kw.setdefault("interpret", mode == "interpret")
     return jax.vmap(lambda ge, we, pe: _grad_kernel(ge, we, pe, **kw))(

@@ -319,7 +319,7 @@ def main(argv=None):
     ap.add_argument("--seq-tp", action="store_true")
     ap.add_argument("--param-dtype", default=None,
                     choices=("float32", "bfloat16"))
-    ap.add_argument("--layout", default="tp", choices=("tp", "fsdp"))
+    ap.add_argument("--layout", default="tp", choices=("tp", "fsdp", "dp"))
     ap.add_argument("--kv-cache-dtype", default=None, choices=("int8",))
     ap.add_argument("--no-unroll", action="store_true",
                     help="keep the layer scan rolled (fallback for compile-"

@@ -1,8 +1,20 @@
-"""Production meshes.
+"""Mesh construction for every launcher (train / serve / dryrun).
 
 Functions, not module-level constants — importing this module never touches
 jax device state (required: smoke tests must see 1 device; only dryrun.py
 sets the 512-placeholder-device XLA flag before importing jax).
+
+Axis conventions (shared with ``repro.parallel``):
+
+* ``data``  — batch / FSDP shards travel here.
+* ``model`` — tensor-parallel shards (heads, ffn, vocab, experts).
+* ``pod``   — optional leading axis for cross-pod data parallelism.
+
+``make_layout_mesh`` is the entry the ``--layout {dp,fsdp,tp}`` training
+flag uses: it folds all visible devices into a (data, model) mesh whose
+split matches the layout, so reduced CPU runs (with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and real
+accelerator runs take the same code path.
 """
 from __future__ import annotations
 
@@ -25,3 +37,22 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     devices)."""
     n = int(np.prod(shape))
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_layout_mesh(layout: str = "dp",
+                     shape: tuple[int, int] | None = None) -> Mesh:
+    """(data, model) mesh over the visible devices, split to fit ``layout``.
+
+    Without an explicit ``shape``: ``dp``/``fsdp`` put every device on the
+    data axis (model=1 — fsdp shards weights over the *batch* axes, so it
+    needs no model axis either); ``tp`` puts every device on the model axis.
+    A ``shape`` override (e.g. ``(2, 4)`` from ``--mesh 2,4``) wins, letting
+    tests exercise mixed data x model meshes.
+    """
+    n = len(jax.devices())
+    if shape is None:
+        shape = (1, n) if layout == "tp" else (n, 1)
+    if int(np.prod(shape)) > n:
+        raise ValueError(f"mesh shape {shape} needs {int(np.prod(shape))} "
+                         f"devices; only {n} visible")
+    return make_mesh(tuple(shape), ("data", "model"))

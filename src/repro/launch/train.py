@@ -7,6 +7,15 @@ function the dry-run lowers — one code path from laptop to pod.
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --steps 200 --compress asi --ckpt-dir /tmp/ckpt
 
+Mesh-sharded training: ``--layout {dp,fsdp,tp}`` builds a (data, model) mesh
+over all visible devices (override the split with ``--mesh D,M``), shards
+params / optimizer state / batches per ``repro.parallel.partition``, and
+``--grad-accum N`` scans N microbatches per step.  Validate on CPU with
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train --arch tinyllama-1.1b --reduced \
+      --steps 20 --layout fsdp --grad-accum 2
+
 On a real cluster this binary is started once per host under the usual
 jax.distributed initialization; XLA latency-hiding flags below overlap
 collectives with compute.
@@ -29,10 +38,12 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCHS, get_config
 from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.launch.mesh import make_layout_mesh
 from repro.models import build_model
 from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import warmup_cosine
-from repro.runtime.train_loop import TrainLoopCfg, make_train_step, run
+from repro.runtime.train_loop import (TrainLoopCfg, make_mesh_plan,
+                                      make_train_step, run)
 
 
 def build_data(cfg: ModelConfig, seq_len: int, global_batch: int, seed: int):
@@ -57,7 +68,8 @@ def build_data(cfg: ModelConfig, seq_len: int, global_batch: int, seed: int):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="Full flag matrix, quickstart and architecture map: README.md")
     ap.add_argument("--arch", choices=ARCHS, required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
@@ -71,6 +83,15 @@ def main(argv=None):
                     help="fused ASI kernel dispatch (see repro.kernels.dispatch)")
     ap.add_argument("--asi-rank", type=int, default=None)
     ap.add_argument("--asi-last-k", type=int, default=None)
+    ap.add_argument("--layout", default=None, choices=("dp", "fsdp", "tp"),
+                    help="mesh-sharded training over all visible devices; "
+                         "omit for the single-device step")
+    ap.add_argument("--mesh", default=None, metavar="D,M",
+                    help="data,model axis sizes overriding the --layout "
+                         "default split (e.g. 2,4)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatches accumulated per optimizer step "
+                         "(lax.scan inside the jitted step)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", type=int, default=-1,
@@ -99,17 +120,43 @@ def main(argv=None):
         warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps),
         clip_norm=2.0)                      # paper: L2 clip threshold 2.0
     opt_state = opt.init(params)
+    data = build_data(cfg, args.seq_len, args.batch, args.seed)
+    if args.grad_accum < 1:
+        ap.error(f"--grad-accum {args.grad_accum} must be >= 1")
+    if args.batch % args.grad_accum != 0:
+        ap.error(f"--batch {args.batch} must divide by "
+                 f"--grad-accum {args.grad_accum}")
+    if args.mesh is not None and args.layout is None:
+        ap.error("--mesh requires --layout (it only shapes a layout's mesh)")
+    shape = None
+    if args.mesh is not None:
+        try:
+            shape = tuple(int(x) for x in args.mesh.split(","))
+        except ValueError:
+            shape = ()
+        if len(shape) != 2:
+            ap.error(f"--mesh {args.mesh!r} must be two comma-separated "
+                     f"ints: data,model (e.g. 2,4)")
+    plan = None
+    if args.layout is not None:
+        mesh = make_layout_mesh(args.layout, shape)
+        plan = make_mesh_plan(cfg, mesh, args.layout, params, opt_state,
+                              asi_state, data.batch(0))
+        print(json.dumps({"mesh": dict(mesh.shape), "layout": args.layout,
+                          "n_devices": mesh.size,
+                          "grad_accum": args.grad_accum}))
     step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
                               trainable_mask=mask,
-                              kernel_backend=cfg.kernel_backend)
-    data = build_data(cfg, args.seq_len, args.batch, args.seed)
+                              kernel_backend=cfg.kernel_backend,
+                              plan=plan, grad_accum=args.grad_accum)
     loop_cfg = TrainLoopCfg(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                             ckpt_every=args.ckpt_every,
                             fail_at_step=args.fail_at)
     res = run(step_fn, params, opt_state, asi_state, data, loop_cfg,
               hooks={"on_log": lambda s, m: print(
                   json.dumps({"step": s, **{k: round(v, 4)
-                                            for k, v in m.items()}}))})
+                                            for k, v in m.items()}}))},
+              plan=plan)
     print(json.dumps({"final_step": res.step, "restarts": res.restarts,
                       "stragglers": len(res.straggler_steps),
                       "final_loss": round(res.history[-1]["loss"], 4)}))

@@ -39,9 +39,13 @@ def attn_init(key: Array, cfg: ModelConfig, dtype) -> dict:
 
 
 def _project(params, x, cfg, asi_state, new_state, names=("wq", "wk", "wv")):
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
+    # output dims: wq -> heads*hd ("heads"), wk/wv -> kv*hd ("kv") — both
+    # TP-sharded, so mesh-aware dispatch may size the VMEM cap per shard
     outs = []
     for n in names:
+        ccfg = LinearCompressionCfg(rank=cfg.asi_rank,
+                                    backend=cfg.kernel_backend,
+                                    out_axis="heads" if n == "wq" else "kv")
         b = params.get("b" + n[1])
         if asi_state is not None and n in asi_state:
             if cfg.compress == "hosvd":
@@ -161,6 +165,8 @@ def attn_forward(params: dict, x: Array, cfg: ModelConfig,
     o = chunked_attention(q, k, v, causal=causal, window=cfg.sliding_window,
                           q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
     o = o.reshape(B, S, h * hd)
+    # wo's output dim is d_model — replicated under TP (out_axis=None keeps
+    # the VMEM cap at the full width)
     ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
     if asi_state is not None and "wo" in asi_state:
         if cfg.compress == "hosvd":

@@ -140,6 +140,10 @@ def decode_train(params: dict, tokens: Array, enc_out: Array,
 
 def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
             asi_state: dict | None = None):
+    # anchor the batch on the data axes even when the caller did not
+    # device_put it (no-op outside an axis_rules context)
+    batch = {k: logical_shard(v, "batch", *([None] * (v.ndim - 1)))
+             for k, v in batch.items()}
     enc_out = encode(params, batch["frames"], cfg)
     if cfg.compress != "none":
         enc_out = jax.lax.stop_gradient(enc_out)     # frozen encoder backbone

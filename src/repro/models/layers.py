@@ -99,9 +99,13 @@ def mlp_apply(params: dict, x: Array, cfg: ModelConfig,
     """Returns (y, new_asi_state).  When ``asi_state`` is given the up/gate/
     down projections store ASI-compressed activations (paper §3.4)."""
     new_state = {}
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
 
     def lin(name, inp, w, b=None):
+        # up/gate emit the TP-sharded d_ff ("mlp") dim; down emits the
+        # replicated d_model dim (out_axis=None)
+        ccfg = LinearCompressionCfg(rank=cfg.asi_rank,
+                                    backend=cfg.kernel_backend,
+                                    out_axis="mlp" if name != "down" else None)
         if asi_state is not None and name in asi_state:
             if cfg.compress == "hosvd":     # per-step SVD baseline
                 new_state[name] = asi_state[name]

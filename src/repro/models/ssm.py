@@ -113,7 +113,10 @@ def mamba_forward(params: dict, u: Array, cfg: ModelConfig,
     B, S, d = u.shape
     din, h, n, p = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
     new_asi: dict = {}
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
+    # in_proj's fused zxbcdt output shards with the SSD heads under TP;
+    # out_proj emits the replicated d_model dim (out_axis=None below)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend,
+                                out_axis="heads")
     if asi_state is not None and "in_proj" in asi_state:
         zxbcdt, ns = asi_linear(ccfg, u, params["in_proj"], None,
                                 asi_state["in_proj"])
@@ -137,7 +140,9 @@ def mamba_forward(params: dict, u: Array, cfg: ModelConfig,
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
     y = rms_norm(y, params["norm"], cfg.norm_eps)
     if asi_state is not None and "out_proj" in asi_state:
-        out, ns = asi_linear(ccfg, y, params["out_proj"], None,
+        out_ccfg = LinearCompressionCfg(rank=cfg.asi_rank,
+                                        backend=cfg.kernel_backend)
+        out, ns = asi_linear(out_ccfg, y, params["out_proj"], None,
                              asi_state["out_proj"])
         new_asi["out_proj"] = ns
     else:

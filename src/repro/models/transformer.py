@@ -226,6 +226,10 @@ def forward(params: dict, tokens: Array, cfg: ModelConfig,
 def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
             asi_state: dict | None = None):
     """Next-token cross-entropy.  batch: {'tokens','targets'} (+ 'embeds')."""
+    # anchor the batch on the data axes even when the caller did not
+    # device_put it (no-op outside an axis_rules context)
+    batch = {k: logical_shard(v, "batch", *([None] * (v.ndim - 1)))
+             for k, v in batch.items()}
     logits, aux, new_asi = forward(params, batch["tokens"], cfg, asi_state,
                                    batch.get("embeds"))
     targets = batch["targets"]

@@ -57,6 +57,8 @@ def compressed_psum(g: Array, state: PowerSGDState, axis_name: str
 
 
 def dense_psum(g: Array, axis_name: str) -> Array:
+    """Uncompressed mean all-reduce — the baseline, and the path small
+    (norm/bias) leaves always take."""
     return jax.lax.pmean(g, axis_name)
 
 
@@ -82,6 +84,8 @@ def compressed_psum_tree(grads: Any, states: dict[str, PowerSGDState],
 
 def init_states_for(grads_struct: Any, key: Array, rank: int
                     ) -> dict[str, PowerSGDState]:
+    """One PowerSGDState per >=2-D leaf of ``grads_struct``, keyed by flat
+    path — the dict ``compressed_psum_tree`` consumes."""
     flat, _ = jax.tree_util.tree_flatten_with_path(grads_struct)
     states = {}
     for path, g in flat:
@@ -97,6 +101,7 @@ def init_states_for(grads_struct: Any, key: Array, rank: int
 
 
 def wire_bytes_dense(shape, dtype_bytes: int = 4) -> int:
+    """Bytes a dense all-reduce moves per step for one gradient leaf."""
     n = 1
     for d in shape:
         n *= d
@@ -104,6 +109,7 @@ def wire_bytes_dense(shape, dtype_bytes: int = 4) -> int:
 
 
 def wire_bytes_compressed(shape, rank: int, dtype_bytes: int = 4) -> int:
+    """Bytes the rank-``rank`` compressed all-reduce moves (P plus Q)."""
     d_in = 1
     for d in shape[:-1]:
         d_in *= d

@@ -27,19 +27,26 @@ from repro.parallel.sharding import safe_spec
 
 MODEL = "model"
 
-# Layout selector: 'tp' (Megatron TP x DP, default) or 'fsdp' (ZeRO-3: all
-# mesh axes shard batch+weights, no tensor parallelism).  A hillclimb lever —
-# set via set_layout() before building specs (dryrun --layout fsdp).
+# Layout selector: 'tp' (Megatron TP x DP, default), 'fsdp' (ZeRO-3: all
+# mesh axes shard batch+weights, no tensor parallelism) or 'dp' (replicate
+# weights, shard only the batch).  A hillclimb lever — set via set_layout()
+# before building specs (dryrun/train --layout fsdp).
 LAYOUT = "tp"
 
 
 def set_layout(name: str):
+    """Set the module-global layout consumed by the ``*_specs`` builders.
+
+    Must be called before building specs; ``runtime.train_loop.make_mesh_plan``
+    does this for you."""
     global LAYOUT
-    assert name in ("tp", "fsdp")
+    assert name in ("tp", "fsdp", "dp")
     LAYOUT = name
 
 
 def batch_axes(mesh: Mesh):
+    """Mesh axes the batch dim shards over: the data axes, plus ``model``
+    under FSDP (every device holds a distinct microbatch slice)."""
     base = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     if LAYOUT == "fsdp":
         base = base + (MODEL,)
@@ -47,6 +54,8 @@ def batch_axes(mesh: Mesh):
 
 
 def _fsdp(cfg: ModelConfig, mesh: Mesh):
+    if LAYOUT == "dp":          # dp replicates weights even for fsdp-flagged
+        return None             # configs — it is the parity oracle
     return batch_axes(mesh) if (cfg.fsdp or LAYOUT == "fsdp") else None
 
 
@@ -108,12 +117,16 @@ def _param_rule(name: str, ndim: int, cfg: ModelConfig, mesh: Mesh) -> P:
 
 
 def param_specs(cfg: ModelConfig, params_struct: Any, mesh: Mesh):
+    """PartitionSpec tree for a parameter pytree (structure from the concrete
+    params or an ``eval_shape`` of ``api.init``).  Under ``fsdp``/``dp`` the
+    TP (``model``) placements are stripped: fsdp re-shards weights over the
+    batch axes instead; dp replicates them."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params_struct)
     out = []
     for path, leaf in flat:
         name = _leaf_name(path)
         spec = _param_rule(name, len(leaf.shape), cfg, mesh)
-        if LAYOUT == "fsdp":
+        if LAYOUT in ("fsdp", "dp"):
             spec = _strip_model(spec)
         out.append(safe_spec(leaf.shape, spec, mesh))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -138,7 +151,7 @@ def opt_specs(cfg: ModelConfig, opt_struct: Any, mesh: Mesh):
         elif marker == "vc":          # param spec minus second-to-last dim
             axes = axes[:-2] + axes[-1:]
         spec2 = P(*axes)
-        if LAYOUT == "fsdp":
+        if LAYOUT in ("fsdp", "dp"):
             spec2 = _strip_model(spec2)
         out.append(safe_spec(leaf.shape, spec2, mesh))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -151,6 +164,8 @@ def asi_specs(asi_struct: Any, mesh: Mesh):
 
 
 def batch_specs(cfg: ModelConfig, batch_struct: Any, mesh: Mesh):
+    """Shard dim 0 (batch) of every batch leaf over ``batch_axes``; a batch
+    that does not divide the axes degrades to replication via safe_spec."""
     ba = batch_axes(mesh)
 
     def rule(leaf):
@@ -190,5 +205,7 @@ def cache_specs(cfg: ModelConfig, cache_struct: Any, mesh: Mesh):
 
 
 def to_shardings(spec_tree: Any, mesh: Mesh):
+    """Materialize a PartitionSpec tree into NamedShardings (jit
+    in_shardings/out_shardings take these directly)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

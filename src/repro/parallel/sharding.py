@@ -1,6 +1,23 @@
 """Logical-axis sharding: models annotate tensors with logical names; a
 rules context maps names to mesh axes (t5x/MaxText style), so the same model
 code runs on a laptop (no rules -> no-op) and on a 512-chip multi-pod mesh.
+
+Usage (see DESIGN.md §6 and examples/train_sharded.py):
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with axis_rules(mesh, rules_for(mesh, layout="tp")):
+        logits = jit_step(params, batch)   # logical_shard calls now resolve
+
+The logical vocabulary (``batch``, ``heads``, ``kv``, ``mlp``, ``vocab``,
+``experts``, ...) is fixed; a *layout* is one mapping from that vocabulary to
+mesh axes.  Three canonical layouts ship here:
+
+* ``dp``   — pure data parallelism: only ``batch`` is sharded, weights are
+             replicated.  Bit-identical losses to single-device (same
+             contraction per example), so it doubles as the parity oracle.
+* ``tp``   — Megatron tensor parallelism x DP (``single_pod_rules`` /
+             ``multi_pod_rules``): head/ffn/vocab/expert dims on ``model``.
+* ``fsdp`` — ZeRO-3: every mesh axis shards batch *and* weights, no TP.
 """
 from __future__ import annotations
 
@@ -30,6 +47,10 @@ def axis_rules(mesh: Mesh, rules: dict[str, Optional[str | tuple[str, ...]]]):
 
 
 def resolve(*names: Optional[str]) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    Outside any ``axis_rules`` context every name resolves to ``None``
+    (replicated) — this is what lets the same model code run unsharded."""
     ctx = _current()
     if ctx is None:
         return P(*[None] * len(names))
@@ -75,7 +96,22 @@ def logical_shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
 
 # Canonical rule sets ---------------------------------------------------------
 
+def dp_rules(multi_pod: bool = False) -> dict:
+    """Pure data parallelism: shard only the batch; replicate all weights.
+
+    Per-example compute is identical to single-device (no contraction is
+    split), so dp losses are bit-identical to the unsharded step — the
+    parity oracle tests/test_sharded_train.py gates on."""
+    ba = ("pod", "data") if multi_pod else "data"
+    return {"batch": ba, "fsdp": None, "seq": None, "long_seq": None,
+            "model": None, "heads": None, "kv": None, "mlp": None,
+            "vocab": None, "experts": None, "embed": None,
+            "cache_seq": None, "seq_tp": None}
+
+
 def single_pod_rules() -> dict:
+    """Megatron TP x DP on a (data, model) mesh: head/ffn/vocab/expert dims
+    shard over ``model``; the batch over ``data``."""
     return {
         "batch": "data", "fsdp": "data", "seq": None, "long_seq": "data",
         "model": "model", "heads": "model", "kv": "model", "mlp": "model",
@@ -85,6 +121,7 @@ def single_pod_rules() -> dict:
 
 
 def multi_pod_rules() -> dict:
+    """``single_pod_rules`` with the batch additionally split over ``pod``."""
     return {
         "batch": ("pod", "data"), "fsdp": ("pod", "data"), "seq": None,
         "long_seq": "data", "model": "model", "heads": "model", "kv": "model",
@@ -102,7 +139,21 @@ def fsdp_rules(multi_pod: bool) -> dict:
             "cache_seq": None, "seq_tp": None}
 
 
+LAYOUTS = ("dp", "tp", "fsdp")
+
+
 def rules_for(mesh: Mesh, layout: str = "tp") -> dict:
+    """Select the canonical rule set for ``layout`` on ``mesh``.
+
+    ``dp`` -> ``dp_rules``; ``fsdp`` -> ``fsdp_rules``; ``tp`` (default) ->
+    ``single_pod_rules`` or ``multi_pod_rules`` depending on whether the mesh
+    has a ``pod`` axis.  Unknown layouts raise (a typo must not silently
+    train replicated)."""
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout={layout!r}; expected one of {LAYOUTS}")
+    multi = "pod" in mesh.axis_names
+    if layout == "dp":
+        return dp_rules(multi)
     if layout == "fsdp":
-        return fsdp_rules("pod" in mesh.axis_names)
-    return multi_pod_rules() if "pod" in mesh.axis_names else single_pod_rules()
+        return fsdp_rules(multi)
+    return multi_pod_rules() if multi else single_pod_rules()

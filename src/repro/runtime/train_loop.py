@@ -12,22 +12,39 @@ Design for 1000+ nodes (SPMD): every step is deterministic in (params, step)
   decision signal is implemented; the eviction itself belongs to the
   cluster manager);
 * elastic rescale   -> checkpoints are layout-free (see checkpoint/elastic),
-  so resuming on a different mesh Just Works.
+  so resuming on a different mesh Just Works: the loop restores logical
+  arrays and re-places them for whatever MeshPlan the resuming job built
+  (save on 2x4, resume on 1x8 or single-device — tested).
+
+Mesh-sharded training: build a ``MeshPlan`` (``make_mesh_plan``) from a mesh
+and a layout (``dp`` | ``fsdp`` | ``tp``), pass it to ``make_train_step`` and
+``run``.  The plan carries the PartitionSpec trees for params / optimizer
+state / ASI state / batches (from ``repro.parallel.partition``) plus the
+logical-axis rules the model's ``logical_shard`` annotations resolve
+against.  ``make_train_step`` turns the specs into jit in/out shardings with
+buffer donation, so FSDP genuinely frees per-device parameter+optimizer
+memory, and microbatch gradient accumulation (``grad_accum``) runs as a
+``lax.scan`` inside the jitted step — composing the ASI activation-memory
+win with large effective batches.
 """
 from __future__ import annotations
 
 import bisect
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
-from repro.checkpoint import checkpointer
+from repro.checkpoint import checkpointer, elastic
 from repro.kernels import dispatch
 from repro.optim.optimizers import Optimizer
+from repro.parallel import partition
+from repro.parallel.sharding import axis_rules, rules_for
 
 Array = jax.Array
 
@@ -48,30 +65,140 @@ class TrainLoopCfg:
     keep_ckpts: int = 3
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """One layout on one mesh: the rules + PartitionSpec trees the loop and
+    the jitted step need to shard every array they touch."""
+    mesh: Mesh
+    layout: str                  # dp | fsdp | tp
+    rules: dict                  # logical-axis rules for model annotations
+    param_specs: Any
+    opt_specs: Any
+    asi_specs: Any
+    batch_specs: Any
+
+    def activate(self):
+        """Context manager enabling the model's ``logical_shard`` calls —
+        must wrap tracing (i.e. the first call) of the jitted step."""
+        return axis_rules(self.mesh, self.rules)
+
+    def shard_state(self, params, opt_state, asi_state):
+        """device_put the training state with its plan shardings."""
+        return (elastic.reshard(params, self.param_specs, self.mesh),
+                elastic.reshard(opt_state, self.opt_specs, self.mesh),
+                elastic.reshard(asi_state, self.asi_specs, self.mesh))
+
+    def shard_batch(self, batch):
+        return elastic.reshard(batch, self.batch_specs, self.mesh)
+
+    def meta(self) -> dict:
+        """Provenance recorded in checkpoint meta.json (restore never needs
+        it — checkpoints are layout-free)."""
+        return {"mesh": dict(self.mesh.shape), "layout": self.layout}
+
+
+def make_mesh_plan(cfg, mesh: Mesh, layout: str, params, opt_state,
+                   asi_state, batch) -> MeshPlan:
+    """Build the spec trees for one (mesh, layout) from the concrete training
+    state (or ``eval_shape`` structures — only shapes are read).
+
+    ``partition.LAYOUT`` is a module global the spec builders read; it is
+    restored afterwards so building a plan never leaks its layout into
+    unrelated spec building (dryrun, serving, a second plan)."""
+    prev = partition.LAYOUT
+    partition.set_layout(layout)
+    try:
+        rules = rules_for(mesh, layout)
+        return MeshPlan(
+            mesh=mesh, layout=layout, rules=rules,
+            param_specs=partition.param_specs(cfg, params, mesh),
+            opt_specs=partition.opt_specs(cfg, opt_state, mesh),
+            asi_specs=partition.asi_specs(asi_state, mesh),
+            batch_specs=partition.batch_specs(cfg, batch, mesh))
+    finally:
+        partition.set_layout(prev)
+
+
 def make_train_step(loss_fn: Callable, optimizer: Optimizer,
                     trainable_mask=None, donate: bool = True,
-                    kernel_backend: str | None = None):
+                    kernel_backend: str | None = None,
+                    plan: MeshPlan | None = None, grad_accum: int = 1):
     """loss_fn(params, batch, asi_state) -> (loss, (metrics, new_asi_state)).
 
     ``kernel_backend`` is the model's fused-ASI dispatch flag; passing it here
     resolves it once up front, so an invalid flag aborts before the first
     (expensive) compile instead of deep inside the traced step.
+
+    With a ``plan``, the step is jitted with explicit in/out NamedShardings
+    from the plan's spec trees (donation then recycles the sharded buffers
+    in place — this is what makes FSDP actually free per-device memory).
+
+    ``grad_accum > 1`` splits the batch into that many microbatches and runs
+    them as a ``lax.scan`` inside the step: gradients accumulate in fp32,
+    the ASI subspace state threads through the scan (each microbatch warm-
+    starts the next, exactly like consecutive steps would), and the
+    optimizer applies the mean gradient once.  Peak activation memory is
+    that of ONE microbatch, so effective batch scales without touching the
+    activation budget ASI already compressed.
     """
     if kernel_backend is not None:
         dispatch.resolve(kernel_backend)
+    if grad_accum < 1:
+        raise ValueError(f"grad_accum={grad_accum} must be >= 1")
 
-    def train_step(params, opt_state, asi_state, batch, step):
+    def grads_of(params, asi_state, batch):
         (loss, (metrics, new_asi)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch, asi_state)
-        new_params, new_opt = optimizer.update(grads, opt_state, params, step,
-                                               trainable_mask)
         metrics = dict(metrics)
         metrics["loss"] = loss
-        return new_params, new_opt, (new_asi if new_asi is not None
-                                     else asi_state), metrics
+        return grads, (new_asi if new_asi is not None else asi_state), metrics
 
-    return jax.jit(train_step,
-                   donate_argnums=(0, 1, 2) if donate else ())
+    def train_step(params, opt_state, asi_state, batch, step):
+        if grad_accum == 1:
+            grads, asi_state, metrics = grads_of(params, asi_state, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            if plan is not None:
+                # keep the microbatch dim (now dim 1) on the batch axes; the
+                # leading scan dim is replicated.  safe_spec degrades to
+                # replication when B/grad_accum stops dividing the axes.
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                from repro.parallel.sharding import safe_spec
+
+                def constrain(x, s):
+                    spec = safe_spec(x.shape, P(None, *tuple(s)), plan.mesh)
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(plan.mesh, spec))
+                micro = jax.tree.map(constrain, micro, plan.batch_specs)
+
+            def body(carry, mb):
+                acc, asi = carry
+                g, asi, m = grads_of(params, asi, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, asi), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, asi_state), ms = jax.lax.scan(
+                body, (zeros, asi_state), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), ms)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step,
+                                               trainable_mask)
+        return new_params, new_opt, asi_state, metrics
+
+    jit_kw: dict = {"donate_argnums": (0, 1, 2) if donate else ()}
+    if plan is not None:
+        sh = lambda specs: partition.to_shardings(specs, plan.mesh)  # noqa: E731
+        jit_kw["in_shardings"] = (sh(plan.param_specs), sh(plan.opt_specs),
+                                  sh(plan.asi_specs), sh(plan.batch_specs),
+                                  None)
+        jit_kw["out_shardings"] = (sh(plan.param_specs), sh(plan.opt_specs),
+                                   sh(plan.asi_specs), None)
+    return jax.jit(train_step, **jit_kw)
 
 
 class WindowedMedian:
@@ -109,23 +236,49 @@ class TrainResult:
 
 
 def run(train_step, init_params, init_opt_state, init_asi_state, data,
-        cfg: TrainLoopCfg, hooks: dict | None = None) -> TrainResult:
-    """Restartable training.  ``data.batch(step)`` must be pure in step."""
+        cfg: TrainLoopCfg, hooks: dict | None = None,
+        plan: MeshPlan | None = None) -> TrainResult:
+    """Restartable training.  ``data.batch(step)`` must be pure in step.
+
+    With a ``plan`` the loop (a) device_puts the initial state with the
+    plan's shardings, (b) re-places every restored checkpoint for the
+    *current* mesh (``checkpointer.restore_sharded``) — which is what makes
+    resuming on a different mesh Just Work — and (c) keeps the model's
+    logical-axis rules active so ``logical_shard`` annotations resolve while
+    the step traces."""
     hooks = hooks or {}
+    ckpt_meta = plan.meta() if plan is not None else None
+    ctx = plan.activate() if plan is not None else contextlib.nullcontext()
+
+    with ctx:
+        return _run_inner(train_step, init_params, init_opt_state,
+                          init_asi_state, data, cfg, hooks, plan, ckpt_meta)
+
+
+def _run_inner(train_step, init_params, init_opt_state, init_asi_state, data,
+               cfg: TrainLoopCfg, hooks, plan, ckpt_meta) -> TrainResult:
     restarts = 0
     history: list = []
     stragglers: list = []
-
     while True:
         try:
             start = checkpointer.latest_step(cfg.ckpt_dir)
             if start is None:
                 params, opt_state, asi_state, step = (
                     init_params, init_opt_state, init_asi_state, 0)
+                if plan is not None:
+                    params, opt_state, asi_state = plan.shard_state(
+                        params, opt_state, asi_state)
             else:
                 tpl = {"params": init_params, "opt": init_opt_state,
                        "asi": init_asi_state}
-                tree, step, _ = checkpointer.restore(cfg.ckpt_dir, tpl)
+                if plan is not None:
+                    specs = {"params": plan.param_specs,
+                             "opt": plan.opt_specs, "asi": plan.asi_specs}
+                    tree, step, _ = checkpointer.restore_sharded(
+                        cfg.ckpt_dir, tpl, specs, plan.mesh)
+                else:
+                    tree, step, _ = checkpointer.restore(cfg.ckpt_dir, tpl)
                 params, opt_state, asi_state = (tree["params"], tree["opt"],
                                                 tree["asi"])
             durations = WindowedMedian()
@@ -134,6 +287,8 @@ def run(train_step, init_params, init_opt_state, init_asi_state, data,
                     raise SimulatedFailure(f"injected at step {step}")
                 t0 = time.perf_counter()
                 batch = data.batch(step)
+                if plan is not None:
+                    batch = plan.shard_batch(batch)
                 params, opt_state, asi_state, metrics = train_step(
                     params, opt_state, asi_state, batch, jnp.int32(step))
                 # dt times dispatch (plus any queue backpressure), not
@@ -159,7 +314,7 @@ def run(train_step, init_params, init_opt_state, init_asi_state, data,
                     checkpointer.save(
                         cfg.ckpt_dir, step,
                         {"params": params, "opt": opt_state, "asi": asi_state},
-                        keep=cfg.keep_ckpts)
+                        meta=ckpt_meta, keep=cfg.keep_ckpts)
             return TrainResult(params, opt_state, asi_state, step, history,
                                restarts, stragglers)
         except SimulatedFailure:

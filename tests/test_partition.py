@@ -105,6 +105,38 @@ def test_cache_specs_kv_or_seq_sharded():
         assert tuple(spec)[3] == "model", path   # kv-head dim sharded
 
 
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "jamba-1.5-large-398b"])
+def test_param_specs_dp_layout_replicates_weights(arch):
+    """Under --layout dp every parameter is replicated (no model/data axis
+    in any spec) while the batch still shards over data — including for
+    configs that set cfg.fsdp=True (jamba), which dp must override: it is
+    the parity oracle."""
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    partition.set_layout("dp")
+    try:
+        specs = partition.param_specs(cfg, struct, MESH)
+        for spec in jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: isinstance(x, P)):
+            assert all(ax is None for ax in tuple(spec)), spec
+        assert partition.batch_axes(MESH) == "data"
+        batch = {"tokens": jax.ShapeDtypeStruct((32, 64), jnp.int32)}
+        bspecs = partition.batch_specs(cfg, batch, MESH)
+        assert tuple(bspecs["tokens"])[0] == "data"
+    finally:
+        partition.set_layout("tp")
+
+
+def test_fsdp_layout_shards_batch_over_all_axes():
+    partition.set_layout("fsdp")
+    try:
+        assert partition.batch_axes(MESH) == ("data", "model")
+        assert partition.batch_axes(MESH_MP) == ("pod", "data", "model")
+    finally:
+        partition.set_layout("tp")
+
+
 def test_batch_specs_handle_batch_one():
     cfg = get_config("mamba2-130m")
     batch = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
