@@ -1,0 +1,130 @@
+"""Paper headline table: activation memory of vanilla / HOSVD_ε / ASI-shortcut
+training, priced by the on-device ledger on paper shapes.
+
+For each architecture the ledger enumerates the fine-tuned tail's compressed
+sites at the paper's TinyLlama fine-tuning shape (B=8, S≤512, rank 20 —
+Table 4) and reports total and per-site activation bytes.  The target is the
+paper's up-to-120.09x regime: on TinyLlama's down-projection
+(M=4096 tokens, K=5632) the ledger gives (M·K)/((M+K)·r) ≈ 118x at rank 20.
+HOSVD_ε stores the same factors at equal rank, so its memory column matches
+ASI — the column that separates them is per-step decomposition FLOPs (full
+SVD vs one warm-started subspace iteration), also reported.
+
+Measured cross-checks:
+  * per-site ground truth — materialize one site's vjp residuals eagerly and
+    weigh them (``ledger.measured_site_residual_bytes``); the gate asserts
+    the analytical/measured gap stays ≤ 20% for both vanilla and ASI;
+  * whole-step — compile the reduced-config training step and read XLA's
+    ``memory_analysis()`` temp bytes for compress none vs asi (reported,
+    backend-dependent).
+
+Run:  PYTHONPATH=src python -m benchmarks.activation_memory
+"""
+from __future__ import annotations
+
+from repro.configs.registry import get_config
+from repro.ondevice.ledger import (BYTES_PER_ELEM, build_ledger,
+                                   measured_site_residual_bytes,
+                                   measured_step_memory,
+                                   site_compressed_elems, site_vanilla_elems)
+
+# the paper's LLM fine-tuning shape (Table 4): B=8, S=512, rank 20
+B, S, RANK = 8, 512, 20
+
+ARCHS = ("tinyllama-1.1b", "phi3-mini-3.8b", "mamba2-130m",
+         "granite-moe-3b-a800m")
+
+
+def table_rows() -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch).replace(compress="asi", asi_rank=RANK)
+        led = build_ledger(cfg, B, S)
+        best = max(led.rows, key=lambda r: r.reduction)
+        rows.append({
+            "arch": arch, "n_sites": len(led.rows),
+            "vanilla_mb": led.vanilla_total_bytes / 2 ** 20,
+            "hosvd_mb": led.asi_total_bytes / 2 ** 20,   # same factor storage
+            "asi_mb": led.asi_total_bytes / 2 ** 20,
+            "mem_ratio": led.reduction,
+            "best_site": best.site.name,
+            "best_site_ratio": best.reduction,
+            "hosvd_over_asi_overhead": (
+                sum(r.hosvd_overhead_flops for r in led.rows)
+                / max(sum(r.asi_overhead_flops for r in led.rows), 1)),
+        })
+    return rows
+
+
+def measured_gap() -> dict:
+    """Analytical (ledger helpers) vs measured bytes for the paper's largest
+    TinyLlama site (down-projection, M=B·S tokens, K=d_ff)."""
+    from repro.ondevice.ledger import SiteSpec
+    cfg = get_config("tinyllama-1.1b")
+    m, k = B * S, cfg.d_ff
+    site = SiteSpec("ffn/down", "matrix", k=k, n=cfg.d_model, tokens=m)
+    ana_asi = site_compressed_elems(site, RANK) * BYTES_PER_ELEM
+    ana_van = site_vanilla_elems(site) * BYTES_PER_ELEM
+    meas_asi = measured_site_residual_bytes(m, k, RANK, compressed=True)
+    meas_van = measured_site_residual_bytes(m, k, RANK, compressed=False)
+    return {
+        "site": "down_proj(M=4096,K=5632)",
+        "analytical_asi_bytes": ana_asi, "measured_asi_bytes": meas_asi,
+        "gap_asi": abs(ana_asi - meas_asi) / max(meas_asi, 1),
+        "analytical_vanilla_bytes": ana_van,
+        "measured_vanilla_bytes": meas_van,
+        "gap_vanilla": abs(ana_van - meas_van) / max(meas_van, 1),
+        "measured_ratio": meas_van / max(meas_asi, 1),
+    }
+
+
+def compiled_step_memory() -> dict | None:
+    """XLA memory_analysis of the actual (reduced, CPU-compilable) training
+    step, compress none vs asi — reported, not gated (temp accounting is
+    backend-dependent and includes non-activation workspace)."""
+    base = get_config("tinyllama-1.1b").reduced()
+    out = {}
+    for compress in ("none", "asi"):
+        mem = measured_step_memory(
+            base.replace(compress=compress, kernel_backend="reference"),
+            2, 32)
+        if mem is None:
+            return None
+        out[compress] = mem.get("temp_size_in_bytes")
+    if not all(out.values()):
+        return None
+    out["temp_ratio"] = out["none"] / out["asi"]
+    return out
+
+
+def run(verbose: bool = True) -> dict:
+    rows = table_rows()
+    gap = measured_gap()
+    step_mem = compiled_step_memory()
+    if verbose:
+        print(f"{'arch':22s} {'sites':>5s} {'van MB':>9s} {'HOSVD MB':>9s} "
+              f"{'ASI MB':>7s} {'ratio':>7s} {'best site ratio':>16s}")
+        for r in rows:
+            print(f"{r['arch']:22s} {r['n_sites']:5d} "
+                  f"{r['vanilla_mb']:9.1f} {r['hosvd_mb']:9.2f} "
+                  f"{r['asi_mb']:7.2f} {r['mem_ratio']:6.1f}x "
+                  f"{r['best_site_ratio']:9.1f}x ({r['best_site']})")
+        print(f"measured gap ({gap['site']}): "
+              f"asi {gap['gap_asi']*100:.1f}%  vanilla "
+              f"{gap['gap_vanilla']*100:.1f}%  measured ratio "
+              f"{gap['measured_ratio']:.0f}x")
+        if step_mem:
+            print(f"compiled step temp bytes none/asi: "
+                  f"{step_mem['temp_ratio']:.2f}x")
+    max_ratio = max(r["best_site_ratio"] for r in rows)
+    # acceptance gates: the paper's >=50x regime on at least one paper shape,
+    # with analytical/measured agreement where measurement is available
+    assert max_ratio >= 50.0, max_ratio
+    assert gap["gap_asi"] <= 0.20 and gap["gap_vanilla"] <= 0.20, gap
+    assert gap["measured_ratio"] >= 50.0, gap
+    return {"rows": rows, "max_site_ratio": max_ratio, "measured_gap": gap,
+            "compiled_step": step_mem}
+
+
+if __name__ == "__main__":
+    run()

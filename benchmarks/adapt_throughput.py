@@ -1,0 +1,107 @@
+"""A/B: serving throughput with and without interleaved on-device adaptation.
+
+The same request stream is served twice on the reduced TinyLlama config:
+once by a bare continuous-batching ``Engine`` (baseline tokens/s) and once
+by a ``DeviceSession`` that runs a planner-budgeted ASI fine-tuning burst
+every ``ADAPT_EVERY`` retirements.  Reported: tokens/s for both runs, the
+serving-throughput retention under adaptation, adaptation steps/s, and the
+session's quality/forgetting counters — the cost of learning while serving,
+quantified.
+
+Run:  PYTHONPATH=src python -m benchmarks.adapt_throughput
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.models import build_model
+from repro.ondevice.planner import build_plan
+from repro.ondevice.session import DeviceSession, SessionCfg
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.serve_loop import Engine, Request, ServeCfg
+from repro.runtime.train_loop import make_train_step
+
+ARCH = "tinyllama-1.1b"
+N_REQUESTS, MAX_NEW, MAX_BATCH, MAX_LEN = 8, 8, 4, 64
+BATCH, SEQ = 2, 16
+ADAPT_EVERY, BURST, TOTAL_STEPS = 2, 1, 6
+BUDGET_MB = 0.05
+
+
+def _requests(n=N_REQUESTS):
+    return [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(4 + i % 2)],
+                    max_new_tokens=MAX_NEW) for i in range(n)]
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = get_config(ARCH).reduced().replace(compress="asi",
+                                             kernel_backend="reference")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    scfg = ServeCfg(max_batch=MAX_BATCH, max_len=MAX_LEN)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                                global_batch=BATCH, seed=0, branching=2))
+
+    # --- baseline: serve only (warmed) --------------------------------------
+    eng = Engine(api, params, scfg)
+    eng.run(_requests(2))
+    eng.run(_requests())
+    base = eng.last_stats
+
+    # --- session: serve + planner-budgeted adaptation ----------------------
+    plan = build_plan(api, cfg, params, BUDGET_MB,
+                      [data.batch(s) for s in range(2)],
+                      batch_size=BATCH, seq_len=SEQ)
+    asi_state = api.init_asi(jax.random.PRNGKey(0), rank_plan=plan.rank_plan)
+    opt = make_optimizer("adamw", warmup_cosine(1e-2, 2, TOTAL_STEPS),
+                         clip_norm=2.0)
+    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                              trainable_mask=api.trainable_mask(params),
+                              donate=False, kernel_backend=cfg.kernel_backend)
+    session = DeviceSession(
+        api, params, step_fn, opt_state=opt.init(params),
+        asi_state=asi_state, serve_cfg=scfg,
+        cfg=SessionCfg(adapt_every=ADAPT_EVERY, burst_steps=BURST,
+                       total_steps=TOTAL_STEPS, batch_size=BATCH,
+                       seq_len=SEQ),
+        probe_batch=data.batch(10_000))
+    # warm-up: engine prefill/step compiles AND the train-step compile (the
+    # replay is seeded so one real adaptation step traces), then reset
+    session.replay.add([1 + i % 37 for i in range(SEQ + 2)])
+    session.engine.run(_requests(2))
+    session.adapt_steps(1)
+    session.reset_counters()
+    report = session.run(_requests(), drain_steps=True)
+    adapt = report.serve_stats
+
+    retention = (adapt.tokens_per_s / base.tokens_per_s
+                 if base.tokens_per_s else 0.0)
+    steps_per_s = (report.steps / report.adapt_wall_s
+                   if report.adapt_wall_s else 0.0)
+    out = {
+        "baseline_tok_s": base.tokens_per_s,
+        "adapt_tok_s": adapt.tokens_per_s,
+        "retention": retention,
+        "adapt_steps_per_s": steps_per_s,
+        "plan_mb": plan.planned_bytes / 2 ** 20,
+        "budget_mb": BUDGET_MB,
+        "quality": report.summary(),
+    }
+    if verbose:
+        print(f"serve-only        {base.tokens_per_s:7.1f} tok/s")
+        print(f"serve+adapt       {adapt.tokens_per_s:7.1f} tok/s "
+              f"(retention {retention:.2f}x)")
+        print(f"adaptation        {report.steps} steps, "
+              f"{steps_per_s:.1f} steps/s, plan {out['plan_mb']:.4f} MB "
+              f"<= budget {BUDGET_MB} MB")
+        print(f"loss first->last  {report.first_loss:.3f} -> "
+              f"{report.last_loss:.3f}; probe drift {report.probe_drift:+.3f}")
+    assert plan.within_budget
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -17,9 +17,9 @@ def _timed(name, fn, derive):
 
 
 def main() -> None:
-    from benchmarks import (fused_asi, latency_ondevice, serve_throughput,
-                            shard_scaling, table1_imagenet, table4_tinyllama,
-                            warm_start)
+    from benchmarks import (activation_memory, adapt_throughput, fused_asi,
+                            latency_ondevice, serve_throughput, shard_scaling,
+                            table1_imagenet, table4_tinyllama, warm_start)
 
     print("name,us_per_call,derived")
     _timed("table1_imagenet", table1_imagenet.run,
@@ -41,6 +41,13 @@ def main() -> None:
     _timed("shard_scaling", shard_scaling.run,
            lambda o: f"min_arg_mem_ratio_1to8="
                      f"{o['min_arg_mem_ratio_1to8']:.1f}x")
+    _timed("activation_memory", activation_memory.run,
+           lambda o: f"max_site_ratio={o['max_site_ratio']:.0f}x;"
+                     f"measured_gap="
+                     f"{o['measured_gap']['gap_asi']*100:.0f}%")
+    _timed("adapt_throughput", adapt_throughput.run,
+           lambda o: f"retention={o['retention']:.2f}x;"
+                     f"adapt_steps_per_s={o['adapt_steps_per_s']:.1f}")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ DOCS = ["README.md", "DESIGN.md"]
 
 # modules whose --help we interrogate for flag checks
 FLAGGED_MODULES = ("repro.launch.train", "repro.launch.serve",
-                   "repro.launch.dryrun")
+                   "repro.launch.dryrun", "repro.launch.adapt")
 
 FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
 LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")

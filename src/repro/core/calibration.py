@@ -1,0 +1,87 @@
+"""Calibration capture for the on-device planner (paper §3.3, step 1).
+
+The planner needs, for every ASI-compressed linear site in the fine-tuned
+tail, the *exact* pair (input activation A_i, output cotangent ∂L/∂Y_i) on a
+few real batches — that is what ``rank_selection.estimate_perplexity`` turns
+into the gradient-perplexity table the budget search minimizes over.
+
+Getting those pairs without instrumenting every model file exploits two
+facts about the existing stack:
+
+1. every compressed site already routes through ``asi_linear`` /
+   ``grouped_asi_linear`` (core/compressed_linear.py), so a single
+   thread-local context consulted there sees every site, in deterministic
+   trace order (the fine-tuned tail is python-unrolled, never scanned);
+2. ASI backward keeps ∂L/∂x exact (eq. 2 needs only W), so the cotangents
+   arriving at *every* site are exact even while capture runs with the
+   compressed model — only weight gradients are approximated, and those are
+   not on the activation-gradient path.
+
+Mechanics: inside ``capture_sites(taps)`` each site appends its input to the
+record and adds ``taps[i]`` (a zeros array, a *differentiated input* of the
+probe function) to its output.  The probe returns the recorded activations
+as auxiliary outputs, so a single ``jax.vjp(probe, params, taps,
+has_aux=True)`` yields activations (aux) and per-site cotangents (the taps'
+gradients) in one backward pass.  A first ``jax.eval_shape`` discovery pass
+(taps=None) provides the tap shapes.
+
+The context is thread-local and off by default: normal training/serving
+never touches it (same pattern as ``parallel.sharding.axis_rules``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class SiteCapture:
+    """One compressed-linear site seen during a capture pass."""
+    kind: str                 # "matrix" | "grouped"
+    x: Any                    # site input as traced (matrix: (..., K);
+                              #  grouped: (E, T, K))
+    y_shape: tuple            # site output shape (tap shape)
+    y_dtype: Any
+
+
+class CaptureContext:
+    def __init__(self, taps=None):
+        self.sites: list[SiteCapture] = []
+        self._taps = list(taps) if taps is not None else None
+
+    def record(self, kind: str, x, y):
+        """Record a site; returns ``y`` (+ its tap when taps were supplied)."""
+        self.sites.append(SiteCapture(kind, x, tuple(y.shape), y.dtype))
+        if self._taps is None:
+            return y
+        if not self._taps:
+            raise ValueError(
+                "calibration capture: more compressed-linear sites than taps "
+                "— discovery and probe passes traced different programs")
+        return y + self._taps.pop(0).astype(y.dtype)
+
+
+def active() -> CaptureContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def capture_sites(taps=None):
+    """Enable site capture for everything traced inside the block.
+
+    ``taps``: sequence of zero arrays (one per site, discovery-pass order)
+    added to the site outputs so their vjp gradients are the per-site
+    cotangents; None records activations/shapes only.
+    """
+    if active() is not None:
+        raise RuntimeError("calibration capture does not nest")
+    ctx = CaptureContext(taps)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = None

@@ -31,6 +31,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import calibration
 from repro.core.asi import MatrixASIState, orthonormalize
 from repro.kernels import dispatch
 
@@ -73,21 +74,38 @@ def _fused_fwd(cfg: LinearCompressionCfg, x: Array, w: Array,
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array, b: Array | None,
-               state: MatrixASIState):
-    """y = x @ w (+ b);  stores only rank-``cfg.rank`` factors of x for bwd."""
+def _asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array, b: Array | None,
+                state: MatrixASIState):
     y, _, q = _fused_fwd(cfg, x, w, b, state)
     return y, MatrixASIState(q=q)
 
 
-def _asi_linear_fwd(cfg, x, w, b, state):
+def asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array, b: Array | None,
+               state: MatrixASIState):
+    """y = x @ w (+ b);  stores only rank-r factors of x for bwd (r is the
+    warm-start state's column count — per-layer ranks are therefore set by
+    how the state was initialized, see ``init_asi_state(rank_plan=...)``).
+
+    Under an active ``calibration.capture_sites`` context the site's input
+    (and, via the tap added to y, its output cotangent) is recorded for the
+    on-device planner; the tap sits OUTSIDE the custom_vjp boundary so its
+    gradient is the true ∂L/∂y.
+    """
+    y, new_state = _asi_linear(cfg, x, w, b, state)
+    cap = calibration.active()
+    if cap is not None:
+        y = cap.record("matrix", x, y)
+    return y, new_state
+
+
+def _asi_linear_vjp_fwd(cfg, x, w, b, state):
     y, p_hat, q = _fused_fwd(cfg, x, w, b, state)
     # Residuals: compressed factors only — X itself is NOT saved.
     res = (p_hat, q, w, x.shape, b is not None)
     return (y, MatrixASIState(q=q)), res
 
 
-def _asi_linear_bwd(cfg, res, cts):
+def _asi_linear_vjp_bwd(cfg, res, cts):
     g_y, _ = cts                                   # cotangent on new_state unused
     p_hat, q, w, x_shape, has_b = res
     g2d = g_y.reshape(-1, g_y.shape[-1])
@@ -103,7 +121,7 @@ def _asi_linear_bwd(cfg, res, cts):
     return g_x, g_w.astype(w.dtype), g_b, g_state
 
 
-asi_linear.defvjp(_asi_linear_fwd, _asi_linear_bwd)
+_asi_linear.defvjp(_asi_linear_vjp_fwd, _asi_linear_vjp_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -173,11 +191,21 @@ def _grouped_fused_fwd(cfg: LinearCompressionCfg, x: Array, w: Array,
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def grouped_asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array,
-                       state: GroupedASIState):
-    """x (E, T, K) @ w (E, K, N) -> (E, T, N), ASI per expert."""
+def _grouped_asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array,
+                        state: GroupedASIState):
     y, _, q = _grouped_fused_fwd(cfg, x, w, state)
     return y, GroupedASIState(q=q)
+
+
+def grouped_asi_linear(cfg: LinearCompressionCfg, x: Array, w: Array,
+                       state: GroupedASIState):
+    """x (E, T, K) @ w (E, K, N) -> (E, T, N), ASI per expert.  Calibration
+    capture mirrors ``asi_linear`` (kind='grouped', activation (E, T, K))."""
+    y, new_state = _grouped_asi_linear(cfg, x, w, state)
+    cap = calibration.active()
+    if cap is not None:
+        y = cap.record("grouped", x, y)
+    return y, new_state
 
 
 def _grouped_fwd(cfg, x, w, state):
@@ -199,7 +227,7 @@ def _grouped_bwd(cfg, res, cts):
     return g_x, g_w.astype(w.dtype), g_state
 
 
-grouped_asi_linear.defvjp(_grouped_fwd, _grouped_bwd)
+_grouped_asi_linear.defvjp(_grouped_fwd, _grouped_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -159,6 +159,8 @@ def select_ranks_knapsack(perplexity: np.ndarray, memory: np.ndarray,
     quantized problem.  Quantization errs conservatively (ceil), so the true
     memory of the returned choice never exceeds the budget.
     """
+    if budget <= 0:
+        raise ValueError(f"budget {budget:.3g} infeasible: must be positive")
     n, e = perplexity.shape
     scale = budget / n_bins
     q = np.minimum(np.ceil(memory / max(scale, 1e-30)).astype(np.int64), n_bins + 1)

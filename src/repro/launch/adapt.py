@@ -1,0 +1,175 @@
+"""On-device adaptation launcher: budget-driven train-while-serve.
+
+The paper's deployment loop as one command — ledger feasibility, §3.3
+calibration + budget search, then a ``DeviceSession`` that serves decode
+traffic with the continuous-batching engine while running memory-budgeted
+ASI fine-tuning steps from a replay buffer of retired requests:
+
+  PYTHONPATH=src python -m repro.launch.adapt --arch tinyllama-1.1b \
+      --reduced --mem-budget-mb 0.05 --steps 10 --adapt-every 2 \
+      --requests 8 --max-new 8
+
+Output is JSON lines: the analytical ledger (per-layer vanilla vs compressed
+bytes), the plan (per-layer ε/rank under ``--mem-budget-mb``), then serving
+and adaptation counters.  The adapted weights are checkpointed via the usual
+atomic checkpointer.  ``--config tinyllama_1_1b``-style spellings are
+accepted as an ``--arch`` alias (underscores normalize to the registry ids).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.checkpoint import checkpointer
+from repro.configs.registry import ARCHS, get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.models import build_model
+from repro.ondevice.ledger import build_ledger
+from repro.ondevice.planner import build_plan
+from repro.ondevice.session import DeviceSession, SessionCfg
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.serve_loop import Request, ServeCfg
+from repro.runtime.train_loop import make_train_step
+
+
+def _normalize_arch(name: str) -> str:
+    """Accept ``tinyllama_1_1b``-style spellings for registry ids."""
+    canon = {a.replace("-", "_").replace(".", "_"): a for a in ARCHS}
+    return canon.get(name.replace("-", "_").replace(".", "_"), name)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        epilog="Full flag matrix: README.md; subsystem design: DESIGN.md §8")
+    ap.add_argument("--arch", "--config", dest="arch", required=True,
+                    help=f"architecture ({', '.join(ARCHS)}; underscore "
+                         "spellings accepted)")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="CPU-sized config (--no-reduced = full arch)")
+    ap.add_argument("--mem-budget-mb", type=float, required=True,
+                    help="activation-memory budget for the fine-tuned tail; "
+                         "the planner chooses per-layer ranks under it")
+    ap.add_argument("--steps", type=int, default=10,
+                    help="total adaptation steps for the session")
+    ap.add_argument("--adapt-every", type=int, default=4,
+                    help="retired requests per adaptation burst")
+    ap.add_argument("--burst-steps", type=int, default=1,
+                    help="train steps per burst")
+    ap.add_argument("--replay-size", type=int, default=64,
+                    help="replay-buffer capacity (retired token streams)")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="adaptation batch size (fixed shape, no recompiles)")
+    ap.add_argument("--seq-len", type=int, default=32,
+                    help="adaptation sequence length (fixed shape)")
+    ap.add_argument("--calib-batches", type=int, default=2,
+                    help="calibration batches for the §3.3 perplexity table")
+    ap.add_argument("--rank-select", default="knapsack",
+                    choices=("knapsack", "backtracking"),
+                    help="budget search: quantized DP or paper backtracking")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=("auto", "pallas", "reference"))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_adapt_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    arch = _normalize_arch(args.arch)
+    if arch not in ARCHS:
+        raise SystemExit(f"unknown arch {args.arch!r}; choose from {ARCHS}")
+    cfg = get_config(arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(compress="asi", kernel_backend=args.kernel_backend)
+    if cfg.family == "encdec":
+        raise SystemExit("encdec serving needs audio frames; on-device "
+                         "adaptation currently targets decoder-only archs")
+
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(key)
+
+    # --- ledger: budget feasibility before anything trains ----------------
+    ledger = build_ledger(cfg, args.batch, args.seq_len)
+    print(json.dumps({"ledger": ledger.summary(),
+                      "budget_mb": args.mem_budget_mb,
+                      "vanilla_fits": (ledger.vanilla_total_bytes
+                                       <= args.mem_budget_mb * 2 ** 20),
+                      "rank1_floor_mb": round(ledger.min_bytes() / 2**20, 4)}))
+
+    # --- planner: calibration + §3.3 budget search ------------------------
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size,
+                                seq_len=args.seq_len,
+                                global_batch=args.batch, seed=args.seed,
+                                branching=2))
+    calib = [data.batch(s) for s in range(args.calib_batches)]
+    plan = build_plan(api, cfg, params, args.mem_budget_mb, calib,
+                      batch_size=args.batch, seq_len=args.seq_len,
+                      method=args.rank_select, seed=args.seed)
+    planned_ok = ledger.bytes_for(plan.rank_plan) <= plan.budget_bytes
+    print(json.dumps({"plan": plan.summary(),
+                      "plan_respects_ledger_budget": planned_ok}))
+    if not planned_ok:
+        raise SystemExit("planner produced a plan the ledger prices over "
+                         "budget — this is a bug, not a user error")
+
+    # --- session: train-while-serve ---------------------------------------
+    asi_state = api.init_asi(key, rank_plan=plan.rank_plan)
+    opt_name = cfg.optimizer if cfg.optimizer != "adafactor" else "adamw"
+    if opt_name != cfg.optimizer:
+        print(json.dumps({"optimizer_substitution": {
+            "configured": cfg.optimizer, "used": opt_name,
+            "reason": "adafactor is not mask-aware for frozen backbones"}}))
+    opt = make_optimizer(
+        opt_name,
+        warmup_cosine(args.lr, max(args.steps // 5, 1), max(args.steps, 2)),
+        clip_norm=2.0)
+    opt_state = opt.init(params)
+    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                              trainable_mask=api.trainable_mask(params),
+                              donate=False,          # engine shares params
+                              kernel_backend=cfg.kernel_backend)
+    session = DeviceSession(
+        api, params, step_fn, opt_state, asi_state,
+        ServeCfg(max_batch=args.max_batch, max_len=args.max_len,
+                 temperature=args.temperature),
+        SessionCfg(adapt_every=args.adapt_every,
+                   burst_steps=args.burst_steps, total_steps=args.steps,
+                   batch_size=args.batch, seq_len=args.seq_len,
+                   replay_size=args.replay_size),
+        probe_batch=data.batch(10_000), seed=args.seed)
+    requests = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
+                        max_new_tokens=args.max_new)
+                for i in range(args.requests)]
+    report = session.run(requests)
+
+    s = report.serve_stats
+    print(json.dumps({"serving": {
+        "requests": s.requests, "generated_tokens": s.generated_tokens,
+        "decode_steps": s.decode_steps,
+        "tokens_per_s": round(s.tokens_per_s, 1),
+        "ttft_mean_s": round(s.ttft_mean_s, 4)}}))
+    print(json.dumps({"adaptation": report.summary()}))
+
+    checkpointer.save(args.ckpt_dir, report.steps,
+                      {"params": session.params, "opt": session.opt_state,
+                       "asi": session.asi_state},
+                      meta={"arch": arch, "optimizer": opt_name,
+                            "plan": plan.summary()})
+    print(json.dumps({"ckpt_dir": args.ckpt_dir, "ckpt_step": report.steps}))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -184,6 +184,25 @@ def build_cell(cfg: ModelConfig, shape: ShapeCfg, mesh):
 # cell runner
 # --------------------------------------------------------------------------
 
+def _ledger_report(cfg: ModelConfig, shape: ShapeCfg,
+                   mem_budget_mb: float | None) -> dict:
+    """Per-tail activation-memory estimate (repro.ondevice.ledger) shown
+    next to the FLOPs numbers: is the paper's compressed-training regime —
+    and the given ``--mem-budget-mb`` — feasible for this cell?"""
+    from repro.ondevice.ledger import build_ledger
+    led = build_ledger(cfg, shape.global_batch, shape.seq_len)
+    rep = led.summary()
+    for k in ("arch", "batch", "seq_len"):      # already in the cell result
+        rep.pop(k, None)
+    if mem_budget_mb is not None:
+        rep["budget_mb"] = mem_budget_mb
+        rep["asi_fits_budget"] = led.fits(mem_budget_mb)
+        rep["vanilla_fits_budget"] = (
+            led.vanilla_total_bytes <= mem_budget_mb * 2 ** 20)
+        rep["rank1_floor_mb"] = round(led.min_bytes() / 2 ** 20, 4)
+    return rep
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              compress: str = "none", remat: str | None = None,
              fsdp: bool | None = None, mesh_override=None,
@@ -191,6 +210,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              unroll: bool = True, attn_chunk: int | None = None,
              param_dtype: str | None = None, layout: str = "tp",
              kv_cache_dtype: str | None = None,
+             mem_budget_mb: float | None = None,
              verbose: bool = True) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -294,6 +314,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "model_flops": mf, "useful_ratio": roof.useful_ratio,
         "roofline_fraction": roof.roofline_fraction,
     }
+    if shape.kind == "train":
+        result["activation_ledger"] = _ledger_report(cfg, shape, mem_budget_mb)
     if verbose:
         print(json.dumps({k: v for k, v in result.items()
                           if k not in ("collective_by_kind", "memory")},
@@ -321,6 +343,10 @@ def main(argv=None):
                     choices=("float32", "bfloat16"))
     ap.add_argument("--layout", default="tp", choices=("tp", "fsdp", "dp"))
     ap.add_argument("--kv-cache-dtype", default=None, choices=("int8",))
+    ap.add_argument("--mem-budget-mb", type=float, default=None,
+                    help="on-device activation-memory budget: train cells "
+                         "report whether vanilla/ASI tail storage fits "
+                         "(repro.ondevice.ledger) before any training")
     ap.add_argument("--no-unroll", action="store_true",
                     help="keep the layer scan rolled (fallback for compile-"
                          "time-bound cells; per-layer collectives are then "
@@ -360,6 +386,7 @@ def main(argv=None):
                                param_dtype=args.param_dtype,
                                layout=args.layout,
                                kv_cache_dtype=args.kv_cache_dtype,
+                               mem_budget_mb=args.mem_budget_mb,
                                unroll=not args.no_unroll)
             except Exception as e:                           # noqa: BLE001
                 failures += 1

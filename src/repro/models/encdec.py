@@ -156,22 +156,28 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
     return ce, ({"ce": ce, "aux": jnp.float32(0.0)}, new_asi)
 
 
-def init_asi_state(key: Array, cfg: ModelConfig) -> dict:
+def init_asi_state(key: Array, cfg: ModelConfig,
+                   rank_plan: dict | None = None) -> dict:
+    """``rank_plan`` maps ``layer_{i}/self/wq``-style site paths to per-site
+    ranks (planner output); unlisted sites use ``cfg.asi_rank``."""
     if cfg.compress == "none":
         return {}
+    plan = rank_plan or {}
     d, hd, h, f = cfg.d_model, cfg.hd, cfg.n_heads, cfg.d_ff
     tail = min(cfg.asi_last_k, cfg.n_layers)
     out = {}
     for i in range(cfg.n_layers - tail, cfg.n_layers):
         key, *ks = jax.random.split(key, 12)
-        r = cfg.asi_rank
+        r = lambda site: plan.get(f"layer_{i}/{site}", cfg.asi_rank)
         out[f"layer_{i}"] = {
-            "self": {n: MatrixASIState.init(k, d if n != "wo" else h * hd, r)
+            "self": {n: MatrixASIState.init(k, d if n != "wo" else h * hd,
+                                            r(f"self/{n}"))
                      for n, k in zip(("wq", "wk", "wv", "wo"), ks[:4])},
-            "cross": {n: MatrixASIState.init(k, d if n != "wo" else h * hd, r)
+            "cross": {n: MatrixASIState.init(k, d if n != "wo" else h * hd,
+                                             r(f"cross/{n}"))
                       for n, k in zip(("wq", "wo"), ks[4:6])},
-            "mlp": {"up": MatrixASIState.init(ks[6], d, r),
-                    "down": MatrixASIState.init(ks[7], f, r)},
+            "mlp": {"up": MatrixASIState.init(ks[6], d, r("mlp/up")),
+                    "down": MatrixASIState.init(ks[7], f, r("mlp/down"))},
         }
     return out
 

@@ -116,12 +116,16 @@ def moe_apply(params: dict, x: Array, cfg: ModelConfig,
 
 
 def moe_asi_state_init(key: Array, cfg: ModelConfig, n_tokens: int,
-                       dtype=jnp.float32) -> dict:
-    """Per-expert ASI factors for gate/up (input dim d) and down (input ff)."""
+                       dtype=jnp.float32, ranks: dict | None = None) -> dict:
+    """Per-expert ASI factors for gate/up (input dim d) and down (input ff).
+
+    ``ranks`` optionally overrides the per-site rank (shared across experts
+    — the grouped state is one (E, K, r) stack per site)."""
     k1, k2, k3 = jax.random.split(key, 3)
-    e, d, f, r = cfg.n_experts, cfg.d_model, cfg.d_ff, cfg.asi_rank
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    r = lambda name: (ranks or {}).get(name, cfg.asi_rank)
     return {
-        "gate": GroupedASIState.init(k1, e, d, r, dtype),
-        "up": GroupedASIState.init(k2, e, d, r, dtype),
-        "down": GroupedASIState.init(k3, e, f, r, dtype),
+        "gate": GroupedASIState.init(k1, e, d, r("gate"), dtype),
+        "up": GroupedASIState.init(k2, e, d, r("up"), dtype),
+        "down": GroupedASIState.init(k3, e, f, r("down"), dtype),
     }

@@ -18,7 +18,9 @@ class ModelAPI:
     cfg: ModelConfig
     init: Callable[[Array], dict]
     loss: Callable                    # (params, batch, asi_state=None)
-    init_asi: Callable[[Array], dict]
+    init_asi: Callable                # (key, rank_plan=None) — rank_plan maps
+                                      # site paths to per-layer ranks (the
+                                      # on-device planner's output)
     trainable_mask: Callable[[dict], Any]
     decode_step: Callable             # (params, cache, token, pos) — pos may
                                       # be scalar or (B,) per-slot positions
@@ -35,7 +37,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             cfg=cfg,
             init=lambda key: encdec.init_params(key, cfg),
             loss=lambda p, b, s=None: encdec.loss_fn(p, b, cfg, s),
-            init_asi=lambda key: encdec.init_asi_state(key, cfg),
+            init_asi=lambda key, rank_plan=None: encdec.init_asi_state(
+                key, cfg, rank_plan),
             trainable_mask=lambda p: encdec.trainable_mask(p, cfg),
             decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, n: encdec.init_cache(cfg, b, n),
@@ -45,7 +48,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         cfg=cfg,
         init=lambda key: transformer.init_params(key, cfg),
         loss=lambda p, b, s=None: transformer.loss_fn(p, b, cfg, s),
-        init_asi=lambda key: transformer.init_asi_state(key, cfg),
+        init_asi=lambda key, rank_plan=None: transformer.init_asi_state(
+            key, cfg, rank_plan),
         trainable_mask=lambda p: transformer.trainable_mask(p, cfg),
         decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
         init_cache=lambda b, n: transformer.init_cache(cfg, b, n),

@@ -244,10 +244,19 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
 
 # --- ASI state construction ------------------------------------------------------
 
-def init_asi_state(key: Array, cfg: ModelConfig) -> dict:
-    """Warm-start factors for the fine-tuned tail (cfg.asi_last_k periods)."""
+def init_asi_state(key: Array, cfg: ModelConfig,
+                   rank_plan: dict | None = None) -> dict:
+    """Warm-start factors for the fine-tuned tail (cfg.asi_last_k periods).
+
+    ``rank_plan`` maps site paths (``period_{i}/sub{j}/mixer/wq``,
+    ``period_{i}/sub{j}/ffn/gate``, ...) to per-site ranks; unlisted sites
+    fall back to ``cfg.asi_rank``.  Since ``asi_linear``'s compute rank is
+    the state's column count, this is the whole mechanism by which the
+    on-device planner's budget choices reach the training step.
+    """
     if cfg.compress == "none":
         return {}
+    plan = rank_plan or {}
     np_ = n_periods(cfg)
     tail = min(cfg.asi_last_k, np_)
     specs = period_pattern(cfg)
@@ -258,31 +267,38 @@ def init_asi_state(key: Array, cfg: ModelConfig) -> dict:
         period_state: dict = {}
         for j, (mixer, ffn) in enumerate(specs):
             sub, *ks = jax.random.split(sub, 8)
+            at = f"period_{i}/sub{j}"
+            r = lambda site: plan.get(f"{at}/{site}", cfg.asi_rank)
             st: dict = {}
             if mixer == "attn":
                 st["mixer"] = {
-                    "wq": MatrixASIState.init(ks[0], d, cfg.asi_rank),
-                    "wk": MatrixASIState.init(ks[1], d, cfg.asi_rank),
-                    "wv": MatrixASIState.init(ks[2], d, cfg.asi_rank),
-                    "wo": MatrixASIState.init(ks[3], h * hd, cfg.asi_rank),
+                    "wq": MatrixASIState.init(ks[0], d, r("mixer/wq")),
+                    "wk": MatrixASIState.init(ks[1], d, r("mixer/wk")),
+                    "wv": MatrixASIState.init(ks[2], d, r("mixer/wv")),
+                    "wo": MatrixASIState.init(ks[3], h * hd, r("mixer/wo")),
                 }
             else:       # mamba: compress the in/out projections
                 st["mixer"] = {
-                    "in_proj": MatrixASIState.init(ks[0], d, cfg.asi_rank),
+                    "in_proj": MatrixASIState.init(ks[0], d,
+                                                   r("mixer/in_proj")),
                     "out_proj": MatrixASIState.init(
-                        ks[1], cfg.ssm_d_inner, cfg.asi_rank),
+                        ks[1], cfg.ssm_d_inner, r("mixer/out_proj")),
                 }
             if ffn == "dense":
                 st["ffn"] = {
-                    "gate": MatrixASIState.init(ks[4], d, cfg.asi_rank),
-                    "up": MatrixASIState.init(ks[5], d, cfg.asi_rank),
-                    "down": MatrixASIState.init(ks[6], cfg.d_ff, cfg.asi_rank),
+                    "gate": MatrixASIState.init(ks[4], d, r("ffn/gate")),
+                    "up": MatrixASIState.init(ks[5], d, r("ffn/up")),
+                    "down": MatrixASIState.init(ks[6], cfg.d_ff,
+                                                r("ffn/down")),
                 } if cfg.act == "silu" else {
-                    "up": MatrixASIState.init(ks[5], d, cfg.asi_rank),
-                    "down": MatrixASIState.init(ks[6], cfg.d_ff, cfg.asi_rank),
+                    "up": MatrixASIState.init(ks[5], d, r("ffn/up")),
+                    "down": MatrixASIState.init(ks[6], cfg.d_ff,
+                                                r("ffn/down")),
                 }
             elif ffn == "moe":
-                st["ffn"] = moe_lib.moe_asi_state_init(ks[4], cfg, 0)
+                st["ffn"] = moe_lib.moe_asi_state_init(
+                    ks[4], cfg, 0,
+                    ranks={n: r(f"ffn/{n}") for n in ("gate", "up", "down")})
             if st:
                 period_state[f"sub{j}"] = st
         out[f"period_{i}"] = period_state

@@ -1,0 +1,27 @@
+"""On-device adaptation: budget-driven train-while-serve.
+
+The subsystem that turns the repo from "a trainer plus a server" into the
+paper's actual deployment story — learning on the device under a hard
+activation-memory budget:
+
+* ``ledger``  — per-layer activation-memory accounting (analytical bytes for
+  vanilla / HOSVD / ASI-shortcut training + measured numbers from compiled
+  programs) for every model family in the registry;
+* ``planner`` — captures calibration activations on real batches and drives
+  ``core.rank_selection`` (paper §3.3) to choose per-layer ranks under a
+  ``--mem-budget-mb`` budget, emitting a plan ``make_train_step`` consumes;
+* ``session`` — a ``DeviceSession`` interleaving the continuous-batching
+  serving engine with memory-budgeted ASI fine-tuning steps fed from a
+  replay buffer of retired requests.
+
+CLI: ``python -m repro.launch.adapt`` (see README flag matrix).
+"""
+from repro.ondevice.ledger import Ledger, LedgerRow, SiteSpec, build_ledger
+from repro.ondevice.planner import AdaptPlan, build_plan, capture_calibration
+from repro.ondevice.session import DeviceSession, ReplayBuffer, SessionCfg
+
+__all__ = [
+    "Ledger", "LedgerRow", "SiteSpec", "build_ledger",
+    "AdaptPlan", "build_plan", "capture_calibration",
+    "DeviceSession", "ReplayBuffer", "SessionCfg",
+]

@@ -1,0 +1,322 @@
+"""Per-layer activation-memory ledger (paper eq. 5 / Table 1 / Table 4).
+
+For a given architecture and training shape (B, S) the ledger enumerates
+every ASI-compressed linear site in the fine-tuned tail — in the exact order
+the forward pass executes them, which is also the order the calibration
+capture records them — and prices the activation storage each training mode
+pays between forward and backward:
+
+* **vanilla**   — the full input activation, M·K elements (``M = B·S``
+  tokens, K input features; per-expert buffers for MoE sites);
+* **HOSVD_ε / ASI-shortcut** — the rank-r factor pair, (M+K)·r elements
+  (``asi.matrix_storage_elems``; per-expert stacks for grouped sites).
+  Storage is identical between the two at equal rank — what separates them
+  is the per-step decomposition cost, so the ledger also carries both
+  overhead-FLOPs columns (HOSVD pays a full SVD every step, eq. 11/13; ASI
+  pays one warm-started subspace iteration, eq. 14).
+
+Beyond the closed-form accounting the ledger offers two measured views:
+``measured_step_memory`` compiles the actual training step via
+``jax.jit(...).lower().compile().memory_analysis()`` (works for every model
+family in ``models/registry.py``), and ``measured_site_residual_bytes``
+materializes one site's vjp residuals eagerly and weighs them — the
+ground-truth counterpart the benchmark gates its analytical/measured gap on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import flops as flops_lib
+from repro.core.asi import MatrixASIState, matrix_storage_elems
+from repro.models import build_model
+
+BYTES_PER_ELEM = 4      # factors/activations are stored in fp32
+
+
+# ---------------------------------------------------------------------------
+# site enumeration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """One compressed-linear site: ``name`` matches the ``rank_plan`` paths
+    of ``init_asi_state``; enumeration order matches the forward pass."""
+    name: str
+    kind: str            # "matrix" | "grouped"
+    k: int               # input features
+    n: int               # output features
+    tokens: int          # matrix: M = B*S; grouped: per-expert capacity T
+    groups: int = 0      # E for grouped sites, 0 otherwise
+
+
+def model_seq_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Sequence length the tail actually sees (VLM prepends image tokens)."""
+    if cfg.family == "vlm":
+        return seq_len + cfg.n_img_tokens
+    return seq_len
+
+
+def _ffn_sites(cfg: ModelConfig, at: str, m: int) -> list[SiteSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    names = ("gate", "up", "down") if cfg.act == "silu" else ("up", "down")
+    return [SiteSpec(f"{at}/ffn/{nme}", "matrix",
+                     *((ff, d) if nme == "down" else (d, ff)), m)
+            for nme in names]
+
+
+def _moe_sites(cfg: ModelConfig, at: str, batch: int, seq: int) -> list[SiteSpec]:
+    from repro.models.moe import _capacity
+    t = batch * _capacity(cfg, seq)           # per-expert tokens (B rows x cap)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return [SiteSpec(f"{at}/ffn/gate", "grouped", d, ff, t, e),
+            SiteSpec(f"{at}/ffn/up", "grouped", d, ff, t, e),
+            SiteSpec(f"{at}/ffn/down", "grouped", ff, d, t, e)]
+
+
+def iter_asi_sites(cfg: ModelConfig, batch: int, seq_len: int) -> list[SiteSpec]:
+    """All compressed sites of the fine-tuned tail, forward-trace order."""
+    s = model_seq_len(cfg, seq_len)
+    m = batch * s
+    d, hd, h, kv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    sites: list[SiteSpec] = []
+    if cfg.family == "encdec":
+        tail = min(cfg.asi_last_k, cfg.n_layers)
+        for i in range(cfg.n_layers - tail, cfg.n_layers):
+            at = f"layer_{i}"
+            sites += [SiteSpec(f"{at}/self/wq", "matrix", d, h * hd, m),
+                      SiteSpec(f"{at}/self/wk", "matrix", d, kv * hd, m),
+                      SiteSpec(f"{at}/self/wv", "matrix", d, kv * hd, m),
+                      SiteSpec(f"{at}/self/wo", "matrix", h * hd, d, m),
+                      SiteSpec(f"{at}/cross/wq", "matrix", d, h * hd, m),
+                      SiteSpec(f"{at}/cross/wo", "matrix", h * hd, d, m),
+                      SiteSpec(f"{at}/mlp/up", "matrix", d, cfg.d_ff, m),
+                      SiteSpec(f"{at}/mlp/down", "matrix", cfg.d_ff, d, m)]
+        return sites
+
+    from repro.models.transformer import n_periods, period_pattern
+    specs = period_pattern(cfg)
+    np_ = n_periods(cfg)
+    tail = min(cfg.asi_last_k, np_)
+    for i in range(np_ - tail, np_):
+        for j, (mixer, ffn) in enumerate(specs):
+            at = f"period_{i}/sub{j}"
+            if mixer == "attn":
+                sites += [SiteSpec(f"{at}/mixer/wq", "matrix", d, h * hd, m),
+                          SiteSpec(f"{at}/mixer/wk", "matrix", d, kv * hd, m),
+                          SiteSpec(f"{at}/mixer/wv", "matrix", d, kv * hd, m),
+                          SiteSpec(f"{at}/mixer/wo", "matrix", h * hd, d, m)]
+            else:
+                d_in_proj = 2 * cfg.ssm_d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+                sites += [SiteSpec(f"{at}/mixer/in_proj", "matrix",
+                                   d, d_in_proj, m),
+                          SiteSpec(f"{at}/mixer/out_proj", "matrix",
+                                   cfg.ssm_d_inner, d, m)]
+            if ffn == "dense":
+                sites += _ffn_sites(cfg, at, m)
+            elif ffn == "moe":
+                sites += _moe_sites(cfg, at, batch, s)
+    return sites
+
+
+# ---------------------------------------------------------------------------
+# the ledger
+# ---------------------------------------------------------------------------
+
+def site_vanilla_elems(site: SiteSpec) -> int:
+    if site.kind == "grouped":
+        return site.groups * site.tokens * site.k
+    return site.tokens * site.k
+
+
+def site_compressed_elems(site: SiteSpec, rank: int) -> int:
+    """Factor storage at rank r — identical for ASI and fixed-rank HOSVD."""
+    if site.kind == "grouped":
+        return site.groups * matrix_storage_elems(site.tokens, site.k, rank)
+    return matrix_storage_elems(site.tokens, site.k, rank)
+
+
+def _site_overheads(site: SiteSpec, rank: int) -> tuple[int, int]:
+    """(asi, hosvd) per-step decomposition FLOPs for this site."""
+    g = max(site.groups, 1)
+    ld = flops_lib.LinearDims(site.tokens, site.k, site.n)
+    asi = g * flops_lib.linear_asi_overhead_flops(ld, rank)
+    # HOSVD_eps: full SVD of the (M, K) activation every step
+    hosvd = g * max(site.tokens, site.k) ** 2 * min(site.tokens, site.k)
+    return asi, hosvd
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerRow:
+    site: SiteSpec
+    rank: int
+    vanilla_bytes: int
+    compressed_bytes: int        # HOSVD_eps == ASI factor storage at rank
+    asi_overhead_flops: int
+    hosvd_overhead_flops: int
+
+    @property
+    def reduction(self) -> float:
+        return self.vanilla_bytes / max(self.compressed_bytes, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ledger:
+    arch: str
+    batch: int
+    seq_len: int
+    rows: tuple
+
+    @property
+    def vanilla_total_bytes(self) -> int:
+        return sum(r.vanilla_bytes for r in self.rows)
+
+    @property
+    def asi_total_bytes(self) -> int:
+        return sum(r.compressed_bytes for r in self.rows)
+
+    @property
+    def reduction(self) -> float:
+        return self.vanilla_total_bytes / max(self.asi_total_bytes, 1)
+
+    def fits(self, budget_mb: float) -> bool:
+        return self.asi_total_bytes <= budget_mb * 2 ** 20
+
+    def min_bytes(self) -> int:
+        """Floor: every site at rank 1 — below this no plan exists."""
+        return sum(site_compressed_elems(r.site, 1) * BYTES_PER_ELEM
+                   for r in self.rows)
+
+    def bytes_for(self, ranks: dict) -> int:
+        """Re-price the tail under a planner rank assignment
+        ({site name -> rank}; missing sites keep their ledger rank)."""
+        return sum(
+            site_compressed_elems(r.site, ranks.get(r.site.name, r.rank))
+            * BYTES_PER_ELEM for r in self.rows)
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.arch, "batch": self.batch, "seq_len": self.seq_len,
+            "n_sites": len(self.rows),
+            "vanilla_mb": round(self.vanilla_total_bytes / 2 ** 20, 3),
+            "asi_mb": round(self.asi_total_bytes / 2 ** 20, 4),
+            "reduction": round(self.reduction, 1),
+        }
+
+
+def build_ledger(cfg: ModelConfig, batch: int, seq_len: int,
+                 rank_plan: dict | None = None) -> Ledger:
+    """Analytical ledger for one (architecture, training shape).
+
+    ``rank_plan`` (site path -> rank) prices a planner assignment; default is
+    the uniform ``cfg.asi_rank``.
+    """
+    plan = rank_plan or {}
+    rows = []
+    for site in iter_asi_sites(cfg, batch, seq_len):
+        rank = int(plan.get(site.name, cfg.asi_rank))
+        asi_fl, ho_fl = _site_overheads(site, rank)
+        rows.append(LedgerRow(
+            site=site, rank=rank,
+            vanilla_bytes=site_vanilla_elems(site) * BYTES_PER_ELEM,
+            compressed_bytes=site_compressed_elems(site, rank) * BYTES_PER_ELEM,
+            asi_overhead_flops=asi_fl, hosvd_overhead_flops=ho_fl))
+    return Ledger(arch=cfg.name, batch=batch, seq_len=seq_len,
+                  rows=tuple(rows))
+
+
+def ledgers_for_registry(batch: int, seq_len: int, reduced: bool = True) -> dict:
+    """One ledger per registered architecture (every model family)."""
+    from repro.configs.registry import ARCHS, get_config
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        out[arch] = build_ledger(cfg.replace(compress="asi"), batch, seq_len)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# measured views
+# ---------------------------------------------------------------------------
+
+def _batch_struct(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    d = jnp.dtype(cfg.dtype)
+    bs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+          "targets": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    if cfg.family == "encdec":
+        bs["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_len, cfg.d_model), d)
+    elif cfg.family == "vlm":
+        bs["embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_img_tokens, cfg.d_model), d)
+    return bs
+
+
+def measured_step_memory(cfg: ModelConfig, batch: int, seq_len: int,
+                         rank_plan: dict | None = None) -> dict | None:
+    """Compile the training-step gradient program and read XLA's memory
+    analysis (argument/temp bytes).  ``temp_size_in_bytes`` upper-bounds the
+    live activation storage plus workspace; returns None when the backend
+    does not expose the analysis.  Works for every registry family — the
+    step is the same ``api.loss`` the trainer differentiates.
+    """
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_struct = jax.eval_shape(api.init, key)
+    asi_struct = (jax.eval_shape(partial(api.init_asi, rank_plan=rank_plan),
+                                 key) if cfg.compress != "none" else {})
+
+    def step(params, batch_, asi):
+        (loss, _), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            params, batch_, asi)
+        return loss, grads
+
+    compiled = jax.jit(step).lower(
+        params_struct, _batch_struct(cfg, batch, seq_len), asi_struct
+    ).compile()
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:                                        # noqa: BLE001
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or None
+
+
+def measured_site_residual_bytes(tokens: int, k: int, rank: int,
+                                 n: int = 64, compressed: bool = True) -> int:
+    """Ground truth for one site: the activation-derived arrays actually
+    saved between forward and backward.
+
+    * ASI — run the site's ``custom_vjp`` forward rule and weigh the
+      residuals it returns minus the weight (that tuple IS the saved set;
+      in a jitted step XLA frees the full input once only these survive):
+      the (M, r) + (K, r) factor pair.
+    * dense — the autodiff VJP of ``y = x @ w`` needs x for dW, so the
+      saved set is the (M, K) input itself; weigh it off the eager vjp
+      closure.
+    """
+    from repro.core import compressed_linear as cl
+    x = jnp.zeros((tokens, k), jnp.float32)
+    w = jnp.zeros((k, n), jnp.float32)
+    if compressed:
+        st = MatrixASIState.init(jax.random.PRNGKey(0), k, rank)
+        ccfg = cl.LinearCompressionCfg(rank=rank, backend="reference")
+        _, res = cl._asi_linear_vjp_fwd(ccfg, x, w, None, st)
+        return sum(v.size * v.dtype.itemsize
+                   for v in jax.tree.leaves(res)
+                   if hasattr(v, "shape") and v is not w)
+    _, vjp = jax.vjp(lambda w_: jnp.sum(cl.dense_linear(x, w_) ** 2), w)
+    return sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(vjp)
+               if hasattr(v, "shape") and tuple(v.shape) == (tokens, k))

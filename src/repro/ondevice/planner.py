@@ -1,0 +1,211 @@
+"""Budget-driven rank planner (paper §3.3 wired into the training stack).
+
+Pipeline:
+
+1. **Capture** — run the real loss on a few calibration batches inside a
+   ``core.calibration.capture_sites`` context: one ``jax.vjp`` per batch
+   yields, for every compressed site in the fine-tuned tail, the exact input
+   activation and the exact output cotangent (ASI keeps ∂L/∂x exact, so the
+   cotangents are unpolluted by the compression; see calibration.py).
+   Batches are concatenated along the token axis.
+
+2. **Perplexity table** — ``rank_selection.estimate_perplexity`` sweeps the
+   ε grid and records per-site gradient perplexity ‖dW − ≈dW‖_F, candidate
+   ranks, and memory.  The memory column is then re-priced for the
+   *adaptation* batch shape via the ledger (calibration and adaptation may
+   legitimately use different token counts; ranks transfer, bytes do not).
+
+3. **Budget search** — ``select_ranks_knapsack`` (default; polynomial) or
+   the paper-faithful ``select_ranks_backtracking`` picks one ε per site
+   minimizing total perplexity s.t. total factor bytes ≤ ``--mem-budget-mb``.
+
+The result is an ``AdaptPlan``: per-site ε / rank / bytes, the
+``LinearCompressionCfg`` per site, and ``rank_plan`` — the dict
+``init_asi_state`` consumes, which is how the choice physically reaches
+``make_train_step`` (ASI's compute rank is the warm-start state's column
+count).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import calibration
+from repro.core.compressed_linear import LinearCompressionCfg
+from repro.core.rank_selection import (DEFAULT_EPS_GRID, LayerCalibration,
+                                       estimate_perplexity,
+                                       select_ranks_backtracking,
+                                       select_ranks_knapsack)
+from repro.ondevice import ledger as ledger_lib
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# calibration capture
+# ---------------------------------------------------------------------------
+
+def _probe(api, asi_state, batch, params, taps):
+    """Loss with tapped site outputs; returns (loss, recorded activations)."""
+    with calibration.capture_sites(taps) as cap:
+        loss, _ = api.loss(params, batch, asi_state)
+        xs = [s.x for s in cap.sites]
+    return loss, xs
+
+
+def capture_calibration(api, cfg: ModelConfig, params, asi_state,
+                        batches: Sequence[dict]) -> list[LayerCalibration]:
+    """Exact (activation, grad_out) pairs for every tail site, site order =
+    forward-trace order = ``ledger.iter_asi_sites`` order (asserted by the
+    caller against the ledger's shapes)."""
+    if cfg.compress == "none" or not asi_state:
+        raise ValueError("calibration needs an ASI-compressed model "
+                         "(cfg.compress='asi' and a non-empty asi_state)")
+    acts: list[list[np.ndarray]] = []
+    grads: list[list[np.ndarray]] = []
+    for batch in batches:
+        # discovery pass: site output shapes -> tap zeros
+        with calibration.capture_sites() as cap:
+            jax.eval_shape(lambda p: api.loss(p, batch, asi_state)[0], params)
+        taps = [jnp.zeros(s.y_shape, jnp.float32) for s in cap.sites]
+        # probe pass: one vjp -> activations (aux) + per-site cotangents
+        loss, vjp, xs = jax.vjp(
+            partial(_probe, api, asi_state, batch), params, taps,
+            has_aux=True)
+        del loss
+        _, g_taps = vjp(jnp.float32(1.0))
+        if not acts:
+            acts = [[] for _ in xs]
+            grads = [[] for _ in xs]
+        for i, (x, g) in enumerate(zip(xs, g_taps)):
+            acts[i].append(np.asarray(x, np.float32))
+            grads[i].append(np.asarray(g, np.float32))
+    out = []
+    for i in range(len(acts)):
+        # concat calibration batches along the token axis; grouped (E, T, K)
+        # sites flatten experts into tokens (the grouped state shares one
+        # rank across experts, so a shared subspace estimate is what we want)
+        a = np.concatenate(acts[i], axis=-2).reshape(-1, acts[i][0].shape[-1])
+        g = np.concatenate(grads[i], axis=-2).reshape(-1, grads[i][0].shape[-1])
+        out.append(LayerCalibration(name=f"site{i}", activation=a, grad_out=g,
+                                    kind="linear"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdaptPlan:
+    arch: str
+    budget_mb: float
+    method: str
+    sites: tuple                         # ledger SiteSpecs, forward order
+    eps: dict                            # site name -> chosen ε
+    rank_plan: dict                      # site name -> rank (init_asi_state)
+    perplexity: dict                     # site name -> gradient perplexity
+    planned_bytes: int
+    vanilla_bytes: int
+
+    @property
+    def budget_bytes(self) -> int:
+        return int(self.budget_mb * 2 ** 20)
+
+    @property
+    def within_budget(self) -> bool:
+        return self.planned_bytes <= self.budget_bytes
+
+    def compression_cfgs(self, backend: str = "auto") -> dict:
+        """Per-site LinearCompressionCfg — the concrete per-layer config the
+        training step runs under (rank from the plan)."""
+        return {s.name: LinearCompressionCfg(rank=self.rank_plan[s.name],
+                                             backend=backend)
+                for s in self.sites}
+
+    def summary(self) -> dict:
+        return {
+            "arch": self.arch, "method": self.method,
+            "budget_mb": self.budget_mb,
+            "planned_mb": round(self.planned_bytes / 2 ** 20, 4),
+            "vanilla_mb": round(self.vanilla_bytes / 2 ** 20, 2),
+            "reduction": round(self.vanilla_bytes
+                               / max(self.planned_bytes, 1), 1),
+            "within_budget": self.within_budget,
+            "ranks": {k: int(v) for k, v in self.rank_plan.items()},
+        }
+
+
+def build_plan(api, cfg: ModelConfig, params, budget_mb: float,
+               batches: Sequence[dict], *, batch_size: int, seq_len: int,
+               method: str = "knapsack",
+               eps_grid: Sequence[float] = DEFAULT_EPS_GRID,
+               seed: int = 0) -> AdaptPlan:
+    """Capture calibration on ``batches`` and choose per-site ranks for the
+    adaptation shape (``batch_size`` x ``seq_len``) under ``budget_mb``."""
+    led = ledger_lib.build_ledger(cfg, batch_size, seq_len)
+    sites = tuple(r.site for r in led.rows)
+    if led.min_bytes() > budget_mb * 2 ** 20:
+        raise ValueError(
+            f"--mem-budget-mb {budget_mb:g} infeasible: rank-1 factors alone "
+            f"need {led.min_bytes() / 2**20:.3f} MB for {len(sites)} sites "
+            f"(ledger floor)")
+
+    asi_state = api.init_asi(jax.random.PRNGKey(seed))
+    layers = capture_calibration(api, cfg, params, asi_state, batches)
+    if len(layers) != len(sites):
+        raise AssertionError(
+            f"capture saw {len(layers)} sites, ledger enumerates "
+            f"{len(sites)} — site enumeration out of sync with the model")
+    for ly, site in zip(layers, sites):
+        if ly.activation.shape[-1] != site.k:
+            raise AssertionError(
+                f"site {site.name}: captured activation width "
+                f"{ly.activation.shape[-1]} != ledger K {site.k}")
+        ly.name = site.name
+
+    table = estimate_perplexity(layers, eps_grid)
+    # Re-price memory for the adaptation shape: ranks transfer from the
+    # calibration activations, byte counts must use the training (B, S).
+    n, e = table.perplexity.shape
+    memory = np.zeros((n, e))
+    for i, site in enumerate(sites):
+        for j in range(e):
+            r = max(int(table.ranks[i, j, 0]), 1)
+            memory[i, j] = (ledger_lib.site_compressed_elems(site, r)
+                            * ledger_lib.BYTES_PER_ELEM)
+
+    budget_bytes = budget_mb * 2 ** 20
+    grid_floor = float(memory.min(axis=1).sum())
+    if grid_floor > budget_bytes:
+        raise ValueError(
+            f"--mem-budget-mb {budget_mb:g} infeasible under the ε grid "
+            f"{tuple(eps_grid)}: the smallest-rank candidates already need "
+            f"{grid_floor / 2**20:.4f} MB — lower the grid's minimum ε or "
+            f"raise the budget")
+    if method == "backtracking":
+        choice = select_ranks_backtracking(table.perplexity, memory,
+                                           budget_bytes)
+    elif method == "knapsack":
+        choice = select_ranks_knapsack(table.perplexity, memory, budget_bytes)
+    else:
+        raise ValueError(f"unknown rank-selection method {method!r}")
+
+    rank_plan, eps, perp = {}, {}, {}
+    planned = 0
+    for i, site in enumerate(sites):
+        j = choice[i]
+        rank_plan[site.name] = max(int(table.ranks[i, j, 0]), 1)
+        eps[site.name] = float(table.eps_grid[j])
+        perp[site.name] = float(table.perplexity[i, j])
+        planned += int(memory[i, j])
+    return AdaptPlan(arch=cfg.name, budget_mb=budget_mb, method=method,
+                     sites=sites, eps=eps, rank_plan=rank_plan,
+                     perplexity=perp, planned_bytes=planned,
+                     vanilla_bytes=led.vanilla_total_bytes)

@@ -1,0 +1,213 @@
+"""DeviceSession: one set of weights, serving and adapting concurrently.
+
+The session owns the params and hands the *same object* to (a) the
+continuous-batching ``Engine`` (decode traffic) and (b) a memory-budgeted
+ASI fine-tuning step.  Interleaving rides the engine's retirement hook:
+every ``adapt_every`` finished requests the session runs ``burst_steps``
+training steps on a replay batch, swaps the updated params into the engine,
+and returns control to the decode loop — in-flight requests keep their
+slots, positions, and KV rows, and continue decoding under the new weights.
+That is "training while serving" with zero engine restarts.
+
+Replay buffer: retired requests' token streams (prompt + generation) land in
+a ring; batches are assembled at a **fixed shape** (batch x seq_len+1,
+sequences tiled to length) so the jitted train step never recompiles as
+traffic varies — on-device there is no XLA budget for shape churn.
+
+Counters: per-burst adaptation loss (quality — should fall as the model
+fits its own traffic), and the loss on a frozen probe batch (forgetting —
+drift of the pre-adaptation task).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.serve_loop import Engine, Request, ServeCfg
+
+Array = jax.Array
+
+
+class ReplayBuffer:
+    """Ring buffer of retired token streams with fixed-shape batch assembly."""
+
+    def __init__(self, capacity: int, seq_len: int, seed: int = 0):
+        self.seq_len = seq_len
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def add(self, tokens: Sequence[int]):
+        toks = [int(t) for t in tokens]
+        if len(toks) >= 2:                       # need one (input, target) pair
+            self._buf.append(toks)
+
+    def sample_batch(self, batch_size: int) -> dict[str, Array]:
+        """Fixed-shape {'tokens','targets'} (batch, seq_len); short streams
+        are tiled to length so no masking/padding enters the loss."""
+        if not self._buf:
+            raise ValueError("replay buffer is empty")
+        idx = self._rng.integers(0, len(self._buf), size=batch_size)
+        need = self.seq_len + 1
+        rows = np.empty((batch_size, need), np.int32)
+        for r, i in enumerate(idx):
+            seq = self._buf[i]
+            reps = -(-need // len(seq))
+            rows[r] = (seq * reps)[:need]
+        return {"tokens": jnp.asarray(rows[:, :-1]),
+                "targets": jnp.asarray(rows[:, 1:])}
+
+
+@dataclasses.dataclass
+class SessionCfg:
+    adapt_every: int = 4          # retired requests per adaptation burst
+    burst_steps: int = 1          # train steps per burst
+    total_steps: int = 8          # adaptation-step budget for the session
+    batch_size: int = 2
+    seq_len: int = 32
+    replay_size: int = 64
+
+
+@dataclasses.dataclass
+class SessionReport:
+    serve_stats: Any
+    adapt_losses: list            # per-step adaptation loss, burst order
+    probe_losses: list            # probe loss after each burst (index 0 =
+                                  # before any adaptation)
+    steps: int = 0
+    bursts: int = 0
+    retired: int = 0
+    adapt_wall_s: float = 0.0
+
+    @property
+    def first_loss(self) -> float | None:
+        return self.adapt_losses[0] if self.adapt_losses else None
+
+    @property
+    def last_loss(self) -> float | None:
+        return self.adapt_losses[-1] if self.adapt_losses else None
+
+    @property
+    def probe_drift(self) -> float | None:
+        """Forgetting counter: probe-loss change since before adaptation."""
+        if len(self.probe_losses) < 2:
+            return None
+        return self.probe_losses[-1] - self.probe_losses[0]
+
+    def summary(self) -> dict:
+        return {
+            "retired": self.retired, "bursts": self.bursts,
+            "adapt_steps": self.steps,
+            "adapt_loss_first": self.first_loss,
+            "adapt_loss_last": self.last_loss,
+            "probe_loss_before": (self.probe_losses[0]
+                                  if self.probe_losses else None),
+            "probe_loss_after": (self.probe_losses[-1]
+                                 if self.probe_losses else None),
+            "probe_drift": self.probe_drift,
+            "adapt_wall_s": round(self.adapt_wall_s, 3),
+            "tokens_per_s": getattr(self.serve_stats, "tokens_per_s", 0.0),
+        }
+
+
+class DeviceSession:
+    """Interleave serving and budget-planned ASI adaptation on one device.
+
+    ``train_step`` must be a ``make_train_step`` product built with
+    ``donate=False`` (the engine still holds references to the params) and
+    an ``asi_state`` whose per-site ranks came from the planner.
+    """
+
+    def __init__(self, api, params, train_step, opt_state, asi_state,
+                 serve_cfg: ServeCfg, cfg: SessionCfg,
+                 probe_batch: dict | None = None, seed: int = 0):
+        self.api = api
+        self.params = params
+        self.opt_state = opt_state
+        self.asi_state = asi_state
+        self.cfg = cfg
+        self._train_step = train_step
+        self.engine = Engine(api, params, serve_cfg, seed=seed)
+        self.replay = ReplayBuffer(cfg.replay_size, cfg.seq_len, seed=seed)
+        self._probe_batch = probe_batch
+        self._eval_loss = jax.jit(
+            lambda p, b, s: api.loss(p, b, s)[0])
+        self.report = SessionReport(serve_stats=None, adapt_losses=[],
+                                    probe_losses=[])
+        self._step_count = 0
+        self._since_burst = 0
+
+    # --- counters -----------------------------------------------------------
+
+    def reset_counters(self):
+        """Zero the report and the step budget (e.g. after a warm-up pass
+        that pre-compiled the engine and the train step)."""
+        self.report = SessionReport(serve_stats=None, adapt_losses=[],
+                                    probe_losses=[])
+        self._step_count = 0
+        self._since_burst = 0
+
+    def probe_loss(self) -> float | None:
+        if self._probe_batch is None:
+            return None
+        return float(self._eval_loss(self.params, self._probe_batch,
+                                     self.asi_state))
+
+    # --- adaptation ---------------------------------------------------------
+
+    def adapt_steps(self, n: int) -> list[float]:
+        """Run up to ``n`` fixed-shape replay steps; updates the engine's
+        params in place (next decode step serves the new weights)."""
+        losses = []
+        t0 = time.perf_counter()
+        for _ in range(n):
+            if len(self.replay) == 0 or self._step_count >= self.cfg.total_steps:
+                break
+            batch = self.replay.sample_batch(self.cfg.batch_size)
+            self.params, self.opt_state, self.asi_state, metrics = \
+                self._train_step(self.params, self.opt_state, self.asi_state,
+                                 batch, jnp.int32(self._step_count))
+            losses.append(float(metrics["loss"]))
+            self._step_count += 1
+        self.engine.params = self.params          # weights go live for decode
+        self.report.adapt_wall_s += time.perf_counter() - t0
+        self.report.adapt_losses.extend(losses)
+        self.report.steps = self._step_count
+        if losses:
+            self.report.bursts += 1
+            pl = self.probe_loss()
+            if pl is not None:
+                self.report.probe_losses.append(pl)
+        return losses
+
+    # --- serving ------------------------------------------------------------
+
+    def _on_retire(self, req: Request):
+        self.report.retired += 1
+        self.replay.add(list(req.prompt) + list(req.out))
+        self._since_burst += 1
+        if self._since_burst >= self.cfg.adapt_every:
+            self._since_burst = 0
+            self.adapt_steps(self.cfg.burst_steps)
+
+    def run(self, requests: list[Request],
+            drain_steps: bool = True) -> SessionReport:
+        """Serve ``requests`` with interleaved adaptation bursts; optionally
+        drain the remaining adaptation-step budget afterwards."""
+        pl = self.probe_loss()
+        if pl is not None and not self.report.probe_losses:
+            self.report.probe_losses.append(pl)
+        self.engine.run(requests, on_retire=self._on_retire)
+        self.report.serve_stats = self.engine.last_stats
+        while (drain_steps and len(self.replay)
+               and self._step_count < self.cfg.total_steps):
+            self.adapt_steps(self.cfg.burst_steps)
+        return self.report

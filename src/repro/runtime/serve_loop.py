@@ -184,9 +184,16 @@ class Engine:
             return fn(self.params, toks)
         return fn(self.params, toks, jnp.asarray(req.embeds))
 
-    def run(self, requests: list[Request]) -> list[Request]:
+    def run(self, requests: list[Request], on_retire=None) -> list[Request]:
         """Serve ``requests``; returns them in completion order.  Counters
-        for the run land in ``self.last_stats``."""
+        for the run land in ``self.last_stats``.
+
+        ``on_retire(req)`` is called once per request the moment it
+        finishes, letting consumers stream completions (e.g. the on-device
+        ``DeviceSession`` feeding its replay buffer) without copying this
+        loop.  The callback runs between jitted steps, so it may mutate
+        ``self.params`` (live weight swaps) — in-flight slots keep decoding
+        under whatever params the next step reads."""
         cfg = self.cfg
         B = self._B
         family = getattr(self.api.cfg, "family", "")
@@ -205,6 +212,8 @@ class Engine:
         results: list[Request] = [r for r in requests if r.max_new_tokens <= 0]
         for r in results:
             r.done = True
+            if on_retire is not None:
+                on_retire(r)
         pending = collections.deque(r for r in requests
                                     if r.max_new_tokens > 0)
         slots: list[Request | None] = [None] * B
@@ -218,6 +227,8 @@ class Engine:
         def _retire(req: Request):
             req.done = True
             results.append(req)
+            if on_retire is not None:
+                on_retire(req)
 
         while pending or any(s is not None for s in slots):
             # --- admission: fill every free slot from the queue ------------
@@ -291,7 +302,7 @@ class SequentialEngine:
         v[slot] = tok
         return jnp.asarray(v)
 
-    def run(self, requests: list[Request]) -> list[Request]:
+    def run(self, requests: list[Request], on_retire=None) -> list[Request]:
         t0 = time.perf_counter()
         pending = list(requests)
         results = []
@@ -323,6 +334,8 @@ class SequentialEngine:
                     pos += 1
                 req.done = True
                 results.append(req)
+                if on_retire is not None:
+                    on_retire(req)
         self.last_stats = _mk_stats(results, gen, 0, steps,
                                     time.perf_counter() - t0)
         return results

@@ -1,0 +1,318 @@
+"""On-device adaptation subsystem tests: activation-memory ledger arithmetic,
+exact calibration capture, budget-respecting planner output, per-site rank
+materialization in the ASI state, the train-while-serve DeviceSession, the
+engine retirement hook, and the launch CLI."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.configs.registry import ARCHS, get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.models import build_model
+from repro.ondevice.ledger import (BYTES_PER_ELEM, build_ledger,
+                                   ledgers_for_registry,
+                                   measured_site_residual_bytes)
+from repro.ondevice.planner import build_plan, capture_calibration
+from repro.ondevice.session import DeviceSession, ReplayBuffer, SessionCfg
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.serve_loop import Engine, Request, SequentialEngine, ServeCfg
+from repro.runtime.train_loop import make_train_step
+
+B, S = 2, 16
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="tinyllama-1.1b"):
+    cfg = get_config(arch).reduced().replace(compress="asi",
+                                             kernel_backend="reference")
+    api = build_model(cfg)
+    params = api.init(KEY)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=S,
+                                global_batch=B, seed=0, branching=2))
+    return cfg, api, params, data
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _setup()
+
+
+@pytest.fixture(scope="module")
+def tiny_plan(tiny):
+    cfg, api, params, data = tiny
+    batches = [data.batch(s) for s in range(2)]
+    return build_plan(api, cfg, params, 0.05, batches, batch_size=B,
+                      seq_len=S)
+
+
+# --------------------------------------------------------------------------
+# ledger
+# --------------------------------------------------------------------------
+
+def test_ledger_every_registry_family():
+    """The ledger builds for every registered architecture (all families)
+    and compressed storage always undercuts vanilla."""
+    for arch, led in ledgers_for_registry(B, S).items():
+        assert led.rows, arch
+        assert led.asi_total_bytes < led.vanilla_total_bytes, arch
+        assert led.min_bytes() <= led.asi_total_bytes, arch
+
+
+def test_ledger_matches_asi_state_sites(tiny):
+    """One ledger row per warm-start factor in the actual ASI state."""
+    cfg, api, _, _ = tiny
+    led = build_ledger(cfg, B, S)
+    n_leaves = len(jax.tree.leaves(api.init_asi(KEY)))
+    assert len(led.rows) == n_leaves
+
+
+def test_ledger_arithmetic(tiny):
+    """vanilla = M*K bytes, compressed = (M+K)*r bytes, per site."""
+    cfg, _, _, _ = tiny
+    led = build_ledger(cfg, B, S)
+    row = led.rows[0]
+    m = B * S
+    assert row.vanilla_bytes == m * row.site.k * BYTES_PER_ELEM
+    assert row.compressed_bytes == (m + row.site.k) * row.rank * BYTES_PER_ELEM
+    # HOSVD pays the per-step SVD; ASI pays one warm-started iteration
+    assert row.hosvd_overhead_flops > row.asi_overhead_flops
+
+
+def test_ledger_measured_matches_analytical():
+    """Eager residual weighing agrees byte-for-byte with the formulas."""
+    m, k, r = 192, 96, 10
+    assert measured_site_residual_bytes(m, k, r, compressed=True) \
+        == (m + k) * r * BYTES_PER_ELEM
+    assert measured_site_residual_bytes(m, k, r, compressed=False) \
+        == m * k * BYTES_PER_ELEM
+
+
+# --------------------------------------------------------------------------
+# calibration capture
+# --------------------------------------------------------------------------
+
+def test_capture_is_exact(tiny):
+    """x^T g from the captured pairs equals the dense model's true weight
+    gradient — the capture taps sit outside the custom_vjp boundary and ASI
+    keeps activation gradients exact, so calibration sees the real thing."""
+    cfg, api, params, data = tiny
+    batch = data.batch(0)
+    asi_state = api.init_asi(KEY)
+    layers = capture_calibration(api, cfg, params, asi_state, [batch])
+    led = build_ledger(cfg, B, S)
+    assert len(layers) == len(led.rows)
+
+    dense_api = build_model(cfg.replace(compress="none"))
+    gfull = jax.grad(lambda p: dense_api.loss(p, batch, None)[0])(params)
+    # check one attention site and one ffn site in the last period
+    np_idx = max(int(r.site.name.split("/")[0].split("_")[1])
+                 for r in led.rows)
+    checks = {f"period_{np_idx}/sub0/mixer/wq": ("mixer", "wq"),
+              f"period_{np_idx}/sub0/ffn/down": ("ffn", "down")}
+    for i, row in enumerate(led.rows):
+        if row.site.name not in checks:
+            continue
+        grp, wname = checks[row.site.name]
+        ref = np.asarray(gfull["stack"]["sub0"][grp][wname][np_idx])
+        got = layers[i].activation.T @ layers[i].grad_out
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+
+
+def test_capture_requires_compressed_model(tiny):
+    cfg, api, params, data = tiny
+    with pytest.raises(ValueError):
+        capture_calibration(api, cfg.replace(compress="none"), params, {},
+                            [data.batch(0)])
+
+
+# --------------------------------------------------------------------------
+# planner
+# --------------------------------------------------------------------------
+
+def test_plan_respects_ledger_budget(tiny, tiny_plan):
+    cfg, _, _, _ = tiny
+    plan = tiny_plan
+    led = build_ledger(cfg, B, S)
+    assert plan.within_budget
+    assert led.bytes_for(plan.rank_plan) == plan.planned_bytes
+    assert plan.planned_bytes <= plan.budget_bytes
+    assert set(plan.rank_plan) == {r.site.name for r in led.rows}
+
+
+def test_tighter_budget_spends_less(tiny, tiny_plan):
+    cfg, api, params, data = tiny
+    batches = [data.batch(s) for s in range(2)]
+    tight = build_plan(api, cfg, params, 0.04, batches, batch_size=B,
+                       seq_len=S)
+    assert tight.planned_bytes <= 0.04 * 2 ** 20
+    assert tight.planned_bytes <= tiny_plan.planned_bytes
+
+
+def test_infeasible_budget_raises(tiny):
+    cfg, api, params, data = tiny
+    # zero budget: caught by the ledger's rank-1 floor, before calibration
+    with pytest.raises(ValueError, match="ledger floor"):
+        build_plan(api, cfg, params, 0.0, [data.batch(0)], batch_size=B,
+                   seq_len=S)
+    # above the rank-1 floor but below the ε grid's smallest candidates
+    with pytest.raises(ValueError, match="grid"):
+        build_plan(api, cfg, params, 0.01, [data.batch(0)], batch_size=B,
+                   seq_len=S)
+
+
+def test_backtracking_method(tiny):
+    cfg, api, params, data = tiny
+    plan = build_plan(api, cfg, params, 0.05, [data.batch(0)], batch_size=B,
+                      seq_len=S, method="backtracking")
+    assert plan.within_budget
+
+
+def test_rank_plan_materializes_in_state(tiny, tiny_plan):
+    """The planner's per-site ranks become the warm-start factor shapes —
+    which is exactly what sets asi_linear's compute/storage rank."""
+    cfg, api, _, _ = tiny
+    state = api.init_asi(KEY, rank_plan=tiny_plan.rank_plan)
+    led = build_ledger(cfg, B, S, rank_plan=tiny_plan.rank_plan)
+    assert led.asi_total_bytes == tiny_plan.planned_bytes
+    for row in led.rows:
+        node = state
+        for part in row.site.name.split("/"):
+            node = node[part]
+        assert node.q.shape[-1] == tiny_plan.rank_plan[row.site.name]
+    ccfgs = tiny_plan.compression_cfgs()
+    assert all(ccfgs[n].rank == tiny_plan.rank_plan[n] for n in ccfgs)
+
+
+def test_planned_training_step_learns(tiny, tiny_plan):
+    """make_train_step consumes the plan (via the state shapes) and the
+    adaptation loss decreases on the deterministic stream."""
+    cfg, api, params, data = tiny
+    state = api.init_asi(KEY, rank_plan=tiny_plan.rank_plan)
+    opt = make_optimizer("adamw", warmup_cosine(1e-2, 2, 12), clip_norm=2.0)
+    step = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                           trainable_mask=api.trainable_mask(params),
+                           donate=False, kernel_backend=cfg.kernel_backend)
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(12):
+        params, opt_state, state, metrics = step(params, opt_state, state,
+                                                 data.batch(i % 3),
+                                                 jnp.int32(i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_plan_grouped_moe_sites():
+    """MoE tail: grouped sites capture (E, T, K) activations and the plan's
+    shared per-site rank lands in the GroupedASIState stack."""
+    cfg, api, params, data = _setup("granite-moe-3b-a800m")
+    plan = build_plan(api, cfg, params, 0.2, [data.batch(0)], batch_size=B,
+                      seq_len=S)
+    grouped = [s for s in plan.sites if s.kind == "grouped"]
+    assert grouped, "moe tail should have grouped ffn sites"
+    state = api.init_asi(KEY, rank_plan=plan.rank_plan)
+    for site in grouped:
+        node = state
+        for part in site.name.split("/"):
+            node = node[part]
+        assert node.q.shape == (site.groups, site.k,
+                                plan.rank_plan[site.name])
+    assert plan.within_budget
+
+
+# --------------------------------------------------------------------------
+# engine retirement hook
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [Engine, SequentialEngine])
+def test_retirement_hook_streams_completions(engine_cls):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    api = build_model(cfg)
+    params = api.init(KEY)
+    reqs = [Request(uid=i, prompt=[1 + i, 2 + i, 3], max_new_tokens=4)
+            for i in range(5)]
+    reqs.append(Request(uid=99, prompt=[7], max_new_tokens=0))  # zero-budget
+    seen = []
+    done = engine_cls(api, params, ServeCfg(max_batch=2, max_len=32)).run(
+        reqs, on_retire=lambda r: seen.append(r.uid))
+    assert [r.uid for r in done] == seen          # streamed, completion order
+    assert sorted(seen) == [0, 1, 2, 3, 4, 99]
+    assert all(r.done for r in done)
+
+
+# --------------------------------------------------------------------------
+# replay buffer + session
+# --------------------------------------------------------------------------
+
+def test_replay_buffer_fixed_shapes():
+    buf = ReplayBuffer(capacity=4, seq_len=8)
+    buf.add([1])                                  # too short: dropped
+    assert len(buf) == 0
+    buf.add([1, 2, 3])
+    for i in range(6):
+        buf.add(list(range(2 + i, 12 + i)))
+    assert len(buf) == 4                          # ring capacity
+    batch = buf.sample_batch(3)
+    assert batch["tokens"].shape == (3, 8)
+    assert batch["targets"].shape == (3, 8)
+    # targets are tokens shifted by one (tiled stream)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][:, 1:]),
+                                  np.asarray(batch["targets"][:, :-1]))
+
+
+def test_device_session_trains_while_serving(tiny, tiny_plan):
+    cfg, api, params, data = tiny
+    state = api.init_asi(KEY, rank_plan=tiny_plan.rank_plan)
+    opt = make_optimizer("adamw", warmup_cosine(1e-2, 2, 10), clip_norm=2.0)
+    step = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                           trainable_mask=api.trainable_mask(params),
+                           donate=False, kernel_backend=cfg.kernel_backend)
+    sess = DeviceSession(api, params, step, opt.init(params), state,
+                         ServeCfg(max_batch=2, max_len=32),
+                         SessionCfg(adapt_every=2, burst_steps=2,
+                                    total_steps=10, batch_size=B, seq_len=S),
+                         probe_batch=data.batch(999))
+    reqs = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
+                    max_new_tokens=6) for i in range(6)]
+    report = sess.run(reqs)
+    assert report.retired == 6
+    assert report.steps == 10                     # budget honored + drained
+    assert report.serve_stats.generated_tokens == 36
+    assert report.adapt_losses[-1] < report.adapt_losses[0]
+    # forgetting counter: probe measured before adaptation and per burst
+    assert len(report.probe_losses) == report.bursts + 1
+    assert report.probe_drift is not None
+    # the adapted weights are live in the engine (same object)
+    assert sess.engine.params is sess.params
+    assert sess.params is not params              # weights actually moved
+
+
+# --------------------------------------------------------------------------
+# launch CLI
+# --------------------------------------------------------------------------
+
+def test_adapt_cli_end_to_end(tmp_path, capsys):
+    from repro.launch import adapt as adapt_cli
+    report = adapt_cli.main([
+        "--config", "tinyllama_1_1b", "--reduced", "--mem-budget-mb", "0.05",
+        "--steps", "4", "--adapt-every", "2", "--requests", "4",
+        "--max-new", "4", "--seq-len", "16", "--kernel-backend", "reference",
+        "--ckpt-dir", str(tmp_path / "ckpt")])
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    by_key = {k: l for l in lines for k in l}
+    assert by_key["plan"]["plan_respects_ledger_budget"]
+    assert by_key["plan"]["plan"]["within_budget"]
+    assert by_key["adaptation"]["adaptation"]["adapt_steps"] == 4
+    assert report.adapt_losses[-1] < report.adapt_losses[0] * 1.05
+    assert checkpointer.latest_step(str(tmp_path / "ckpt")) == 4
+
+
+def test_adapt_cli_rejects_unknown_arch():
+    from repro.launch import adapt as adapt_cli
+    with pytest.raises(SystemExit):
+        adapt_cli.main(["--arch", "nonexistent", "--mem-budget-mb", "1"])

@@ -74,6 +74,47 @@ def test_infeasible_budget_raises():
                                   float(t.memory.min(1).sum()) - 1)
 
 
+def test_backtracking_knapsack_agree_on_shared_instances():
+    """DP vs exact backtracking on shared instances across a budget sweep:
+    the DP is always feasible, never beats the exact optimum, and is no
+    worse than the exact optimum of the budget shrunk by the quantization
+    slack (ceil rounds each of the n items up by at most one bin)."""
+    t = estimate_perplexity(_calib_layers(5), (0.4, 0.6, 0.8, 0.95))
+    lo = float(t.memory.min(1).sum())
+    hi = float(t.memory.max(1).sum())
+    n, n_bins = t.memory.shape[0], 1 << 15
+    for frac in (0.05, 0.25, 0.5, 0.75, 1.0):
+        budget = lo + frac * (hi - lo)
+        bt = select_ranks_backtracking(t.perplexity, t.memory, budget)
+        ks = select_ranks_knapsack(t.perplexity, t.memory, budget,
+                                   n_bins=n_bins)
+        p_bt = sum(t.perplexity[i, j] for i, j in enumerate(bt))
+        p_ks = sum(t.perplexity[i, j] for i, j in enumerate(ks))
+        m_ks = sum(t.memory[i, j] for i, j in enumerate(ks))
+        assert m_ks <= budget                     # conservative quantization
+        assert p_ks >= p_bt - 1e-9                # exact is optimal
+        slack = n * budget / n_bins
+        shrunk = select_ranks_backtracking(t.perplexity, t.memory,
+                                           budget - slack)
+        p_shrunk = sum(t.perplexity[i, j] for i, j in enumerate(shrunk))
+        assert p_ks <= p_shrunk + 1e-9, (frac, p_ks, p_shrunk)
+
+
+def test_zero_budget_raises_for_both():
+    t = estimate_perplexity(_calib_layers(2), (0.5, 0.9))
+    with pytest.raises(ValueError):
+        select_ranks_backtracking(t.perplexity, t.memory, 0.0)
+    with pytest.raises(ValueError):
+        select_ranks_knapsack(t.perplexity, t.memory, 0.0)
+
+
+def test_infeasibly_tight_budget_raises_for_knapsack():
+    t = estimate_perplexity(_calib_layers(3), (0.5, 0.9))
+    tight = float(t.memory.min(1).sum()) - 1
+    with pytest.raises(ValueError):
+        select_ranks_knapsack(t.perplexity, t.memory, tight)
+
+
 def test_apply_selection_structure():
     t = estimate_perplexity(_calib_layers(2), (0.5, 0.9))
     budget = float(t.memory[:, 1].sum())
