@@ -1,0 +1,36 @@
+"""The paper's deployment loop in ~30 lines of user code, via ``repro.api``
+only: serve decode traffic, retire requests into the adapter's replay
+buffer, adapt under a hard activation-memory budget, swap the new weights
+into the live engine — then checkpoint the session.
+
+  PYTHONPATH=src python examples/embed_api.py
+"""
+import json
+
+from repro.api import Session, demo_requests
+
+sess = Session.from_config("tinyllama_1_1b", reduced=True, compress="asi",
+                           kernel_backend="reference", seed=0)
+
+server = sess.server(max_batch=2, max_len=48)              # decode traffic
+adapter = sess.adapter(mem_budget_mb=0.05, steps=4,        # paper §3.3 plan
+                       batch=2, seq_len=16, adapt_every=2)
+
+print(json.dumps({"budget_ok": adapter.plan_respects_budget,
+                  "ranks": adapter.plan.summary()["ranks"]}))
+
+losses = []
+for wave in range(2):
+    # serve a wave; every retirement streams into the replay buffer
+    done = server.run(demo_requests(4, max_new=6, start_uid=4 * wave),
+                      on_retire=adapter.observe)
+    assert all(r.done for r in done)
+    server.swap_params(adapter.step(2))     # adapt, then swap weights live
+    losses.extend(adapter.report.adapt_losses[len(losses):])
+
+print(json.dumps({"serving": server.stats_dict(),
+                  "adapt_losses": [round(l, 3) for l in losses],
+                  "probe_drift": adapter.report.probe_drift}))
+ckpt = sess.save("/tmp/embed_api_ckpt")
+print(json.dumps({"ckpt": ckpt, "restored_step":
+                  Session.load("/tmp/embed_api_ckpt").step}))

@@ -22,6 +22,12 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "DESIGN.md"]
 
+# examples that document the public API surface: must compile and must not
+# reach around repro.api into the launchers or runtime internals
+PUBLIC_API_EXAMPLES = ["examples/embed_api.py"]
+BANNED_IMPORT = re.compile(r"^\s*(?:from|import)\s+repro\.(launch|runtime)",
+                           re.MULTILINE)
+
 # modules whose --help we interrogate for flag checks
 FLAGGED_MODULES = ("repro.launch.train", "repro.launch.serve",
                    "repro.launch.dryrun", "repro.launch.adapt")
@@ -85,9 +91,28 @@ def check_links(text: str, where: str, errors: list):
             errors.append(f"{where}: broken link -> {target}")
 
 
+def check_api_example(rel_path: str, errors: list):
+    path = os.path.join(REPO, rel_path)
+    if not os.path.exists(path):
+        errors.append(f"{rel_path}: public-API example missing")
+        return
+    with open(path) as f:
+        src = f.read()
+    try:
+        compile(src, rel_path, "exec")
+    except SyntaxError as e:
+        errors.append(f"{rel_path}: does not compile: {e}")
+    m = BANNED_IMPORT.search(src)
+    if m:
+        errors.append(f"{rel_path}: imports repro.{m.group(1)} — public-API "
+                      "examples must go through repro.api only")
+
+
 def main() -> int:
     errors: list[str] = []
     help_cache: dict[str, str] = {}
+    for example in PUBLIC_API_EXAMPLES:
+        check_api_example(example, errors)
     for doc in DOCS:
         path = os.path.join(REPO, doc)
         with open(path) as f:
@@ -102,7 +127,8 @@ def main() -> int:
     for e in errors:
         print(f"FAIL {e}")
     if not errors:
-        print(f"OK: {len(DOCS)} docs checked "
+        print(f"OK: {len(DOCS)} docs + {len(PUBLIC_API_EXAMPLES)} API "
+              f"examples checked "
               f"({len(help_cache)} CLI parsers interrogated)")
     return 1 if errors else 0
 

@@ -1,0 +1,32 @@
+"""``repro.api`` — the embeddable runtime surface.
+
+One typed object graph unifies what used to be four CLIs' worth of wiring:
+
+    from repro.api import Session, demo_requests
+
+    sess = Session.from_config("tinyllama_1_1b", reduced=True,
+                               compress="asi", kernel_backend="reference")
+    trainer = sess.trainer(steps=50, ckpt_dir="/tmp/ckpt")
+    trainer.fit()
+    sess.save()
+
+    server = sess.server(max_batch=4, max_len=64)
+    adapter = sess.adapter(mem_budget_mb=0.05)
+    done = server.run(demo_requests(4), on_retire=adapter.observe)
+    server.swap_params(adapter.step())     # train-while-serve, live weights
+
+``repro.launch.{train,serve,adapt,dryrun}`` are thin argparse shims over
+this package; embed the API instead of shelling out to them.  DESIGN.md §9
+documents the object graph, state ownership, and the CLI-shim contract.
+"""
+from repro.api.resolve import (add_arch_argument, parse_mesh, resolve_arch,
+                               warn_programmatic_use)
+from repro.api.session import (Adapter, Server, Session, Trainer,
+                               data_source, demo_requests)
+
+__all__ = [
+    "Session", "Trainer", "Server", "Adapter",
+    "data_source", "demo_requests",
+    "resolve_arch", "add_arch_argument", "parse_mesh",
+    "warn_programmatic_use",
+]

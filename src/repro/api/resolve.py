@@ -1,0 +1,66 @@
+"""Shared CLI/config resolution helpers for the embeddable API.
+
+Every launcher used to re-implement these three things slightly differently
+(adapt accepted ``tinyllama_1_1b`` spellings, the others rejected them; only
+train parsed ``--mesh``; only adapt had a ``--config`` alias).  They live
+here once, and the four ``repro.launch`` shims plus ``Session.from_config``
+all share them.
+"""
+from __future__ import annotations
+
+import argparse
+import warnings
+
+from repro.configs.registry import ARCHS
+
+
+def resolve_arch(name: str) -> str:
+    """Normalize an architecture spelling to its registry id.
+
+    ``tinyllama_1_1b``, ``tinyllama-1.1b`` and ``tinyllama-1-1b`` all resolve
+    to ``tinyllama-1.1b``; unknown names pass through unchanged so the caller
+    (argparse ``choices`` or ``Session.from_config``) owns the error.
+    """
+    fold = lambda s: s.replace("-", "_").replace(".", "_")  # noqa: E731
+    canon = {fold(a): a for a in ARCHS}
+    return canon.get(fold(str(name)), name)
+
+
+def add_arch_argument(ap: argparse.ArgumentParser, required: bool = True):
+    """The one ``--arch``/``--config`` argument all four CLIs share:
+    underscore spellings are normalized by ``resolve_arch`` before the
+    ``choices`` check, so every launcher accepts every spelling adapt did."""
+    return ap.add_argument(
+        "--arch", "--config", dest="arch", type=resolve_arch, choices=ARCHS,
+        required=required, metavar="ARCH",
+        help=f"architecture ({', '.join(ARCHS)}; underscore spellings "
+             "accepted)")
+
+
+def parse_mesh(mesh) -> tuple[int, int] | None:
+    """``--mesh D,M`` -> (data, model) axis sizes; tuples pass through."""
+    if mesh is None or isinstance(mesh, tuple):
+        return mesh
+    try:
+        shape = tuple(int(x) for x in str(mesh).split(","))
+    except ValueError:
+        shape = ()
+    if len(shape) != 2:
+        raise ValueError(f"--mesh {mesh!r} must be two comma-separated "
+                         f"ints: data,model (e.g. 2,4)")
+    return shape
+
+
+def warn_programmatic_use(module: str, argv) -> None:
+    """Deprecation shim for the pre-``repro.api`` programmatic surface.
+
+    ``python -m repro.launch.X`` calls ``main()`` with ``argv=None`` (parse
+    ``sys.argv``) — that path stays silent.  Passing an explicit ``argv``
+    list is the old embed-the-CLI pattern, now deprecated in favour of
+    ``repro.api.Session``.
+    """
+    if argv is not None:
+        warnings.warn(
+            f"programmatic use of {module}.main() is deprecated; embed "
+            "repro.api.Session instead (see DESIGN.md §9)",
+            DeprecationWarning, stacklevel=3)

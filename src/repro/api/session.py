@@ -1,0 +1,611 @@
+"""Embeddable runtime sessions: one wiring of config -> model -> state.
+
+``Session.from_config`` performs the resolution every launcher used to
+re-implement — config-name normalization, ``ModelAPI`` build, kernel-backend
+dispatch validation, optimizer/schedule construction, checkpointer attach —
+exactly once, then hands out composable runtime handles:
+
+* ``session.trainer(...)`` — the fault-tolerant loop (``runtime.train_loop``),
+  including ``--layout``-style mesh sharding and gradient accumulation;
+* ``session.server(...)`` — the continuous-batching engine
+  (``runtime.serve_loop``), with live ``swap_params``;
+* ``session.adapter(...)`` — budget-planned train-while-serve
+  (``repro.ondevice``: ledger -> planner -> ``DeviceSession``);
+* ``session.analyze(...)`` — the dry-run's FLOPs + activation-ledger report
+  as data (``repro.api.analyze``), not prints.
+
+State transitions are explicit and checkpoint-backed: ``trainer.fit()``
+writes its result back into the session's params/optimizer/ASI state,
+``session.save()`` persists them with provenance meta, ``Session.load()``
+reconstructs an equivalent session from that meta, and a live
+``server.swap_params(adapter.step())`` reuses one params lifecycle across
+serving and adaptation.  The four ``repro.launch`` CLIs are thin argparse
+shims over this module (see DESIGN.md §9 for the shim contract).
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+import weakref
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.resolve import parse_mesh, resolve_arch
+from repro.checkpoint import checkpointer
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, get_config
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.kernels import dispatch
+from repro.launch.mesh import make_layout_mesh
+from repro.models import build_model
+from repro.models.registry import ModelAPI
+from repro.ondevice.ledger import build_ledger
+from repro.ondevice.planner import build_plan
+from repro.ondevice.session import DeviceSession, ReplayBuffer, SessionCfg
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
+                                      ServeCfg)
+from repro.runtime.train_loop import (TrainLoopCfg, TrainResult,
+                                      make_mesh_plan, make_train_step, run)
+
+
+def data_source(cfg: ModelConfig, seq_len: int, global_batch: int, seed: int):
+    """Synthetic LM stream for ``cfg``'s family: plain token batches for
+    decoder-only models, plus constant frames/patch embeds for encdec/vlm.
+    Pure in ``step`` — exactly what the restartable loop requires."""
+    base = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                global_batch=global_batch, seed=seed,
+                                branching=2))
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        return base
+
+    class Wrapped:
+        def batch(self, step):
+            b = base.batch(step)
+            n = b["tokens"].shape[0]
+            if cfg.family == "encdec":
+                b["frames"] = 0.1 * jnp.ones(
+                    (n, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+            else:  # vlm
+                b["embeds"] = 0.1 * jnp.ones(
+                    (n, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+            return b
+    return Wrapped()
+
+
+def demo_requests(n: int, max_new: int = 8, *, start_uid: int = 0,
+                  prompt_len: int = 5) -> list[Request]:
+    """The deterministic synthetic request stream the serve/adapt CLIs use."""
+    return [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(prompt_len)],
+                    max_new_tokens=max_new)
+            for i in range(start_uid, start_uid + n)]
+
+
+class Session:
+    """One resolved (config, model, state) lifecycle shared by every handle.
+
+    Construction resolves everything exactly once; params/ASI state are
+    materialized lazily so analysis-only sessions (``session.analyze()``)
+    never allocate real weights.
+    """
+
+    def __init__(self, cfg: ModelConfig, arch: str, model: ModelAPI, *,
+                 reduced: bool = False, overrides: dict | None = None,
+                 seed: int = 0, ckpt_dir: str | None = None):
+        self.cfg = cfg
+        self.arch = arch
+        self.model = model
+        self.seed = seed
+        self.ckpt_dir = ckpt_dir
+        self.reduced = reduced
+        self.overrides = dict(overrides or {})
+        self.step = 0
+        self.rank_plan: dict | None = None      # planner output, shapes ASI state
+        # live engines sharing params; weak so a dropped Server re-enables
+        # trainer buffer donation and frees its KV cache
+        self._servers: weakref.WeakSet = weakref.WeakSet()
+        self.opt = None
+        self.opt_name: str | None = None
+        self.opt_state = None
+        self.optimizer_substitution: dict | None = None
+        self._params = None
+        self._asi = None
+
+    # --- construction -----------------------------------------------------
+
+    @classmethod
+    def from_config(cls, name: str, *, reduced: bool = False, seed: int = 0,
+                    ckpt_dir: str | None = None, **overrides) -> "Session":
+        """Resolve ``name`` (underscore spellings accepted), apply ``reduced``
+        and any non-``None`` ``ModelConfig`` overrides, validate the kernel
+        backend, and build the ``ModelAPI`` — once.
+
+        ``None`` override values are dropped, so CLI shims can forward
+        optional flags verbatim (``asi_rank=args.asi_rank``).
+        """
+        arch = resolve_arch(name)
+        if arch not in ARCHS:
+            raise ValueError(f"unknown arch {name!r}; choose from {ARCHS}")
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        applied = {k: v for k, v in overrides.items() if v is not None}
+        if applied:
+            cfg = cfg.replace(**applied)
+        dispatch.resolve(cfg.kernel_backend)    # invalid flag fails fast here
+        return cls(cfg, arch, build_model(cfg), reduced=reduced,
+                   overrides=applied, seed=seed, ckpt_dir=ckpt_dir)
+
+    def derive(self, **overrides) -> "Session":
+        """A sibling session with extra config overrides (fresh state)."""
+        return Session.from_config(
+            self.arch, reduced=self.reduced, seed=self.seed,
+            ckpt_dir=self.ckpt_dir, **{**self.overrides, **overrides})
+
+    # --- state ------------------------------------------------------------
+
+    @property
+    def params(self):
+        if self._params is None:
+            self._params = self.model.init(jax.random.PRNGKey(self.seed))
+        return self._params
+
+    @params.setter
+    def params(self, value):
+        self._params = value
+
+    @property
+    def asi_state(self):
+        if self._asi is None:
+            self._asi = (self.model.init_asi(jax.random.PRNGKey(self.seed),
+                                             rank_plan=self.rank_plan)
+                         if self.cfg.compress != "none" else {})
+        return self._asi
+
+    @asi_state.setter
+    def asi_state(self, value):
+        self._asi = value
+
+    def trainable_mask(self):
+        return (self.model.trainable_mask(self.params)
+                if self.cfg.compress != "none" else None)
+
+    # --- optimizer / step wiring -------------------------------------------
+
+    def attach_optimizer(self, lr: float, warmup_steps: int, total_steps: int,
+                         clip_norm: float = 2.0):
+        """Build optimizer + warmup-cosine schedule and init its state.
+
+        adafactor is substituted with adamw (it is not mask-aware for frozen
+        backbones); the substitution is recorded in
+        ``self.optimizer_substitution`` for callers that surface it.
+        """
+        configured = self.cfg.optimizer
+        used = "adamw" if configured == "adafactor" else configured
+        self.optimizer_substitution = None if used == configured else {
+            "configured": configured, "used": used,
+            "reason": "adafactor is not mask-aware for frozen backbones"}
+        self.opt_name = used
+        self.opt = make_optimizer(
+            used, warmup_cosine(lr, warmup_steps, total_steps),
+            clip_norm=clip_norm)                # paper: L2 clip threshold 2.0
+        self.opt_state = self.opt.init(self.params)
+        return self.opt
+
+    def train_step(self, *, plan=None, grad_accum: int = 1,
+                   donate: bool = True):
+        """The jitted step over this session's loss/mask/backend — the
+        blessed replacement for hand-wiring ``make_train_step``."""
+        if self.opt is None:
+            raise ValueError("no optimizer attached: call attach_optimizer() "
+                             "or use session.trainer()/session.adapter()")
+        model = self.model
+        return make_train_step(lambda p, b, s: model.loss(p, b, s), self.opt,
+                               trainable_mask=self.trainable_mask(),
+                               donate=donate,
+                               kernel_backend=self.cfg.kernel_backend,
+                               plan=plan, grad_accum=grad_accum)
+
+    # --- checkpoints --------------------------------------------------------
+
+    def save(self, ckpt_dir: str | None = None, *, step: int | None = None,
+             meta: dict | None = None, keep: int = 3) -> str:
+        """Atomic checkpoint of params/ASI (+ optimizer state when attached)
+        with session provenance meta, so ``Session.load`` can rebuild an
+        equivalent session without the caller re-supplying the config."""
+        directory = ckpt_dir or self.ckpt_dir
+        if directory is None:
+            raise ValueError("no checkpoint directory: pass ckpt_dir or set "
+                             "session.ckpt_dir")
+        self.ckpt_dir = directory
+        tree = {"params": self.params, "asi": self.asi_state}
+        if self.opt_state is not None:
+            tree["opt"] = self.opt_state
+        m: dict = {"arch": self.arch, "reduced": self.reduced,
+                   "overrides": self.overrides, "seed": self.seed}
+        if self.opt_name is not None:
+            m["optimizer"] = self.opt_name
+        if self.rank_plan:
+            m["rank_plan"] = {k: int(v) for k, v in self.rank_plan.items()}
+        m.update(meta or {})
+        return checkpointer.save(directory, self.step if step is None else step,
+                                 tree, meta=m, keep=keep)
+
+    @classmethod
+    def load(cls, ckpt_dir: str, *, step: int | None = None,
+             **overrides) -> "Session":
+        """Rebuild a session from a ``Session.save`` checkpoint: provenance
+        meta supplies arch/overrides/rank-plan, the templates come from the
+        ``eval_shape``-safe ``ModelAPI.init_struct``, and params/ASI state
+        are restored (optimizer state stays with whoever attaches one)."""
+        at = checkpointer.latest_step(ckpt_dir) if step is None else step
+        if at is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        with open(os.path.join(ckpt_dir, f"step_{at:08d}", "meta.json")) as f:
+            meta = json.load(f)
+        if "arch" not in meta:
+            raise ValueError(
+                f"{ckpt_dir}: meta.json has no session provenance; restore "
+                "into an explicit Session.from_config template instead")
+        kw = dict(meta.get("overrides", {}))
+        kw.update(overrides)
+        # session-level fields are explicit from_config keywords — pop them
+        # so user overrides replace the meta values instead of colliding
+        reduced = kw.pop("reduced", meta.get("reduced", False))
+        seed = kw.pop("seed", meta.get("seed", 0))
+        sess = cls.from_config(meta["arch"], reduced=reduced, seed=seed,
+                               ckpt_dir=kw.pop("ckpt_dir", ckpt_dir), **kw)
+        sess.rank_plan = meta.get("rank_plan") or None
+        template = {"params": sess.model.init_struct()}
+        if sess.cfg.compress != "none":
+            template["asi"] = jax.eval_shape(
+                lambda k: sess.model.init_asi(k, rank_plan=sess.rank_plan),
+                jax.random.PRNGKey(sess.seed))
+        tree, at, _ = checkpointer.restore(ckpt_dir, template, step=at)
+        sess._params = tree["params"]
+        sess._asi = tree.get("asi", {})
+        sess.step = at
+        return sess
+
+    # --- handles ------------------------------------------------------------
+
+    def trainer(self, **kw) -> "Trainer":
+        return Trainer(self, **kw)
+
+    def server(self, **kw) -> "Server":
+        return Server(self, **kw)
+
+    def adapter(self, **kw) -> "Adapter":
+        return Adapter(self, **kw)
+
+    def analyze(self, shape: str = "train_4k", *,
+                reduce_shape: bool | None = None, verbose: bool = False,
+                **kw) -> dict:
+        """The dry-run cell report (lower+compile, memory/cost analysis,
+        roofline terms, activation ledger) as a dict — see
+        ``repro.api.analyze.analyze_cell`` for the knobs.
+
+        A reduced session analyzes the reduced input shape by default
+        (parity with ``dryrun --reduced``); pass ``reduce_shape=False`` to
+        lower the full-size shape against the miniature config anyway."""
+        from repro.api import analyze as _analyze
+        from repro.configs.base import SHAPES
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        if self.reduced if reduce_shape is None else reduce_shape:
+            shape = shape.reduced()
+        return _analyze.analyze_cell(self, shape, verbose=verbose, **kw)
+
+
+class Trainer:
+    """``make_train_step`` + the fault-tolerant loop over a session.
+
+    Mirrors the train CLI contract: warmup-cosine over ``steps``, synthetic
+    ``data_source`` unless ``data`` is supplied, optional ``layout``/``mesh``
+    sharding (``mesh_info`` carries the dict the CLI prints), checkpoints
+    under ``ckpt_dir``.  ``fit()`` runs to ``steps`` and writes the final
+    params/optimizer/ASI state back into the session.
+    """
+
+    @staticmethod
+    def validate(*, batch: int = 8, grad_accum: int = 1,
+                 layout: str | None = None, mesh=None) -> None:
+        """Pure flag validation (no model/optimizer work) — CLI shims call
+        this up front so argparse-shaped errors stay argparse-shaped while
+        real construction failures keep their tracebacks."""
+        if grad_accum < 1:
+            raise ValueError(f"--grad-accum {grad_accum} must be >= 1")
+        if batch % grad_accum != 0:
+            raise ValueError(f"--batch {batch} must divide by "
+                             f"--grad-accum {grad_accum}")
+        if mesh is not None and layout is None:
+            raise ValueError("--mesh requires --layout (it only shapes a "
+                             "layout's mesh)")
+        parse_mesh(mesh)
+
+    def __init__(self, session: Session, *, steps: int = 100,
+                 seq_len: int = 64, batch: int = 8, lr: float = 1e-3,
+                 layout: str | None = None, mesh=None, grad_accum: int = 1,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 fail_at: int = -1, data=None):
+        self.validate(batch=batch, grad_accum=grad_accum, layout=layout,
+                      mesh=mesh)
+        self.session = session
+        # one checkpoint lifecycle: the loop writes where the session points
+        # unless the caller says otherwise
+        ckpt_dir = (ckpt_dir if ckpt_dir is not None
+                    else (session.ckpt_dir or "/tmp/repro_ckpt"))
+        session.ckpt_dir = session.ckpt_dir or ckpt_dir
+        session.attach_optimizer(lr, max(steps // 20, 1), steps)
+        self.data = (data if data is not None
+                     else data_source(session.cfg, seq_len, batch,
+                                      session.seed))
+        self.plan = None
+        self.mesh_info: dict | None = None
+        if layout is not None:
+            mesh_obj = make_layout_mesh(layout, parse_mesh(mesh))
+            self.plan = make_mesh_plan(session.cfg, mesh_obj, layout,
+                                       session.params, session.opt_state,
+                                       session.asi_state, self.data.batch(0))
+            self.mesh_info = {"mesh": dict(mesh_obj.shape), "layout": layout,
+                              "n_devices": mesh_obj.size,
+                              "grad_accum": grad_accum}
+        self.loop_cfg = TrainLoopCfg(total_steps=steps, ckpt_dir=ckpt_dir,
+                                     ckpt_every=ckpt_every,
+                                     fail_at_step=fail_at)
+        self._grad_accum = grad_accum
+        self._step_fn = None
+        self._donated: bool | None = None
+        self.result: TrainResult | None = None
+
+    def fit(self, on_log=None, hooks: dict | None = None) -> TrainResult:
+        hooks = dict(hooks or {})
+        if on_log is not None:
+            hooks["on_log"] = on_log
+        s = self.session
+        # donation recycles the step's input buffers in place — never donate
+        # params a live Server engine still references (use-after-donate on
+        # accelerators; CPU ignores donation, so tests alone won't catch it)
+        donate = not s._servers
+        if self._step_fn is None or donate != self._donated:
+            self._step_fn = s.train_step(plan=self.plan,
+                                         grad_accum=self._grad_accum,
+                                         donate=donate)
+            self._donated = donate
+        res = run(self._step_fn, s.params, s.opt_state, s.asi_state,
+                  self.data, self.loop_cfg, hooks=hooks, plan=self.plan)
+        s.params, s.opt_state, s.asi_state = (res.params, res.opt_state,
+                                              res.asi_state)
+        s.step = res.step
+        self.result = res
+        return res
+
+    def summary(self, res: TrainResult | None = None) -> dict:
+        res = res if res is not None else self.result
+        return {"final_step": res.step, "restarts": res.restarts,
+                "stragglers": len(res.straggler_steps),
+                "final_loss": round(res.history[-1]["loss"], 4)}
+
+
+class Server:
+    """A serving engine over the session's params with live weight swaps."""
+
+    def __init__(self, session: Session, *, engine: str = "continuous",
+                 max_batch: int = 4, max_len: int = 128,
+                 temperature: float = 0.0, eos_id: int = -1):
+        if engine not in ("continuous", "sequential"):
+            raise ValueError(f"engine {engine!r} must be continuous or "
+                             "sequential")
+        self.session = session
+        self.engine_name = engine
+        cls = Engine if engine == "continuous" else SequentialEngine
+        self.engine = cls(session.model, session.params,
+                          ServeCfg(max_batch=max_batch, max_len=max_len,
+                                   temperature=temperature, eos_id=eos_id),
+                          seed=session.seed)
+        session._servers.add(self)      # trainers must not donate our params
+
+    def run(self, requests: list[Request], on_retire=None) -> list[Request]:
+        """Serve ``requests`` to completion; counters land in
+        ``last_stats``.  ``on_retire(req)`` streams finished requests (e.g.
+        into ``Adapter.observe``)."""
+        return self.engine.run(requests, on_retire=on_retire)
+
+    def swap_params(self, params) -> "Server":
+        """Install ``params`` live: the next decode step serves them.
+        In-flight requests keep their slots, positions, and KV rows."""
+        if params is not None:
+            self.session.params = params
+            self.engine.params = params
+        return self
+
+    def close(self) -> None:
+        """Detach from the session: trainers may donate buffers again and
+        the engine (with its KV cache) becomes collectable.  The weak
+        registry also drops a Server that simply goes out of scope; close()
+        makes the hand-back deterministic."""
+        self.session._servers.discard(self)
+
+    @property
+    def last_stats(self):
+        return self.engine.last_stats
+
+    def stats_dict(self) -> dict:
+        s = self.engine.last_stats
+        return {"engine": self.engine_name, "requests": s.requests,
+                "generated_tokens": s.generated_tokens,
+                "decode_steps": s.decode_steps,
+                "tokens_per_s": round(s.tokens_per_s, 1),
+                "ttft_mean_s": round(s.ttft_mean_s, 4)}
+
+
+class Adapter:
+    """Budget-driven on-device adaptation: ledger -> planner ->
+    ``DeviceSession``, over the session's params.
+
+    The ledger is priced eagerly (feasibility is cheap and analytical); the
+    §3.3 calibration + budget search runs lazily on first use, re-shapes the
+    session's ASI state to the planned per-site ranks, and attaches a fresh
+    optimizer.  Two composable modes share one replay buffer and one step
+    counter:
+
+    * ``run(requests)`` — train-while-serve via ``DeviceSession`` (the adapt
+      CLI path: bursts ride the engine's retirement hook);
+    * ``observe(req)`` / ``step()`` — feed retirements from *your own* server
+      and run bursts yourself, then ``server.swap_params(adapter.step())``.
+    """
+
+    def __init__(self, session: Session, *, mem_budget_mb: float,
+                 steps: int = 10, adapt_every: int = 4, burst_steps: int = 1,
+                 replay_size: int = 64, batch: int = 2, seq_len: int = 32,
+                 calib_batches: int = 2, rank_select: str = "knapsack",
+                 lr: float = 1e-2, max_batch: int = 4, max_len: int = 64,
+                 temperature: float = 0.0):
+        if session.cfg.compress != "asi":
+            raise ValueError(
+                "adapter needs an ASI session: "
+                "Session.from_config(..., compress='asi')")
+        self.session = session
+        self.mem_budget_mb = mem_budget_mb
+        self.steps = steps
+        self.adapt_every = adapt_every
+        self.burst_steps = burst_steps
+        self.replay_size = replay_size
+        self.batch = batch
+        self.seq_len = seq_len
+        self.calib_batches = calib_batches
+        self.rank_select = rank_select
+        self.lr = lr
+        self.serve_cfg = ServeCfg(max_batch=max_batch, max_len=max_len,
+                                  temperature=temperature)
+        self.ledger = build_ledger(session.cfg, batch, seq_len)
+        self._data = LMStream(LMStreamCfg(vocab_size=session.cfg.vocab_size,
+                                          seq_len=seq_len, global_batch=batch,
+                                          seed=session.seed, branching=2))
+        self.replay = ReplayBuffer(replay_size, seq_len, seed=session.seed)
+        self._plan = None
+        self._ds: DeviceSession | None = None
+        self._retired_before_ds = 0   # observe() arrivals predating the DS
+
+    # --- ledger / plan ------------------------------------------------------
+
+    def ledger_report(self) -> dict:
+        """Budget feasibility before anything trains (analytical bytes)."""
+        led = self.ledger
+        return {"ledger": led.summary(), "budget_mb": self.mem_budget_mb,
+                "vanilla_fits": (led.vanilla_total_bytes
+                                 <= self.mem_budget_mb * 2 ** 20),
+                "rank1_floor_mb": round(led.min_bytes() / 2 ** 20, 4)}
+
+    @property
+    def plan(self):
+        """The §3.3 calibration + budget-search plan (computed once)."""
+        if self._plan is None:
+            s = self.session
+            calib = [self._data.batch(i) for i in range(self.calib_batches)]
+            self._plan = build_plan(s.model, s.cfg, s.params,
+                                    self.mem_budget_mb, calib,
+                                    batch_size=self.batch,
+                                    seq_len=self.seq_len,
+                                    method=self.rank_select, seed=s.seed)
+        return self._plan
+
+    @property
+    def plan_respects_budget(self) -> bool:
+        return (self.ledger.bytes_for(self.plan.rank_plan)
+                <= self.plan.budget_bytes)
+
+    def plan_report(self) -> dict:
+        return {"plan": self.plan.summary(),
+                "plan_respects_ledger_budget": self.plan_respects_budget}
+
+    # --- the device session -------------------------------------------------
+
+    def device_session(self) -> DeviceSession:
+        """The wired ``DeviceSession`` (built once): planned-rank ASI state,
+        fresh optimizer, non-donating train step, shared replay buffer."""
+        if self._ds is None:
+            s = self.session
+            plan = self.plan
+            s.rank_plan = {k: int(v) for k, v in plan.rank_plan.items()}
+            s.asi_state = s.model.init_asi(jax.random.PRNGKey(s.seed),
+                                           rank_plan=plan.rank_plan)
+            s.attach_optimizer(self.lr, max(self.steps // 5, 1),
+                               max(self.steps, 2))
+            step_fn = s.train_step(donate=False)  # engine shares the params
+            ds = DeviceSession(
+                s.model, s.params, step_fn, s.opt_state, s.asi_state,
+                self.serve_cfg,
+                SessionCfg(adapt_every=self.adapt_every,
+                           burst_steps=self.burst_steps,
+                           total_steps=self.steps, batch_size=self.batch,
+                           seq_len=self.seq_len, replay_size=self.replay_size),
+                probe_batch=self._data.batch(10_000), seed=s.seed)
+            ds.replay = self.replay               # observe() and run() share it
+            ds.report.retired = self._retired_before_ds
+            # seed the pre-adaptation probe baseline here (not only in
+            # ds.run()) so the observe()+step() path measures forgetting
+            # from *before* the first burst too
+            baseline = ds.probe_loss()
+            if baseline is not None:
+                ds.report.probe_losses.append(baseline)
+            self._ds = ds
+        return self._ds
+
+    def _sync(self, ds: DeviceSession):
+        s = self.session
+        s.params, s.opt_state, s.asi_state = ds.params, ds.opt_state, \
+            ds.asi_state
+        s.step = ds.report.steps
+
+    # --- adaptation ---------------------------------------------------------
+
+    def observe(self, req: Request) -> "Adapter":
+        """Feed a retired request's token stream into the replay buffer
+        (pass this as ``server.run(..., on_retire=adapter.observe)``)."""
+        self.replay.add(list(req.prompt) + list(req.out))
+        if self._ds is not None:
+            self._ds.report.retired += 1
+        else:
+            self._retired_before_ds += 1
+        return self
+
+    def _sync_in(self, ds: DeviceSession):
+        """Point the device session at the session's current state (the
+        session may have moved on via trainer.fit() or an external swap)."""
+        if ds.params is not self.session.params:
+            ds.params = ds.engine.params = self.session.params
+            ds.opt_state = self.session.opt_state
+            ds.asi_state = self.session.asi_state
+
+    def step(self, n: int | None = None):
+        """Run up to ``n`` (default ``burst_steps``) replay train steps and
+        return the updated params — feed them to ``server.swap_params``."""
+        ds = self.device_session()
+        self._sync_in(ds)
+        if ds._step_count >= self.steps:
+            warnings.warn(
+                f"adaptation budget exhausted ({self.steps} steps): "
+                "Adapter.step() is now a no-op — build the adapter with a "
+                "larger steps= budget for longer-lived loops", stacklevel=2)
+        ds.adapt_steps(self.burst_steps if n is None else n)
+        self._sync(ds)
+        return self.session.params
+
+    def run(self, requests: list[Request],
+            drain_steps: bool = True):
+        """Train-while-serve: decode ``requests`` on the device session's
+        engine with adaptation bursts riding the retirement hook."""
+        ds = self.device_session()
+        self._sync_in(ds)
+        report = ds.run(requests, drain_steps=drain_steps)
+        self._sync(ds)
+        return report
+
+    @property
+    def report(self):
+        return None if self._ds is None else self._ds.report

@@ -1,52 +1,31 @@
-"""On-device adaptation launcher: budget-driven train-while-serve.
+"""On-device adaptation launcher — a thin argparse shim over ``repro.api``.
 
 The paper's deployment loop as one command — ledger feasibility, §3.3
-calibration + budget search, then a ``DeviceSession`` that serves decode
-traffic with the continuous-batching engine while running memory-budgeted
-ASI fine-tuning steps from a replay buffer of retired requests:
+calibration + budget search, then train-while-serve from a replay buffer of
+retired requests:
 
   PYTHONPATH=src python -m repro.launch.adapt --arch tinyllama-1.1b \
       --reduced --mem-budget-mb 0.05 --steps 10 --adapt-every 2 \
       --requests 8 --max-new 8
 
-Output is JSON lines: the analytical ledger (per-layer vanilla vs compressed
-bytes), the plan (per-layer ε/rank under ``--mem-budget-mb``), then serving
-and adaptation counters.  The adapted weights are checkpointed via the usual
-atomic checkpointer.  ``--config tinyllama_1_1b``-style spellings are
-accepted as an ``--arch`` alias (underscores normalize to the registry ids).
+Output is JSON lines: the analytical ledger, the plan (per-layer ε/rank
+under ``--mem-budget-mb``), then serving and adaptation counters; the
+adapted weights are checkpointed with session provenance.  All wiring lives
+in ``repro.api.Session.adapter``; embed that instead of calling ``main()``
+programmatically (which is deprecated).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-
-from repro.checkpoint import checkpointer
-from repro.configs.registry import ARCHS, get_config
-from repro.data.synthetic import LMStream, LMStreamCfg
-from repro.models import build_model
-from repro.ondevice.ledger import build_ledger
-from repro.ondevice.planner import build_plan
-from repro.ondevice.session import DeviceSession, SessionCfg
-from repro.optim.optimizers import make_optimizer
-from repro.optim.schedules import warmup_cosine
-from repro.runtime.serve_loop import Request, ServeCfg
-from repro.runtime.train_loop import make_train_step
-
-
-def _normalize_arch(name: str) -> str:
-    """Accept ``tinyllama_1_1b``-style spellings for registry ids."""
-    canon = {a.replace("-", "_").replace(".", "_"): a for a in ARCHS}
-    return canon.get(name.replace("-", "_").replace(".", "_"), name)
+from repro import api
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         epilog="Full flag matrix: README.md; subsystem design: DESIGN.md §8")
-    ap.add_argument("--arch", "--config", dest="arch", required=True,
-                    help=f"architecture ({', '.join(ARCHS)}; underscore "
-                         "spellings accepted)")
+    api.add_arch_argument(ap)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="CPU-sized config (--no-reduced = full arch)")
@@ -84,76 +63,31 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
+    api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
-    arch = _normalize_arch(args.arch)
-    if arch not in ARCHS:
-        raise SystemExit(f"unknown arch {args.arch!r}; choose from {ARCHS}")
-    cfg = get_config(arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = cfg.replace(compress="asi", kernel_backend=args.kernel_backend)
-    if cfg.family == "encdec":
+    sess = api.Session.from_config(args.arch, reduced=args.reduced,
+                                   seed=args.seed, compress="asi",
+                                   kernel_backend=args.kernel_backend)
+    if sess.cfg.family == "encdec":
         raise SystemExit("encdec serving needs audio frames; on-device "
                          "adaptation currently targets decoder-only archs")
-
-    api = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = api.init(key)
-
-    # --- ledger: budget feasibility before anything trains ----------------
-    ledger = build_ledger(cfg, args.batch, args.seq_len)
-    print(json.dumps({"ledger": ledger.summary(),
-                      "budget_mb": args.mem_budget_mb,
-                      "vanilla_fits": (ledger.vanilla_total_bytes
-                                       <= args.mem_budget_mb * 2 ** 20),
-                      "rank1_floor_mb": round(ledger.min_bytes() / 2**20, 4)}))
-
-    # --- planner: calibration + §3.3 budget search ------------------------
-    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size,
-                                seq_len=args.seq_len,
-                                global_batch=args.batch, seed=args.seed,
-                                branching=2))
-    calib = [data.batch(s) for s in range(args.calib_batches)]
-    plan = build_plan(api, cfg, params, args.mem_budget_mb, calib,
-                      batch_size=args.batch, seq_len=args.seq_len,
-                      method=args.rank_select, seed=args.seed)
-    planned_ok = ledger.bytes_for(plan.rank_plan) <= plan.budget_bytes
-    print(json.dumps({"plan": plan.summary(),
-                      "plan_respects_ledger_budget": planned_ok}))
-    if not planned_ok:
+    adapter = sess.adapter(
+        mem_budget_mb=args.mem_budget_mb, steps=args.steps,
+        adapt_every=args.adapt_every, burst_steps=args.burst_steps,
+        replay_size=args.replay_size, batch=args.batch, seq_len=args.seq_len,
+        calib_batches=args.calib_batches, rank_select=args.rank_select,
+        lr=args.lr, max_batch=args.max_batch, max_len=args.max_len,
+        temperature=args.temperature)
+    print(json.dumps(adapter.ledger_report()))
+    print(json.dumps(adapter.plan_report()))
+    if not adapter.plan_respects_budget:
         raise SystemExit("planner produced a plan the ledger prices over "
                          "budget — this is a bug, not a user error")
-
-    # --- session: train-while-serve ---------------------------------------
-    asi_state = api.init_asi(key, rank_plan=plan.rank_plan)
-    opt_name = cfg.optimizer if cfg.optimizer != "adafactor" else "adamw"
-    if opt_name != cfg.optimizer:
-        print(json.dumps({"optimizer_substitution": {
-            "configured": cfg.optimizer, "used": opt_name,
-            "reason": "adafactor is not mask-aware for frozen backbones"}}))
-    opt = make_optimizer(
-        opt_name,
-        warmup_cosine(args.lr, max(args.steps // 5, 1), max(args.steps, 2)),
-        clip_norm=2.0)
-    opt_state = opt.init(params)
-    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
-                              trainable_mask=api.trainable_mask(params),
-                              donate=False,          # engine shares params
-                              kernel_backend=cfg.kernel_backend)
-    session = DeviceSession(
-        api, params, step_fn, opt_state, asi_state,
-        ServeCfg(max_batch=args.max_batch, max_len=args.max_len,
-                 temperature=args.temperature),
-        SessionCfg(adapt_every=args.adapt_every,
-                   burst_steps=args.burst_steps, total_steps=args.steps,
-                   batch_size=args.batch, seq_len=args.seq_len,
-                   replay_size=args.replay_size),
-        probe_batch=data.batch(10_000), seed=args.seed)
-    requests = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
-                        max_new_tokens=args.max_new)
-                for i in range(args.requests)]
-    report = session.run(requests)
-
+    adapter.device_session()                  # wires ASI ranks + optimizer
+    if sess.optimizer_substitution is not None:
+        print(json.dumps(
+            {"optimizer_substitution": sess.optimizer_substitution}))
+    report = adapter.run(api.demo_requests(args.requests, args.max_new))
     s = report.serve_stats
     print(json.dumps({"serving": {
         "requests": s.requests, "generated_tokens": s.generated_tokens,
@@ -161,12 +95,7 @@ def main(argv=None):
         "tokens_per_s": round(s.tokens_per_s, 1),
         "ttft_mean_s": round(s.ttft_mean_s, 4)}}))
     print(json.dumps({"adaptation": report.summary()}))
-
-    checkpointer.save(args.ckpt_dir, report.steps,
-                      {"params": session.params, "opt": session.opt_state,
-                       "asi": session.asi_state},
-                      meta={"arch": arch, "optimizer": opt_name,
-                            "plan": plan.summary()})
+    sess.save(args.ckpt_dir, meta={"plan": adapter.plan.summary()})
     print(json.dumps({"ckpt_dir": args.ckpt_dir, "ckpt_step": report.steps}))
     return report
 

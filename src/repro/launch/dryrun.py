@@ -1,15 +1,19 @@
 import os
-os.environ["XLA_FLAGS"] = os.environ.get(
-    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import sys
+
+if __name__ == "__main__" and "jax" not in sys.modules:
+    # ``python -m repro.launch.dryrun`` executes this module as __main__
+    # before jax is imported: stand up the 512 placeholder host devices.
+    # Importing the shim (tests, embedders using the deprecated run_cell
+    # path) never touches XLA_FLAGS — the process and its subprocesses keep
+    # their own device configuration.
+    os.environ["XLA_FLAGS"] = os.environ.get(
+        "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
-on the production meshes, print memory/cost analysis, and emit roofline terms.
-
-This is how the distribution config is proven coherent without hardware:
-``.lower().compile()`` runs the full GSPMD partitioner + XLA pipeline for the
-per-device program; sharding mismatches, non-divisible dims, and unsupported
-collectives all fail HERE (and are therefore bugs in our partition rules, not
-latent cluster incidents).
+on the production meshes, print memory/cost analysis, and emit roofline
+terms.  This is a thin argparse shim over ``repro.api.analyze`` — the cell
+analysis itself is importable, embeddable data (``Session.analyze()``).
 
 Usage:
   python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
@@ -17,317 +21,18 @@ Usage:
   ... [--multi-pod] [--compress asi] [--remat full|dots|none] [--fsdp]
 """
 import argparse
-import dataclasses
 import json
-import sys
-import time
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs.base import SHAPES, ModelConfig, ShapeCfg, long_context_supported
-from repro.configs.registry import ARCHS, get_config
-from repro.launch import flops_model
-from repro.launch import roofline as rl
-from repro.launch.mesh import make_mesh, make_production_mesh
-from repro.models import build_model
-from repro.models import encdec as encdec_lib
-from repro.models import transformer as tfm
-from repro.optim.optimizers import make_optimizer
-from repro.optim.schedules import constant
-from repro.parallel import partition
-from repro.parallel.sharding import axis_rules, rules_for
-from repro.runtime.train_loop import make_train_step
+from repro import api
+from repro.api import analyze as _analyze
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
 
 
-# --------------------------------------------------------------------------
-# parameter accounting for MODEL_FLOPS
-# --------------------------------------------------------------------------
-
-def _param_counts(cfg: ModelConfig, params_struct) -> dict:
-    flat, _ = jax.tree_util.tree_flatten_with_path(params_struct)
-    total = matmul = expert = 0
-    for path, leaf in flat:
-        name = "/".join(str(getattr(p, "key", p)) for p in path)
-        n = int(np.prod(leaf.shape))
-        total += n
-        if name.endswith(("embed",)) and not name.endswith("unembed"):
-            continue                       # lookup, not matmul
-        if "dec_pos" in name:
-            continue
-        matmul += n
-        if cfg.n_experts and "ffn" in name and len(leaf.shape) >= 3 \
-                and cfg.n_experts in leaf.shape:
-            expert += n
-    active = matmul - expert + (expert * cfg.experts_per_tok
-                                // max(cfg.n_experts, 1))
-    return {"total": total, "matmul": matmul, "active": active}
-
-
-def _model_flops(cfg: ModelConfig, shape: ShapeCfg, counts: dict,
-                 compress: str) -> float:
-    n_active = counts["active"]
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        if compress == "none":
-            return 6.0 * n_active * tokens
-        # fine-tune: full forward + backward only through the tail
-        frac = min(cfg.asi_last_k, cfg.n_layers) / cfg.n_layers
-        return (2.0 + 4.0 * frac) * n_active * tokens
-    if shape.kind == "prefill":
-        return 2.0 * n_active * shape.global_batch * shape.seq_len
-    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
-
-
-# --------------------------------------------------------------------------
-# step construction per cell kind
-# --------------------------------------------------------------------------
-
-def build_cell(cfg: ModelConfig, shape: ShapeCfg, mesh):
-    """Returns (fn, arg_structs, in_shardings, out_shardings, donate)."""
-    api = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params_struct = jax.eval_shape(api.init, key)
-    pspecs = partition.param_specs(cfg, params_struct, mesh)
-    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
-                                   is_leaf=lambda x: isinstance(x, P))
-    B, S = shape.global_batch, shape.seq_len
-
-    def tok_batch():
-        d = jnp.dtype(cfg.dtype)
-        if cfg.family == "encdec":
-            return {"frames": jax.ShapeDtypeStruct((B, cfg.enc_len,
-                                                    cfg.d_model), d),
-                    "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
-                    "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-        if cfg.family == "vlm":
-            st = S - cfg.n_img_tokens
-            return {"embeds": jax.ShapeDtypeStruct((B, cfg.n_img_tokens,
-                                                    cfg.d_model), d),
-                    "tokens": jax.ShapeDtypeStruct((B, st), jnp.int32),
-                    "targets": jax.ShapeDtypeStruct((B, st), jnp.int32)}
-        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
-                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-
-    if shape.kind == "train":
-        opt = make_optimizer(cfg.optimizer, constant(1e-3), clip_norm=1.0)
-        opt_struct = jax.eval_shape(opt.init, params_struct)
-        asi_struct = (jax.eval_shape(api.init_asi, key)
-                      if cfg.compress != "none" else {})
-        mask = None
-        if cfg.compress != "none":
-            mask = jax.eval_shape(api.trainable_mask, params_struct)
-            mask = None  # mask arrays are tiny; skip for lowering simplicity
-        fn = make_train_step(
-            lambda p, b, s: api.loss(p, b, s), opt, trainable_mask=mask)
-        batch_struct = tok_batch()
-        args = (params_struct, opt_struct, asi_struct, batch_struct,
-                jax.ShapeDtypeStruct((), jnp.int32))
-        in_sh = (ns(pspecs), ns(partition.opt_specs(cfg, opt_struct, mesh)),
-                 ns(partition.asi_specs(asi_struct, mesh)),
-                 ns(partition.batch_specs(cfg, batch_struct, mesh)), None)
-        out_sh = (in_sh[0], in_sh[1], in_sh[2], None)
-        return fn.__wrapped__, args, in_sh, out_sh, (0, 1, 2)
-
-    if shape.kind == "prefill":
-        if cfg.family == "encdec":
-            def fn(params, batch):
-                return encdec_lib.prefill(params, batch["frames"],
-                                          batch["tokens"], cfg, S)
-            batch_struct = {
-                "frames": jax.ShapeDtypeStruct(
-                    (B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype)),
-                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-        elif cfg.family == "vlm":
-            def fn(params, batch):
-                return tfm.prefill(params, batch["tokens"], cfg, S,
-                                   prefix_embeds=batch["embeds"])
-            batch_struct = {
-                "embeds": jax.ShapeDtypeStruct(
-                    (B, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype)),
-                "tokens": jax.ShapeDtypeStruct((B, S - cfg.n_img_tokens),
-                                               jnp.int32)}
-        else:
-            def fn(params, batch):
-                return tfm.prefill(params, batch["tokens"], cfg, S)
-            batch_struct = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-        args = (params_struct, batch_struct)
-        in_sh = (ns(pspecs),
-                 ns(partition.batch_specs(cfg, batch_struct, mesh)))
-        return fn, args, in_sh, None, ()
-
-    # decode
-    cache_struct = jax.eval_shape(partial(api.init_cache, B, S))
-    if cfg.family == "encdec":
-        def fn(params, cache, token, pos):
-            return api.decode_step(params, cache, token, pos)
-    else:
-        def fn(params, cache, token, pos):
-            return api.decode_step(params, cache, token, pos)
-    args = (params_struct, cache_struct,
-            jax.ShapeDtypeStruct((B,), jnp.int32),
-            jax.ShapeDtypeStruct((), jnp.int32))
-    cspecs = partition.cache_specs(cfg, cache_struct, mesh)
-    ba = partition.batch_axes(mesh)
-    tok_spec = partition.safe_spec((B,), P(ba), mesh) \
-        if hasattr(partition, "safe_spec") else P(ba)
-    in_sh = (ns(pspecs), ns(cspecs),
-             NamedSharding(mesh, tok_spec), None)
-    out_sh = (None, in_sh[1])
-    return fn, args, in_sh, out_sh, (1,)
-
-
-# --------------------------------------------------------------------------
-# cell runner
-# --------------------------------------------------------------------------
-
-def _ledger_report(cfg: ModelConfig, shape: ShapeCfg,
-                   mem_budget_mb: float | None) -> dict:
-    """Per-tail activation-memory estimate (repro.ondevice.ledger) shown
-    next to the FLOPs numbers: is the paper's compressed-training regime —
-    and the given ``--mem-budget-mb`` — feasible for this cell?"""
-    from repro.ondevice.ledger import build_ledger
-    led = build_ledger(cfg, shape.global_batch, shape.seq_len)
-    rep = led.summary()
-    for k in ("arch", "batch", "seq_len"):      # already in the cell result
-        rep.pop(k, None)
-    if mem_budget_mb is not None:
-        rep["budget_mb"] = mem_budget_mb
-        rep["asi_fits_budget"] = led.fits(mem_budget_mb)
-        rep["vanilla_fits_budget"] = (
-            led.vanilla_total_bytes <= mem_budget_mb * 2 ** 20)
-        rep["rank1_floor_mb"] = round(led.min_bytes() / 2 ** 20, 4)
-    return rep
-
-
-def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-             compress: str = "none", remat: str | None = None,
-             fsdp: bool | None = None, mesh_override=None,
-             seq_shard: bool = False, seq_tp: bool = False,
-             unroll: bool = True, attn_chunk: int | None = None,
-             param_dtype: str | None = None, layout: str = "tp",
-             kv_cache_dtype: str | None = None,
-             mem_budget_mb: float | None = None,
-             verbose: bool = True) -> dict:
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    if shape_name == "long_500k" and not long_context_supported(cfg):
-        res = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-               "status": "skipped",
-               "reason": "full quadratic attention; see DESIGN.md"}
-        if verbose:
-            print(json.dumps(res))
-        return res
-    # unroll the layer scan so cost_analysis & collective counts see every
-    # layer (XLA counts while bodies once)
-    overrides = {"compress": compress, "scan_unroll": unroll}
-    if remat is not None:
-        overrides["remat"] = remat
-    if fsdp is not None:
-        overrides["fsdp"] = fsdp
-    if attn_chunk is not None:
-        overrides["attn_chunk"] = attn_chunk
-    if param_dtype is not None:
-        overrides["param_dtype"] = param_dtype
-    if kv_cache_dtype is not None:
-        overrides["kv_cache_dtype"] = kv_cache_dtype
-    cfg = cfg.replace(**overrides)
-
-    if mesh_override is not None:
-        mesh = make_mesh(*mesh_override)
-    else:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-    partition.set_layout(layout)
-    rules = rules_for(mesh, layout)
-    if seq_shard:
-        rules = dict(rules, seq="data")
-    if seq_tp:
-        rules = dict(rules, seq_tp="model")
-
-    t0 = time.time()
-    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
-    jit_kw = dict(in_shardings=in_sh)
-    if out_sh is not None:
-        jit_kw["out_shardings"] = out_sh
-    if donate:
-        jit_kw["donate_argnums"] = donate
-    with mesh:
-        with axis_rules(mesh, rules):
-            lowered = jax.jit(fn, **jit_kw).lower(*args)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
-
-    mem = {}
-    try:
-        ma = compiled.memory_analysis()
-        if ma is not None:
-            for k in ("argument_size_in_bytes", "output_size_in_bytes",
-                      "temp_size_in_bytes", "alias_size_in_bytes",
-                      "generated_code_size_in_bytes"):
-                v = getattr(ma, k, None)
-                if v is not None:
-                    mem[k] = int(v)
-    except Exception as e:                                  # noqa: BLE001
-        mem["error"] = str(e)
-    cost = {}
-    try:
-        cost = flops_model.cost_analysis_dict(compiled)
-    except Exception as e:                                  # noqa: BLE001
-        cost = {"error": str(e)}
-    hlo = compiled.as_text()
-    coll = rl.collective_bytes(hlo)
-
-    api_struct = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
-    counts = _param_counts(cfg, api_struct)
-    mf = _model_flops(cfg, shape, counts, compress)
-    # analytic executed-FLOPs model is the primary compute-term source: XLA's
-    # cost analysis counts while bodies once (inner attention/SSD chunk loops
-    # stay rolled even with the layer scan unrolled).
-    analytic = flops_model.cell_flops(cfg, shape, compress)
-    cost_in = {k: v for k, v in cost.items() if isinstance(v, (int, float))}
-    hlo_flops = float(cost_in.get("flops", 0.0))
-    cost_in["flops"] = analytic / mesh.size
-    roof = rl.analyze(cost_in, hlo, mesh.size, mf)
-
-    result = {
-        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-        "compress": compress, "remat": cfg.remat, "fsdp": cfg.fsdp,
-        "seq_tp": seq_tp, "param_dtype": cfg.param_dtype, "layout": layout,
-        "kv_cache_dtype": cfg.kv_cache_dtype, "unroll": unroll,
-        "status": "ok", "n_devices": mesh.size,
-        "mesh": dict(mesh.shape),
-        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
-        "params_total": counts["total"], "params_active": counts["active"],
-        "memory": mem,
-        "hlo_flops_per_device": hlo_flops,
-        "flops_per_device": roof.flops,
-        "hbm_bytes_per_device": roof.hbm_bytes,
-        "collective_bytes_per_device": roof.coll_bytes,
-        "collective_by_kind": coll.by_kind,
-        "collective_ops": coll.count,
-        "compute_s": roof.compute_s, "memory_s": roof.memory_s,
-        "collective_s": roof.collective_s, "dominant": roof.dominant,
-        "model_flops": mf, "useful_ratio": roof.useful_ratio,
-        "roofline_fraction": roof.roofline_fraction,
-    }
-    if shape.kind == "train":
-        result["activation_ledger"] = _ledger_report(cfg, shape, mem_budget_mb)
-    if verbose:
-        print(json.dumps({k: v for k, v in result.items()
-                          if k not in ("collective_by_kind", "memory")},
-                         default=str))
-        print("  memory_analysis:", mem)
-        print("  collectives:", coll.by_kind)
-    return result
-
-
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS)
+    api.add_arch_argument(ap, required=False)
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
@@ -347,6 +52,10 @@ def main(argv=None):
                     help="on-device activation-memory budget: train cells "
                          "report whether vanilla/ASI tail storage fits "
                          "(repro.ondevice.ledger) before any training")
+    ap.add_argument("--reduced", action="store_true",
+                    help="analyze the CPU-sized config on the reduced shape "
+                         "(smoke tests / CI; production numbers need the "
+                         "full config)")
     ap.add_argument("--no-unroll", action="store_true",
                     help="keep the layer scan rolled (fallback for compile-"
                          "time-bound cells; per-layer collectives are then "
@@ -354,7 +63,12 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="override, e.g. '2,2:data,model' for tests")
     ap.add_argument("--out", default=None, help="append JSONL here")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    api.warn_programmatic_use(__name__, argv)
+    args = build_parser().parse_args(argv)
 
     mesh_override = None
     if args.mesh:
@@ -362,32 +76,25 @@ def main(argv=None):
         mesh_override = (tuple(int(x) for x in shp.split(",")),
                          tuple(axes.split(",")))
 
-    cells = []
     if args.all:
-        for arch in ARCHS:
-            for shape in SHAPES:
-                cells.append((arch, shape))
+        cells = [(arch, shape) for arch in ARCHS for shape in SHAPES]
     else:
         assert args.arch and args.shape, "--arch/--shape or --all"
         cells = [(args.arch, args.shape)]
-
-    meshes = [args.multi_pod]
-    if args.both_meshes:
-        meshes = [False, True]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
     failures = 0
     for arch, shape in cells:
         for mp in meshes:
             try:
-                res = run_cell(arch, shape, multi_pod=mp,
-                               compress=args.compress, remat=args.remat,
-                               fsdp=args.fsdp, mesh_override=mesh_override,
-                               seq_shard=args.seq_shard, seq_tp=args.seq_tp,
-                               param_dtype=args.param_dtype,
-                               layout=args.layout,
-                               kv_cache_dtype=args.kv_cache_dtype,
-                               mem_budget_mb=args.mem_budget_mb,
-                               unroll=not args.no_unroll)
+                res = _analyze.run_cell(
+                    arch, shape, multi_pod=mp, compress=args.compress,
+                    remat=args.remat, fsdp=args.fsdp,
+                    mesh_override=mesh_override, seq_shard=args.seq_shard,
+                    seq_tp=args.seq_tp, param_dtype=args.param_dtype,
+                    layout=args.layout, kv_cache_dtype=args.kv_cache_dtype,
+                    mem_budget_mb=args.mem_budget_mb, reduced=args.reduced,
+                    unroll=not args.no_unroll)
             except Exception as e:                           # noqa: BLE001
                 failures += 1
                 res = {"arch": arch, "shape": shape, "multi_pod": mp,
@@ -397,6 +104,19 @@ def main(argv=None):
                 with open(args.out, "a") as f:
                     f.write(json.dumps(res, default=str) + "\n")
     sys.exit(1 if failures else 0)
+
+
+_MOVED = ("run_cell", "build_cell", "_param_counts", "_model_flops",
+          "_ledger_report")
+
+
+def __getattr__(name):
+    if name in _MOVED:              # pre-api import path, kept as a shim
+        warnings.warn(f"repro.launch.dryrun.{name} moved to "
+                      f"repro.api.analyze.{name}", DeprecationWarning,
+                      stacklevel=2)
+        return getattr(_analyze, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 if __name__ == "__main__":

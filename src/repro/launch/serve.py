@@ -1,28 +1,25 @@
-"""Continuous-batching serving launcher (reduced configs run on CPU).
+"""Continuous-batching serving launcher — a thin argparse shim over
+``repro.api`` (reduced configs run on CPU).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 6 --max-new 12
 
 ``--engine sequential`` selects the legacy one-request-at-a-time loop
 (useful for A/B sanity checks; ``benchmarks/serve_throughput.py`` does the
-systematic comparison).
+systematic comparison).  Embed ``repro.api.Session.server`` instead of
+calling ``main()`` programmatically (which is deprecated).
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
-
-from repro.configs.registry import ARCHS, get_config
-from repro.models import build_model
-from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
-                                      ServeCfg)
+from repro import api
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, required=True)
+    api.add_arch_argument(ap)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="use the reduced (CPU-sized) config; "
@@ -39,36 +36,21 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
+    api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.family == "encdec":
+    sess = api.Session.from_config(args.arch, reduced=args.reduced,
+                                   seed=args.seed)
+    if sess.cfg.family == "encdec":
         raise SystemExit("encdec serving needs audio frames; use "
                          "examples/serve_decode.py for the full pipeline")
-    api = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = api.init(key)
-    engine_cls = Engine if args.engine == "continuous" else SequentialEngine
-    eng = engine_cls(api, params, ServeCfg(max_batch=args.max_batch,
-                                           max_len=args.max_len,
-                                           temperature=args.temperature),
-                     seed=args.seed)
-    reqs = [Request(uid=i, prompt=[1 + (i + j) % 37 for j in range(5)],
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    done = eng.run(reqs)
+    server = sess.server(engine=args.engine, max_batch=args.max_batch,
+                         max_len=args.max_len, temperature=args.temperature)
+    done = server.run(api.demo_requests(args.requests, args.max_new))
     for r in done:
         print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out,
                           "ttft_s": (None if r.ttft_s is None
                                      else round(r.ttft_s, 4))}))
-    s = eng.last_stats
-    print(json.dumps({"engine": args.engine, "requests": s.requests,
-                      "generated_tokens": s.generated_tokens,
-                      "decode_steps": s.decode_steps,
-                      "tokens_per_s": round(s.tokens_per_s, 1),
-                      "ttft_mean_s": round(s.ttft_mean_s, 4)}))
+    print(json.dumps(server.stats_dict()))
     return done
 
 

@@ -1,24 +1,18 @@
-"""End-to-end training launcher.
-
-Runs the fault-tolerant loop on any registered architecture (reduced configs
-run on CPU; full configs target the production mesh).  This is the same step
-function the dry-run lowers — one code path from laptop to pod.
+"""End-to-end training launcher — a thin argparse shim over ``repro.api``.
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --steps 200 --compress asi --ckpt-dir /tmp/ckpt
 
 Mesh-sharded training: ``--layout {dp,fsdp,tp}`` builds a (data, model) mesh
-over all visible devices (override the split with ``--mesh D,M``), shards
-params / optimizer state / batches per ``repro.parallel.partition``, and
+over all visible devices (override the split with ``--mesh D,M``);
 ``--grad-accum N`` scans N microbatches per step.  Validate on CPU with
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.train --arch tinyllama-1.1b --reduced \
       --steps 20 --layout fsdp --grad-accum 2
 
-On a real cluster this binary is started once per host under the usual
-jax.distributed initialization; XLA latency-hiding flags below overlap
-collectives with compute.
+All wiring lives in ``repro.api.Session``/``Trainer``; embed those instead
+of calling ``main()`` programmatically (which is deprecated).
 """
 from __future__ import annotations
 
@@ -31,46 +25,15 @@ os.environ.setdefault("LIBTPU_INIT_ARGS",
 
 import argparse
 import json
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ModelConfig
-from repro.configs.registry import ARCHS, get_config
-from repro.data.synthetic import LMStream, LMStreamCfg
-from repro.launch.mesh import make_layout_mesh
-from repro.models import build_model
-from repro.optim.optimizers import make_optimizer
-from repro.optim.schedules import warmup_cosine
-from repro.runtime.train_loop import (TrainLoopCfg, make_mesh_plan,
-                                      make_train_step, run)
+from repro import api
 
 
-def build_data(cfg: ModelConfig, seq_len: int, global_batch: int, seed: int):
-    base = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=seq_len,
-                                global_batch=global_batch, seed=seed,
-                                branching=2))
-    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
-        return base
-
-    class Wrapped:
-        def batch(self, step):
-            b = base.batch(step)
-            n = b["tokens"].shape[0]
-            if cfg.family == "encdec":
-                b["frames"] = 0.1 * jnp.ones(
-                    (n, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
-            else:  # vlm
-                b["embeds"] = 0.1 * jnp.ones(
-                    (n, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
-            return b
-    return Wrapped()
-
-
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         epilog="Full flag matrix, quickstart and architecture map: README.md")
-    ap.add_argument("--arch", choices=ARCHS, required=True)
+    api.add_arch_argument(ap)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -97,69 +60,42 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a simulated node failure at this step")
     ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None):
+    api.warn_programmatic_use(__name__, argv)
+    ap = build_parser()
     args = ap.parse_args(argv)
+    try:                       # flag validation only; real failures traceback
+        api.Trainer.validate(batch=args.batch, grad_accum=args.grad_accum,
+                             layout=args.layout, mesh=args.mesh)
+    except ValueError as e:
+        ap.error(str(e))
+    sess = api.Session.from_config(
+        args.arch, reduced=args.reduced, seed=args.seed,
+        compress=args.compress, kernel_backend=args.kernel_backend,
+        asi_rank=args.asi_rank, asi_last_k=args.asi_last_k)
+    trainer = sess.trainer(
+        steps=args.steps, seq_len=args.seq_len, batch=args.batch,
+        lr=args.lr, layout=args.layout, mesh=args.mesh,
+        grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, fail_at=args.fail_at)
+    if trainer.mesh_info is not None:
+        print(json.dumps(trainer.mesh_info))
+    res = trainer.fit(on_log=lambda s, m: print(
+        json.dumps({"step": s, **{k: round(v, 4) for k, v in m.items()}})))
+    print(json.dumps(trainer.summary(res)))
+    return res
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    overrides = {"compress": args.compress,
-                 "kernel_backend": args.kernel_backend}
-    if args.asi_rank is not None:
-        overrides["asi_rank"] = args.asi_rank
-    if args.asi_last_k is not None:
-        overrides["asi_last_k"] = args.asi_last_k
-    cfg = cfg.replace(**overrides)
 
-    api = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = api.init(key)
-    asi_state = api.init_asi(key) if cfg.compress != "none" else {}
-    mask = api.trainable_mask(params) if cfg.compress != "none" else None
-    opt = make_optimizer(
-        cfg.optimizer if cfg.optimizer != "adafactor" else "adamw",
-        warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps),
-        clip_norm=2.0)                      # paper: L2 clip threshold 2.0
-    opt_state = opt.init(params)
-    data = build_data(cfg, args.seq_len, args.batch, args.seed)
-    if args.grad_accum < 1:
-        ap.error(f"--grad-accum {args.grad_accum} must be >= 1")
-    if args.batch % args.grad_accum != 0:
-        ap.error(f"--batch {args.batch} must divide by "
-                 f"--grad-accum {args.grad_accum}")
-    if args.mesh is not None and args.layout is None:
-        ap.error("--mesh requires --layout (it only shapes a layout's mesh)")
-    shape = None
-    if args.mesh is not None:
-        try:
-            shape = tuple(int(x) for x in args.mesh.split(","))
-        except ValueError:
-            shape = ()
-        if len(shape) != 2:
-            ap.error(f"--mesh {args.mesh!r} must be two comma-separated "
-                     f"ints: data,model (e.g. 2,4)")
-    plan = None
-    if args.layout is not None:
-        mesh = make_layout_mesh(args.layout, shape)
-        plan = make_mesh_plan(cfg, mesh, args.layout, params, opt_state,
-                              asi_state, data.batch(0))
-        print(json.dumps({"mesh": dict(mesh.shape), "layout": args.layout,
-                          "n_devices": mesh.size,
-                          "grad_accum": args.grad_accum}))
-    step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
-                              trainable_mask=mask,
-                              kernel_backend=cfg.kernel_backend,
-                              plan=plan, grad_accum=args.grad_accum)
-    loop_cfg = TrainLoopCfg(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                            ckpt_every=args.ckpt_every,
-                            fail_at_step=args.fail_at)
-    res = run(step_fn, params, opt_state, asi_state, data, loop_cfg,
-              hooks={"on_log": lambda s, m: print(
-                  json.dumps({"step": s, **{k: round(v, 4)
-                                            for k, v in m.items()}}))},
-              plan=plan)
-    print(json.dumps({"final_step": res.step, "restarts": res.restarts,
-                      "stragglers": len(res.straggler_steps),
-                      "final_loss": round(res.history[-1]["loss"], 4)}))
+def __getattr__(name):
+    if name == "build_data":        # pre-api helper, moved to repro.api
+        warnings.warn("repro.launch.train.build_data moved to "
+                      "repro.api.data_source", DeprecationWarning,
+                      stacklevel=2)
+        return api.data_source
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,16 @@ class ModelAPI:
                                       # prefix embeds (vlm) / audio frames
                                       # (encdec), None otherwise
 
+    def init_struct(self, key: Array | None = None):
+        """``eval_shape``-safe init: the parameter pytree as
+        ``ShapeDtypeStruct``s with no device allocation.  This is the hook
+        the dry-run used to rebuild the whole model to get — use it for
+        parameter accounting, sharding-spec construction, and checkpoint
+        restore templates."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
     if cfg.family == "encdec":

@@ -1,0 +1,314 @@
+"""The embeddable API: CLI <-> API parity, the Session lifecycle, the shared
+arch resolver, the ``eval_shape``-safe init hook, and the deprecation shims.
+
+Parity contract (DESIGN.md §9): each launcher's ``main()`` is a thin
+argparse shim over ``repro.api`` — running it must produce exactly the same
+metrics/stats/report as making the equivalent API calls yourself.
+"""
+import json
+import warnings
+
+import jax
+import pytest
+
+from repro.api import Session, demo_requests, parse_mesh, resolve_arch
+from repro.api import analyze as api_analyze
+from repro.checkpoint import checkpointer
+from repro.configs.registry import get_config
+from repro.launch import adapt as adapt_cli
+from repro.launch import dryrun as dryrun_cli
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+from repro.models import build_model
+
+ARCH = "tinyllama-1.1b"
+
+
+def _main(mod, argv):
+    """Run a launcher main() with the programmatic-use warning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return mod.main(argv)
+
+
+def _tree_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all((x == y).all() for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------------
+# shared resolver (satellite: one normalization for all four CLIs)
+# --------------------------------------------------------------------------
+
+def test_resolve_arch_spellings():
+    assert resolve_arch("tinyllama_1_1b") == "tinyllama-1.1b"
+    assert resolve_arch("phi3_mini_3_8b") == "phi3-mini-3.8b"
+    assert resolve_arch("phi3-mini-3.8b") == "phi3-mini-3.8b"
+    assert resolve_arch("nonexistent") == "nonexistent"  # caller owns error
+
+
+@pytest.mark.parametrize("mod", [serve_cli, train_cli, adapt_cli, dryrun_cli],
+                         ids=["serve", "train", "adapt", "dryrun"])
+def test_every_cli_accepts_underscore_and_config_alias(mod):
+    extra = (["--mem-budget-mb", "1"] if mod is adapt_cli else [])
+    ap = mod.build_parser()
+    assert ap.parse_args(["--config", "tinyllama_1_1b"] + extra).arch == ARCH
+    assert ap.parse_args(["--arch", ARCH] + extra).arch == ARCH
+
+
+def test_from_config_rejects_unknown_arch():
+    with pytest.raises(ValueError, match="unknown arch"):
+        Session.from_config("nonexistent")
+
+
+def test_parse_mesh():
+    assert parse_mesh("2,4") == (2, 4)
+    assert parse_mesh(None) is None
+    assert parse_mesh((1, 2)) == (1, 2)
+    with pytest.raises(ValueError, match="two comma-separated"):
+        parse_mesh("2,4,8")
+
+
+# --------------------------------------------------------------------------
+# eval_shape-safe init hook (satellite: dryrun no longer rebuilds the model)
+# --------------------------------------------------------------------------
+
+def test_model_api_init_struct_matches_real_init():
+    api = build_model(get_config(ARCH).reduced())
+    struct = api.init_struct()
+    real = api.init(jax.random.PRNGKey(0))
+    fs = jax.tree_util.tree_flatten_with_path(struct)
+    fr = jax.tree_util.tree_flatten_with_path(real)
+    assert fs[1] == fr[1]                       # same treedef
+    for (ps, ls), (pr, lr) in zip(fs[0], fr[0]):
+        assert ps == pr and ls.shape == lr.shape and ls.dtype == lr.dtype
+        assert isinstance(ls, jax.ShapeDtypeStruct)   # never materialized
+
+
+# --------------------------------------------------------------------------
+# CLI <-> API parity
+# --------------------------------------------------------------------------
+
+def test_serve_cli_api_parity(capsys):
+    done_cli = _main(serve_cli, ["--config", "tinyllama_1_1b",
+                                 "--requests", "3", "--max-new", "4",
+                                 "--max-batch", "2", "--max-len", "32"])
+    stats_cli = json.loads(capsys.readouterr().out.splitlines()[-1])
+
+    sess = Session.from_config(ARCH, reduced=True, seed=0)
+    server = sess.server(max_batch=2, max_len=32)
+    done_api = server.run(demo_requests(3, 4))
+
+    assert {r.uid: r.out for r in done_api} == {r.uid: r.out for r in done_cli}
+    sd = server.stats_dict()
+    for k in ("engine", "requests", "generated_tokens", "decode_steps"):
+        assert sd[k] == stats_cli[k], k
+
+
+def test_train_cli_api_parity(tmp_path, capsys):
+    _main(train_cli, ["--arch", "tinyllama_1_1b", "--reduced",
+                      "--steps", "4", "--seq-len", "16", "--batch", "4",
+                      "--compress", "asi", "--kernel-backend", "reference",
+                      "--ckpt-dir", str(tmp_path / "cli")])
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    cli_summary = lines[-1]
+    cli_logs = [l for l in lines if "step" in l]
+
+    sess = Session.from_config(ARCH, reduced=True, seed=0, compress="asi",
+                               kernel_backend="reference")
+    trainer = sess.trainer(steps=4, seq_len=16, batch=4,
+                           ckpt_dir=str(tmp_path / "api"))
+    res = trainer.fit()
+
+    assert trainer.summary(res) == cli_summary
+    api_logs = [{"step": h["step"],
+                 **{k: round(v, 4) for k, v in h.items() if k != "step"}}
+                for h in res.history]
+    assert api_logs == cli_logs
+    assert sess.step == 4                      # state flowed back
+
+
+def test_train_cli_flag_validation():
+    for argv, msg in [
+            (["--arch", ARCH, "--grad-accum", "0"], "must be >= 1"),
+            (["--arch", ARCH, "--batch", "3", "--grad-accum", "2"],
+             "must divide by"),
+            (["--arch", ARCH, "--mesh", "2,4"], "requires --layout")]:
+        with pytest.raises(SystemExit):        # argparse .error() exit 2
+            _main(train_cli, argv)
+
+
+def test_adapt_cli_api_parity(tmp_path, capsys):
+    common = dict(mem_budget_mb=0.05, steps=4, adapt_every=2, batch=2,
+                  seq_len=16)
+    report_cli = _main(adapt_cli, [
+        "--config", "tinyllama_1_1b", "--reduced", "--mem-budget-mb", "0.05",
+        "--steps", "4", "--adapt-every", "2", "--batch", "2",
+        "--seq-len", "16", "--requests", "4", "--max-new", "4",
+        "--kernel-backend", "reference", "--ckpt-dir", str(tmp_path / "cli")])
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    plan_line = next(l for l in lines if "plan" in l)
+
+    sess = Session.from_config(ARCH, reduced=True, seed=0, compress="asi",
+                               kernel_backend="reference")
+    adapter = sess.adapter(**common)
+    assert adapter.plan_report() == plan_line
+    report_api = adapter.run(demo_requests(4, 4))
+
+    assert report_api.adapt_losses == report_cli.adapt_losses
+    assert report_api.probe_losses == report_cli.probe_losses
+    s_api, s_cli = report_api.summary(), report_cli.summary()
+    for k in ("retired", "bursts", "adapt_steps", "adapt_loss_first",
+              "adapt_loss_last", "probe_drift"):
+        assert s_api[k] == s_cli[k], k
+    # the CLI checkpointed through Session.save: provenance meta restores
+    restored = Session.load(str(tmp_path / "cli"))
+    assert restored.step == report_cli.steps
+    assert restored.rank_plan == {k: int(v) for k, v
+                                  in adapter.plan.rank_plan.items()}
+
+
+def test_dryrun_cli_api_parity(capsys):
+    argv = ["--arch", "tinyllama-1.1b", "--shape", "train_4k", "--reduced",
+            "--mesh", "1,1:data,model", "--compress", "asi"]
+    with pytest.raises(SystemExit) as exc:
+        _main(dryrun_cli, argv)
+    assert exc.value.code == 0
+    out = capsys.readouterr().out
+    cli_res = json.loads(next(l for l in out.splitlines()
+                              if l.startswith("{")))
+
+    api_res = api_analyze.run_cell(
+        ARCH, "train_4k", reduced=True, compress="asi",
+        mesh_override=((1, 1), ("data", "model")), verbose=False)
+    skip = {"t_lower_s", "t_compile_s"}        # wall-clock, not parity
+    for k, v in cli_res.items():
+        if k not in skip:
+            assert api_res[k] == v, k
+    assert api_res["status"] == "ok"
+    assert "activation_ledger" in api_res
+
+
+# --------------------------------------------------------------------------
+# Session lifecycle: fit -> save -> restore -> serve -> adapt -> swap
+# --------------------------------------------------------------------------
+
+def test_session_lifecycle(tmp_path):
+    sess = Session.from_config("tinyllama_1_1b", reduced=True, seed=0,
+                               compress="asi", kernel_backend="reference")
+    trainer = sess.trainer(steps=3, seq_len=16, batch=4,
+                           ckpt_dir=str(tmp_path / "loop"), ckpt_every=2)
+    res = trainer.fit()
+    assert res.step == 3 and sess.step == 3
+
+    sess.save(str(tmp_path / "final"))
+    restored = Session.load(str(tmp_path / "final"))
+    assert restored.step == 3
+    assert restored.cfg == sess.cfg            # provenance round-trips
+    assert _tree_equal(restored.params, sess.params)
+    assert _tree_equal(restored.asi_state, sess.asi_state)
+
+    server = restored.server(max_batch=2, max_len=32)
+    adapter = restored.adapter(mem_budget_mb=0.05, steps=2, batch=2,
+                               seq_len=16)
+    done = server.run(demo_requests(3, max_new=4),
+                      on_retire=adapter.observe)
+    assert len(done) == 3 and all(r.done for r in done)
+    assert len(adapter.replay) == 3
+
+    before = restored.params
+    swapped = adapter.step(2)                  # plan -> ranks -> 2 bursts
+    server.swap_params(swapped)
+    assert swapped is restored.params and swapped is not before
+    assert server.engine.params is swapped     # live for the next decode
+    assert len(adapter.report.adapt_losses) == 2
+    assert adapter.report.retired == 3         # pre-DS observes still count
+    # probe baseline recorded BEFORE the first burst, then once after it
+    assert len(adapter.report.probe_losses) == 2
+    assert adapter.report.probe_drift is not None
+
+    again = server.run(demo_requests(2, max_new=4, start_uid=10))
+    assert all(r.done for r in again)          # serving survives the swap
+
+    # load-time overrides of session-level fields replace the meta values
+    reseeded = Session.load(str(tmp_path / "final"), seed=1)
+    assert reseeded.seed == 1 and reseeded.step == 3
+
+
+def test_trainer_never_donates_under_live_server(tmp_path):
+    """Donated params a live engine still references are a use-after-free on
+    accelerators; a session with an attached server must train donate-free."""
+    sess = Session.from_config(ARCH, reduced=True, seed=0)
+    server = sess.server(max_batch=2, max_len=32)
+    tr = sess.trainer(steps=1, seq_len=16, batch=2, ckpt_dir=str(tmp_path))
+    tr.fit()
+    assert tr._donated is False
+    done = server.run(demo_requests(1, 2))
+    assert done[0].done                        # engine unharmed by fit()
+
+    server.close()                             # deterministic detach
+    tr3 = sess.trainer(steps=1, seq_len=16, batch=2,
+                       ckpt_dir=str(tmp_path / "after_close"))
+    tr3.fit()
+    assert tr3._donated is True                # donation restored
+
+    solo = Session.from_config(ARCH, reduced=True, seed=0)
+    tr2 = solo.trainer(steps=1, seq_len=16, batch=2,
+                       ckpt_dir=str(tmp_path / "solo"))
+    tr2.fit()
+    assert tr2._donated is True                # no server -> keep donation
+
+
+def test_analyze_without_devices_has_actionable_error():
+    sess = Session.from_config(ARCH, reduced=True)
+    with pytest.raises(ValueError, match="mesh_override"):
+        sess.analyze("train_4k")               # 1 CPU device, no override
+
+
+def test_session_analyze_defaults_to_reduced_shape():
+    sess = Session.from_config(ARCH, reduced=True, compress="asi",
+                               scan_unroll=True)
+    res = sess.analyze("train_4k",
+                       mesh_override=((1, 1), ("data", "model")))
+    ref = api_analyze.run_cell(ARCH, "train_4k", reduced=True,
+                               compress="asi",
+                               mesh_override=((1, 1), ("data", "model")),
+                               verbose=False)
+    for k in ("model_flops", "params_total", "flops_per_device", "status"):
+        assert res[k] == ref[k], k
+
+
+def test_trainer_requires_no_manual_optimizer():
+    sess = Session.from_config(ARCH, reduced=True)
+    with pytest.raises(ValueError, match="no optimizer attached"):
+        sess.train_step()
+
+
+def test_adapter_requires_asi_session():
+    sess = Session.from_config(ARCH, reduced=True)      # compress="none"
+    with pytest.raises(ValueError, match="ASI session"):
+        sess.adapter(mem_budget_mb=1.0)
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mod", [serve_cli, train_cli, adapt_cli, dryrun_cli],
+                         ids=["serve", "train", "adapt", "dryrun"])
+def test_programmatic_main_warns(mod):
+    with pytest.warns(DeprecationWarning, match="repro.api.Session"):
+        with pytest.raises(SystemExit):        # bad argv: parse error after
+            mod.main(["--arch", "nonexistent"])
+
+
+def test_moved_helpers_warn_and_delegate():
+    with pytest.warns(DeprecationWarning, match="repro.api.data_source"):
+        fn = train_cli.build_data
+    assert callable(fn)
+    with pytest.warns(DeprecationWarning, match="repro.api.analyze"):
+        rc = dryrun_cli.run_cell
+    assert rc is api_analyze.run_cell
+    with pytest.raises(AttributeError):
+        dryrun_cli.not_a_thing                 # noqa: B018
