@@ -2,9 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the headline number
 that reproduces the table's claim).
+
+``--snapshot`` additionally records each benchmark that defines a snapshot
+mapping as ``benchmarks/snapshots/BENCH_<name>.json`` (shared schema:
+``benchmarks/snapshots.py``); ``--only`` restricts the run to named
+benchmarks:
+
+  PYTHONPATH=src python -m benchmarks.run --only scenario_suite --snapshot
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 
@@ -16,38 +24,110 @@ def _timed(name, fn, derive):
     return out
 
 
-def main() -> None:
+def _benches():
     from benchmarks import (activation_memory, adapt_throughput, fused_asi,
-                            latency_ondevice, serve_throughput, shard_scaling,
-                            table1_imagenet, table4_tinyllama, warm_start)
+                            latency_ondevice, scenario_suite,
+                            serve_throughput, shard_scaling, table1_imagenet,
+                            table4_tinyllama, warm_start)
 
+    # (name, run, derive, snap) — snap: out -> (config, metrics, series)
+    # for benchmarks with a recorded BENCH_<name>.json snapshot
+    return [
+        ("table1_imagenet", table1_imagenet.run,
+         lambda rows: f"max_mem_ratio={max(r['mem_ratio'] for r in rows):.0f}x",
+         None),
+        ("table4_tinyllama", table4_tinyllama.run,
+         lambda rows: f"mem_ratio_1layer={rows[0]['mem_ratio']:.0f}x;"
+                      f"flops_ratio_5layer={rows[-1]['flops_ratio']:.2f}x",
+         None),
+        ("fig5_latency", latency_ondevice.run,
+         lambda o: f"hosvd_fwd_blowup={o['ratios']['fwd_hosvd_over_vanilla']:.0f}x;"
+                   f"asi_step_speedup={o['ratios']['asi_step_speedup']:.2f}x",
+         None),
+        ("fig3_warmstart", warm_start.run,
+         lambda o: f"gerr_warm={o['gerr_warm']:.3f};gerr_cold={o['gerr_cold']:.3f}",
+         None),
+        ("fused_asi", fused_asi.run,
+         lambda o: f"backend={o['backend']};"
+                   f"hbm_pass_ratio={o['hbm_pass_ratio']:.0f}x",
+         lambda o: ({"shapes": [r["shape"] for r in o["rows"]]},
+                    {"backend": o["backend"],
+                     "hbm_pass_ratio": float(o["hbm_pass_ratio"])}, None)),
+        ("serve_throughput", serve_throughput.run,
+         lambda o: f"families_won={o['families_won']}/{len(o['rows'])};"
+                   f"min_speedup={min(r['speedup'] for r in o['rows']):.2f}x",
+         lambda o: ({"max_batch": o["max_batch"],
+                     "archs": [r["arch"] for r in o["rows"]]},
+                    {"families": len(o["rows"]),
+                     "families_won": o["families_won"],
+                     "min_speedup": round(min(r["speedup"]
+                                              for r in o["rows"]), 3),
+                     "parity_all": all(r["parity_batch1"]
+                                       for r in o["rows"])}, None)),
+        ("shard_scaling", shard_scaling.run,
+         lambda o: f"min_arg_mem_ratio_1to8="
+                   f"{o['min_arg_mem_ratio_1to8']:.1f}x",
+         None),
+        ("activation_memory", activation_memory.run,
+         lambda o: f"max_site_ratio={o['max_site_ratio']:.0f}x;"
+                   f"measured_gap="
+                   f"{o['measured_gap']['gap_asi']*100:.0f}%",
+         lambda o: ({"archs": [r["arch"] for r in o["rows"]]},
+                    {"max_site_ratio": round(float(o["max_site_ratio"]), 1),
+                     "measured_gap_asi":
+                         round(float(o["measured_gap"]["gap_asi"]), 4)},
+                    None)),
+        ("adapt_throughput", adapt_throughput.run,
+         lambda o: f"retention={o['retention']:.2f}x;"
+                   f"adapt_steps_per_s={o['adapt_steps_per_s']:.1f}",
+         None),
+        ("scenario_suite", scenario_suite.run,
+         lambda o: f"recovered={o['recovered']};"
+                   f"forgetting_phase0={o['forgetting_phase0']:.3f};"
+                   f"replans={o['summary']['replans']}",
+         lambda o: (o["config"],
+                    {"recovered": o["recovered"],
+                     "forgetting_bounded": o["forgetting_bounded"],
+                     "recovery_phase1": float(o["recovery_phase1"]),
+                     "forgetting_phase0": float(o["forgetting_phase0"]),
+                     "bursts": o["summary"]["bursts"],
+                     "replans": o["summary"]["replans"]},
+                    {"quality": o["quality"],
+                     **{f"probe_phase{p}": c
+                        for p, c in o["probe_curves"].items()}})),
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only the named benchmark (repeatable)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="record BENCH_<name>.json for snapshot-mapped "
+                         "benchmarks")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="override benchmarks/snapshots/")
+    args = ap.parse_args(argv)
+
+    benches = _benches()
+    names = [b[0] for b in benches]
+    for only in args.only or []:
+        if only not in names:
+            raise SystemExit(f"unknown benchmark {only!r}; choose from "
+                             f"{names}")
+
+    from benchmarks import snapshots
     print("name,us_per_call,derived")
-    _timed("table1_imagenet", table1_imagenet.run,
-           lambda rows: f"max_mem_ratio={max(r['mem_ratio'] for r in rows):.0f}x")
-    _timed("table4_tinyllama", table4_tinyllama.run,
-           lambda rows: f"mem_ratio_1layer={rows[0]['mem_ratio']:.0f}x;"
-                        f"flops_ratio_5layer={rows[-1]['flops_ratio']:.2f}x")
-    _timed("fig5_latency", latency_ondevice.run,
-           lambda o: f"hosvd_fwd_blowup={o['ratios']['fwd_hosvd_over_vanilla']:.0f}x;"
-                     f"asi_step_speedup={o['ratios']['asi_step_speedup']:.2f}x")
-    _timed("fig3_warmstart", warm_start.run,
-           lambda o: f"gerr_warm={o['gerr_warm']:.3f};gerr_cold={o['gerr_cold']:.3f}")
-    _timed("fused_asi", fused_asi.run,
-           lambda o: f"backend={o['backend']};"
-                     f"hbm_pass_ratio={o['hbm_pass_ratio']:.0f}x")
-    _timed("serve_throughput", serve_throughput.run,
-           lambda o: f"families_won={o['families_won']}/{len(o['rows'])};"
-                     f"min_speedup={min(r['speedup'] for r in o['rows']):.2f}x")
-    _timed("shard_scaling", shard_scaling.run,
-           lambda o: f"min_arg_mem_ratio_1to8="
-                     f"{o['min_arg_mem_ratio_1to8']:.1f}x")
-    _timed("activation_memory", activation_memory.run,
-           lambda o: f"max_site_ratio={o['max_site_ratio']:.0f}x;"
-                     f"measured_gap="
-                     f"{o['measured_gap']['gap_asi']*100:.0f}%")
-    _timed("adapt_throughput", adapt_throughput.run,
-           lambda o: f"retention={o['retention']:.2f}x;"
-                     f"adapt_steps_per_s={o['adapt_steps_per_s']:.1f}")
+    for name, fn, derive, snap in benches:
+        if args.only and name not in args.only:
+            continue
+        out = _timed(name, fn, derive)
+        if args.snapshot and snap is not None:
+            config, metrics, series = snap(out)
+            path = snapshots.write_snapshot(name, config, metrics,
+                                            series=series,
+                                            directory=args.snapshot_dir)
+            print(f"# snapshot -> {path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+"""Recorded benchmark snapshots: ``BENCH_<name>.json`` files.
+
+One schema shared across every benchmark, so snapshots stay diffable and a
+regression is a reviewable one-line change:
+
+* ``schema_version`` — this format (currently 1);
+* ``name``           — the benchmark's registry name;
+* ``git``            — ``git describe --always --dirty`` at record time;
+* ``config``         — the shapes/flags the numbers were measured under;
+* ``metrics``        — flat scalar headline numbers (the regression surface);
+* ``series``         — optional named numeric curves (quality over time,
+  forgetting curves) for benchmarks whose output is a trajectory.
+
+``validate_snapshot`` is the same check ``tests/test_snapshots.py`` runs
+over every checked-in file — a malformed snapshot fails tier-1, not a
+downstream consumer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+SCHEMA_VERSION = 1
+SNAPSHOT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "snapshots")
+_SCALAR = (int, float, str, bool)
+
+
+def git_describe(cwd: str | None = None) -> str:
+    try:
+        p = subprocess.run(["git", "describe", "--always", "--dirty"],
+                           capture_output=True, text=True, timeout=30,
+                           cwd=cwd or os.path.dirname(SNAPSHOT_DIR))
+        out = p.stdout.strip()
+        return out if p.returncode == 0 and out else "unknown"
+    except OSError:
+        return "unknown"
+
+
+def snapshot_path(name: str, directory: str | None = None) -> str:
+    return os.path.join(directory or SNAPSHOT_DIR, f"BENCH_{name}.json")
+
+
+def validate_snapshot(snap: dict, where: str = "snapshot") -> list[str]:
+    """Schema offences as strings (empty = valid)."""
+    errors = []
+    if not isinstance(snap, dict):
+        return [f"{where}: not a JSON object"]
+    if snap.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"{where}: schema_version "
+                      f"{snap.get('schema_version')!r} != {SCHEMA_VERSION}")
+    for key, typ in (("name", str), ("git", str), ("config", dict),
+                     ("metrics", dict)):
+        if not isinstance(snap.get(key), typ):
+            errors.append(f"{where}: {key!r} missing or not {typ.__name__}")
+    metrics = snap.get("metrics")
+    if isinstance(metrics, dict):
+        if not metrics:
+            errors.append(f"{where}: metrics is empty")
+        for k, v in metrics.items():
+            if not isinstance(v, _SCALAR):
+                errors.append(f"{where}: metrics[{k!r}] is "
+                              f"{type(v).__name__}, want scalar")
+    series = snap.get("series", {})
+    if not isinstance(series, dict):
+        errors.append(f"{where}: series is not a dict")
+    else:
+        for k, v in series.items():
+            if not (isinstance(v, list)
+                    and all(isinstance(x, (int, float)) for x in v)):
+                errors.append(f"{where}: series[{k!r}] is not a numeric list")
+    extra = set(snap) - {"schema_version", "name", "git", "config",
+                         "metrics", "series"}
+    if extra:
+        errors.append(f"{where}: unknown keys {sorted(extra)}")
+    return errors
+
+
+def write_snapshot(name: str, config: dict, metrics: dict,
+                   series: dict | None = None,
+                   directory: str | None = None) -> str:
+    snap = {"schema_version": SCHEMA_VERSION, "name": name,
+            "git": git_describe(), "config": config, "metrics": metrics}
+    if series:
+        snap["series"] = series
+    errors = validate_snapshot(snap, where=name)
+    if errors:
+        raise ValueError("refusing to write malformed snapshot:\n"
+                         + "\n".join(errors))
+    path = snapshot_path(name, directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_snapshot(name: str, directory: str | None = None) -> dict:
+    with open(snapshot_path(name, directory)) as f:
+        return json.load(f)

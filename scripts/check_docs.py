@@ -24,13 +24,15 @@ DOCS = ["README.md", "DESIGN.md"]
 
 # examples that document the public API surface: must compile and must not
 # reach around repro.api into the launchers or runtime internals
-PUBLIC_API_EXAMPLES = ["examples/embed_api.py"]
+PUBLIC_API_EXAMPLES = ["examples/embed_api.py",
+                       "examples/scenario_domain_shift.py"]
 BANNED_IMPORT = re.compile(r"^\s*(?:from|import)\s+repro\.(launch|runtime)",
                            re.MULTILINE)
 
 # modules whose --help we interrogate for flag checks
 FLAGGED_MODULES = ("repro.launch.train", "repro.launch.serve",
-                   "repro.launch.dryrun", "repro.launch.adapt")
+                   "repro.launch.dryrun", "repro.launch.adapt",
+                   "repro.launch.scenarios")
 
 FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
 LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")

@@ -28,7 +28,7 @@ import json
 import os
 import warnings
 import weakref
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -464,7 +464,7 @@ class Adapter:
                  replay_size: int = 64, batch: int = 2, seq_len: int = 32,
                  calib_batches: int = 2, rank_select: str = "knapsack",
                  lr: float = 1e-2, max_batch: int = 4, max_len: int = 64,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, replay: ReplayBuffer | None = None):
         if session.cfg.compress != "asi":
             raise ValueError(
                 "adapter needs an ASI session: "
@@ -486,7 +486,14 @@ class Adapter:
         self._data = LMStream(LMStreamCfg(vocab_size=session.cfg.vocab_size,
                                           seq_len=seq_len, global_batch=batch,
                                           seed=session.seed, branching=2))
-        self.replay = ReplayBuffer(replay_size, seq_len, seed=session.seed)
+        # any ReplayBuffer-contract policy slots in (reservoir / stratified /
+        # ... from repro.scenarios.replay); default is the FIFO ring
+        if replay is not None and replay.seq_len != seq_len:
+            raise ValueError(f"injected replay buffer has seq_len "
+                             f"{replay.seq_len}, adapter wants {seq_len}")
+        self.replay = (replay if replay is not None
+                       else ReplayBuffer(replay_size, seq_len,
+                                         seed=session.seed))
         self._plan = None
         self._ds: DeviceSession | None = None
         self._retired_before_ds = 0   # observe() arrivals predating the DS
@@ -522,6 +529,38 @@ class Adapter:
     def plan_report(self) -> dict:
         return {"plan": self.plan.summary(),
                 "plan_respects_ledger_budget": self.plan_respects_budget}
+
+    def replan(self, mem_budget_mb: float | None = None,
+               batches: Sequence[dict] | None = None):
+        """Re-invoke the §3.3 planner mid-stream (elastic budget / subspace
+        re-selection): re-calibrate — on ``batches`` from the *current*
+        traffic distribution when given — re-search ranks under the (possibly
+        new) budget, and swap the plan into a live ``DeviceSession`` via
+        fresh ``init_asi_state`` shapes plus a fresh optimizer.  The params
+        and the serving engine are untouched: in-flight requests keep
+        decoding, only the adaptation path re-shapes.  Returns the new plan.
+        """
+        s = self.session
+        if mem_budget_mb is not None:
+            self.mem_budget_mb = mem_budget_mb
+        calib = (list(batches) if batches is not None
+                 else [self._data.batch(i) for i in range(self.calib_batches)])
+        self._plan = build_plan(s.model, s.cfg, s.params, self.mem_budget_mb,
+                                calib, batch_size=self.batch,
+                                seq_len=self.seq_len, method=self.rank_select,
+                                seed=s.seed)
+        plan = self._plan
+        s.rank_plan = {k: int(v) for k, v in plan.rank_plan.items()}
+        if self._ds is not None:                  # re-shape the live session
+            ds = self._ds
+            s.asi_state = s.model.init_asi(jax.random.PRNGKey(s.seed),
+                                           rank_plan=plan.rank_plan)
+            s.attach_optimizer(self.lr, max(self.steps // 5, 1),
+                               max(self.steps, 2))
+            ds.asi_state = s.asi_state
+            ds.opt_state = s.opt_state
+            ds._train_step = s.train_step(donate=False)
+        return plan
 
     # --- the device session -------------------------------------------------
 

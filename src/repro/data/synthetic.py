@@ -28,12 +28,23 @@ class LMStreamCfg:
     global_batch: int
     seed: int = 0
     branching: int = 4          # successors per token (lower = easier task)
+    table_seed: int | None = None   # Markov-table seed; None -> ``seed``.
+                                    # Re-seeding only this swaps the chain's
+                                    # dynamics while the sampling stream
+                                    # (start tokens, successor choices) stays
+                                    # fixed — the scenario harness's domain
+                                    # shift is exactly such a table swap.
 
 
-def _transition_table(cfg: LMStreamCfg) -> np.ndarray:
-    rng = np.random.default_rng(cfg.seed)
+def transition_table(cfg: LMStreamCfg) -> np.ndarray:
+    """The stream's order-1 Markov successor table, (vocab, branching)."""
+    rng = np.random.default_rng(cfg.seed if cfg.table_seed is None
+                                else cfg.table_seed)
     return rng.integers(0, cfg.vocab_size,
                         size=(cfg.vocab_size, cfg.branching)).astype(np.int32)
+
+
+_transition_table = transition_table          # back-compat alias
 
 
 class LMStream:
@@ -45,7 +56,7 @@ class LMStream:
         self.host_id = host_id
         self.n_hosts = n_hosts
         self.local_batch = cfg.global_batch // n_hosts
-        self.table = jnp.asarray(_transition_table(cfg))
+        self.table = jnp.asarray(transition_table(cfg))
 
     def batch(self, step: int) -> dict[str, Array]:
         key = jax.random.fold_in(
@@ -73,6 +84,10 @@ class ImageStreamCfg:
     global_batch: int = 64
     seed: int = 0
     noise: float = 0.6
+    proto_seed: int | None = None   # class-prototype seed; None -> ``seed``.
+                                    # Re-seeding only this moves the class
+                                    # blobs (a vision domain shift) while the
+                                    # label/noise stream stays fixed.
 
 
 class ImageStream:
@@ -82,7 +97,8 @@ class ImageStream:
         self.cfg = cfg
         self.local_batch = cfg.global_batch // n_hosts
         self.host_id = host_id
-        rng = np.random.default_rng(cfg.seed)
+        rng = np.random.default_rng(cfg.seed if cfg.proto_seed is None
+                                    else cfg.proto_seed)
         self.prototypes = jnp.asarray(
             rng.normal(size=(cfg.num_classes, 3, cfg.hw, cfg.hw))
             .astype(np.float32))

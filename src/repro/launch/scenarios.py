@@ -1,0 +1,74 @@
+"""Scenario launcher — a thin argparse shim over ``repro.scenarios``.
+
+Streamed continual-learning evaluation (serve→adapt→swap with forgetting
+curves) as one command:
+
+  PYTHONPATH=src python -m repro.launch.scenarios --scenario domain-shift \
+      --arch tinyllama-1.1b --reduced --mem-budget-mb 0.05 --seed 0 \
+      --out /tmp/curves.json
+
+Output is JSON lines (config echo, then the summary); ``--out`` writes the
+full deterministic curve series.  All wiring lives in
+``repro.scenarios.run_scenario``; embed that, not ``main()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import api
+from repro.scenarios import REPLAY_POLICIES, SCENARIOS, run_scenario
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        epilog="Full flag matrix: README.md; subsystem design: DESIGN.md §10")
+    api.add_arch_argument(ap)
+    ap.add_argument("--scenario", default="domain-shift", choices=SCENARIOS)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="CPU-sized config (--no-reduced = full arch)")
+    ap.add_argument("--phases", type=int, default=2,
+                    help="task phases (domain-shift/bursty override this)")
+    ap.add_argument("--waves-per-phase", type=int, default=2,
+                    help="request-injection steps per phase")
+    ap.add_argument("--rate", type=float, default=3.0,
+                    help="Poisson mean arrivals per wave")
+    ap.add_argument("--mem-budget-mb", type=float, default=0.05)
+    ap.add_argument("--budget-schedule", type=float, nargs="+", default=None,
+                    help="per-phase budgets (elastic: triggers replanning)")
+    ap.add_argument("--drift-threshold", type=float, default=0.2,
+                    help="measured-vs-analytic ledger drift replan trigger")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--adapt-every", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--replay-policy", default="fifo",
+                    choices=sorted(REPLAY_POLICIES))
+    ap.add_argument("--replay-size", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write report.curves() JSON here")
+    return ap
+
+
+def main(argv=None):
+    api.warn_programmatic_use(__name__, argv)
+    args = build_parser().parse_args(argv)
+    kw = {k: v for k, v in vars(args).items() if k != "out" and v is not None}
+    kw["budget_schedule"] = (tuple(args.budget_schedule)
+                             if args.budget_schedule else None)
+    print(json.dumps({"config": kw | {"budget_schedule":
+                                      args.budget_schedule}}))
+    report = run_scenario(**kw)
+    print(json.dumps({"summary": report.summary()}))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report.curves(), f, indent=1)
+        print(json.dumps({"out": args.out}))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -173,11 +173,18 @@ def build_plan(api, cfg: ModelConfig, params, budget_mb: float,
     table = estimate_perplexity(layers, eps_grid)
     # Re-price memory for the adaptation shape: ranks transfer from the
     # calibration activations, byte counts must use the training (B, S).
+    # Calibration concatenates batches along tokens, so its candidate ranks
+    # can exceed the adaptation shape's token count — clamp to the rank the
+    # subspace iteration can actually sustain at (B, S) (orthonormalizing an
+    # (M, r) factor with r > M collapses to M columns).
+    def _adapt_rank(site, r):
+        return min(max(int(r), 1), site.tokens, site.k)
+
     n, e = table.perplexity.shape
     memory = np.zeros((n, e))
     for i, site in enumerate(sites):
         for j in range(e):
-            r = max(int(table.ranks[i, j, 0]), 1)
+            r = _adapt_rank(site, table.ranks[i, j, 0])
             memory[i, j] = (ledger_lib.site_compressed_elems(site, r)
                             * ledger_lib.BYTES_PER_ELEM)
 
@@ -201,7 +208,7 @@ def build_plan(api, cfg: ModelConfig, params, budget_mb: float,
     planned = 0
     for i, site in enumerate(sites):
         j = choice[i]
-        rank_plan[site.name] = max(int(table.ranks[i, j, 0]), 1)
+        rank_plan[site.name] = _adapt_rank(site, table.ranks[i, j, 0])
         eps[site.name] = float(table.eps_grid[j])
         perp[site.name] = float(table.perplexity[i, j])
         planned += int(memory[i, j])

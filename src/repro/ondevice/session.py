@@ -35,31 +35,63 @@ Array = jax.Array
 
 
 class ReplayBuffer:
-    """Ring buffer of retired token streams with fixed-shape batch assembly."""
+    """Ring buffer of retired token streams with fixed-shape batch assembly.
+
+    This is the FIFO baseline policy: at capacity, ``add`` evicts the oldest
+    stream (strict add order).  Alternative policies (reservoir,
+    phase-stratified — ``repro.scenarios.replay``) subclass it and override
+    only the storage/selection hooks; the fixed-shape batch-assembly
+    contract (``sample_batch`` shape never depends on fill level) is shared
+    and must hold for every policy — the jitted train step relies on it.
+    """
+
+    policy = "fifo"
 
     def __init__(self, capacity: int, seq_len: int, seed: int = 0):
+        self.capacity = capacity
         self.seq_len = seq_len
+        self.current_phase = 0          # scenario runners advance this
         self._buf: collections.deque = collections.deque(maxlen=capacity)
         self._rng = np.random.default_rng(seed)
 
     def __len__(self) -> int:
-        return len(self._buf)
+        return len(self._rows())
+
+    def set_phase(self, phase: int):
+        """Tag subsequent ``add``s with ``phase`` (used by stratified
+        policies; the base FIFO ring ignores it)."""
+        self.current_phase = int(phase)
 
     def add(self, tokens: Sequence[int]):
         toks = [int(t) for t in tokens]
         if len(toks) >= 2:                       # need one (input, target) pair
-            self._buf.append(toks)
+            self._store(toks, self.current_phase)
+
+    # --- policy hooks -------------------------------------------------------
+
+    def _store(self, toks: list[int], phase: int):
+        self._buf.append(toks)
+
+    def _rows(self) -> Sequence[list[int]]:
+        """The stored streams as an indexable sequence."""
+        return self._buf
+
+    def _select_indices(self, batch_size: int) -> np.ndarray:
+        return self._rng.integers(0, len(self._rows()), size=batch_size)
+
+    # --- fixed-shape assembly (shared by every policy) ----------------------
 
     def sample_batch(self, batch_size: int) -> dict[str, Array]:
         """Fixed-shape {'tokens','targets'} (batch, seq_len); short streams
         are tiled to length so no masking/padding enters the loss."""
-        if not self._buf:
+        stored = self._rows()
+        if not stored:
             raise ValueError("replay buffer is empty")
-        idx = self._rng.integers(0, len(self._buf), size=batch_size)
+        idx = self._select_indices(batch_size)
         need = self.seq_len + 1
         rows = np.empty((batch_size, need), np.int32)
         for r, i in enumerate(idx):
-            seq = self._buf[i]
+            seq = stored[i]
             reps = -(-need // len(seq))
             rows[r] = (seq * reps)[:need]
         return {"tokens": jnp.asarray(rows[:, :-1]),
@@ -144,6 +176,10 @@ class DeviceSession:
                                     probe_losses=[])
         self._step_count = 0
         self._since_burst = 0
+        # scenario hook: called as on_burst(self) after every completed burst
+        # (post params-swap, post probe measurement) — the scenario runner
+        # records its per-phase probe losses and elastic-budget checks here
+        self.on_burst = None
 
     # --- counters -----------------------------------------------------------
 
@@ -186,6 +222,8 @@ class DeviceSession:
             pl = self.probe_loss()
             if pl is not None:
                 self.report.probe_losses.append(pl)
+            if self.on_burst is not None:
+                self.on_burst(self)
         return losses
 
     # --- serving ------------------------------------------------------------

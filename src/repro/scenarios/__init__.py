@@ -1,0 +1,28 @@
+"""Continual-learning scenario harness (streams, replay policies, runner).
+
+Public surface::
+
+    from repro.scenarios import run_scenario
+    report = run_scenario(scenario="domain-shift", arch="tinyllama_1_1b",
+                          reduced=True, seed=0)
+    report.curves()       # deterministic benchmark series (pure in seed)
+    report.summary()      # recovery / forgetting / throughput rollup
+"""
+from repro.scenarios.replay import (REPLAY_POLICIES, ReplayBuffer,
+                                    ReservoirReplay, StratifiedReplay,
+                                    make_replay)
+from repro.scenarios.runner import (SCENARIOS, ScenarioCfg, ScenarioReport,
+                                    measured_plan_bytes, run_scenario)
+from repro.scenarios.streams import (BurstyTraffic, DomainShiftStream,
+                                     TaskSequenceStream, TaskStreamCfg,
+                                     TrafficCfg, VisionPhaseStream,
+                                     VisionStreamCfg)
+
+__all__ = [
+    "SCENARIOS", "ScenarioCfg", "ScenarioReport", "run_scenario",
+    "measured_plan_bytes",
+    "REPLAY_POLICIES", "ReplayBuffer", "ReservoirReplay", "StratifiedReplay",
+    "make_replay",
+    "BurstyTraffic", "DomainShiftStream", "TaskSequenceStream",
+    "TaskStreamCfg", "TrafficCfg", "VisionPhaseStream", "VisionStreamCfg",
+]

@@ -1,0 +1,105 @@
+"""Replay policies over the ``ReplayBuffer`` fixed-shape contract.
+
+Three ways to decide which retired token streams survive at capacity and
+which get sampled into adaptation batches:
+
+* **fifo** — the ``ondevice.session.ReplayBuffer`` baseline: strict
+  add-order eviction, uniform sampling.  Recency-biased: after a domain
+  shift the buffer flushes to the new distribution within ``capacity``
+  retirements (fast recovery, fast forgetting).
+* **reservoir** — classic reservoir sampling: every stream ever added has
+  equal survival probability, so the buffer stays an unbiased sample of the
+  whole session (slow forgetting, slower recovery).
+* **stratified** — per-phase FIFO sub-rings with the capacity split across
+  *seen* phases; sampling round-robins phases.  The replay-based middle
+  ground the continual-learning literature calls phase-balanced rehearsal.
+
+All three share ``ReplayBuffer``'s invariants, property-tested in
+``tests/test_scenarios.py``: stored streams never exceed ``capacity``,
+``sample_batch`` has a fixed shape regardless of fill level, and sampling
+is deterministic under a fixed seed.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.ondevice.session import ReplayBuffer
+
+__all__ = ["ReplayBuffer", "ReservoirReplay", "StratifiedReplay",
+           "REPLAY_POLICIES", "make_replay"]
+
+
+class ReservoirReplay(ReplayBuffer):
+    """Uniform-over-history reservoir: stream #n replaces a random slot
+    with probability capacity/n once the buffer is full."""
+
+    policy = "reservoir"
+
+    def __init__(self, capacity: int, seq_len: int, seed: int = 0):
+        super().__init__(capacity, seq_len, seed=seed)
+        self._buf: list = []                    # plain list: indexed eviction
+        self._seen = 0
+
+    def _store(self, toks, phase):
+        self._seen += 1
+        if len(self._buf) < self.capacity:
+            self._buf.append(toks)
+            return
+        j = int(self._rng.integers(0, self._seen))
+        if j < self.capacity:
+            self._buf[j] = toks
+
+
+class StratifiedReplay(ReplayBuffer):
+    """Phase-stratified rehearsal: one FIFO sub-ring per seen phase, global
+    capacity split evenly, sampling round-robined across phases."""
+
+    policy = "stratified"
+
+    def __init__(self, capacity: int, seq_len: int, seed: int = 0):
+        super().__init__(capacity, seq_len, seed=seed)
+        self._by_phase: dict[int, collections.deque] = {}
+
+    def _store(self, toks, phase):
+        self._by_phase.setdefault(phase, collections.deque()).append(toks)
+        self._rebalance()
+
+    def _rebalance(self):
+        """Evict oldest-first from the fullest phase until within capacity —
+        which converges on an even capacity split across seen phases."""
+        while sum(len(d) for d in self._by_phase.values()) > self.capacity:
+            over = max(self._by_phase, key=lambda p: len(self._by_phase[p]))
+            self._by_phase[over].popleft()
+            if not self._by_phase[over]:
+                del self._by_phase[over]
+
+    def _rows(self):
+        return [t for p in sorted(self._by_phase)
+                for t in self._by_phase[p]]
+
+    def _select_indices(self, batch_size: int) -> np.ndarray:
+        phases = sorted(p for p in self._by_phase if self._by_phase[p])
+        offsets, off = {}, 0
+        for p in sorted(self._by_phase):
+            offsets[p] = off
+            off += len(self._by_phase[p])
+        idx = np.empty((batch_size,), np.int64)
+        for r in range(batch_size):
+            p = phases[r % len(phases)]          # round-robin the phases
+            idx[r] = offsets[p] + int(
+                self._rng.integers(0, len(self._by_phase[p])))
+        return idx
+
+
+REPLAY_POLICIES = {"fifo": ReplayBuffer, "reservoir": ReservoirReplay,
+                   "stratified": StratifiedReplay}
+
+
+def make_replay(policy: str, capacity: int, seq_len: int,
+                seed: int = 0) -> ReplayBuffer:
+    if policy not in REPLAY_POLICIES:
+        raise ValueError(f"unknown replay policy {policy!r}; choose from "
+                         f"{sorted(REPLAY_POLICIES)}")
+    return REPLAY_POLICIES[policy](capacity, seq_len, seed=seed)

@@ -1,0 +1,350 @@
+"""Scenario runner: streamed serve→retire→adapt→swap through ``repro.api``.
+
+One ``run_scenario`` call plays a continual-learning workload against the
+full stack — the continuous-batching engine, the replay buffer, the §3.3
+budget planner, and the train-while-serve ``DeviceSession`` — exclusively
+through the public ``repro.api.Session`` surface, and records benchmark
+curves:
+
+* **quality over time** — per-burst adaptation loss, tagged with the phase
+  the traffic came from;
+* **forgetting curves** — one *frozen* probe batch per seen phase,
+  re-evaluated after every burst, so backward transfer is a computable
+  series (not the single ``probe_drift`` scalar ``SessionReport`` keeps);
+* **throughput** — tokens/s and decode steps per serving wave;
+* **ledger checks** — the measured (eager vjp-residual) activation bytes of
+  the live rank plan vs the analytic ledger and the phase's budget, with an
+  **elastic budget hook**: when measured bytes drift past the threshold or
+  over a shrunk per-phase budget, the §3.3 planner re-runs on *current*
+  traffic (subspace re-selection) and the new rank plan is swapped into the
+  live session via fresh ``init_asi_state`` shapes.
+
+Everything a report's ``curves()`` returns is a pure function of the
+scenario seed (wall-clock counters are excluded), so two runs with the same
+seed must be identical — the regression oracle the scenario tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ondevice.ledger import build_ledger, measured_site_residual_bytes
+from repro.scenarios.replay import make_replay
+from repro.scenarios.streams import (BurstyTraffic, TaskSequenceStream,
+                                     TaskStreamCfg, TrafficCfg,
+                                     VisionPhaseStream, VisionStreamCfg)
+
+SCENARIOS = ("domain-shift", "task-sequence", "bursty", "vision")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCfg:
+    """One scenario workload.  ``domain-shift`` is ``task-sequence`` with
+    two phases; ``bursty`` is one phase at a higher arrival rate (a
+    throughput workload); ``vision`` phases class prototypes through the
+    convnets family (no serving engine — the paper's own vision models)."""
+    scenario: str = "domain-shift"
+    arch: str = "tinyllama_1_1b"
+    phases: int = 2
+    waves_per_phase: int = 2       # request-injection steps per phase
+    rate: float = 3.0              # Poisson mean arrivals per wave
+    prompt_lens: tuple = (4, 8, 12)
+    max_new: int = 6
+    mem_budget_mb: float = 0.05
+    budget_schedule: tuple | None = None   # per-phase budgets (elastic)
+    drift_threshold: float = 0.2   # measured-vs-analytic replan trigger
+    steps: int = 16                # adaptation-step budget for the session
+    adapt_every: int = 2
+    burst_steps: int = 1
+    batch: int = 2
+    seq_len: int = 16
+    replay_policy: str = "fifo"
+    replay_size: int = 32
+    rank_select: str = "knapsack"
+    lr: float = 1e-2
+    max_batch: int = 2
+    max_len: int = 48
+    seed: int = 0
+    reduced: bool = True
+    kernel_backend: str = "reference"
+
+    def resolved_phases(self) -> int:
+        if self.scenario == "domain-shift":
+            return 2
+        if self.scenario == "bursty":
+            return 1
+        return self.phases
+
+    def budget_for(self, phase: int) -> float:
+        if self.budget_schedule is None:
+            return self.mem_budget_mb
+        return float(self.budget_schedule[min(phase,
+                                              len(self.budget_schedule) - 1)])
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    scenario: str
+    arch: str
+    seed: int
+    phases: int
+    quality: list = dataclasses.field(default_factory=list)
+    # str(phase) -> probe loss after each burst since the phase was seen
+    probe_curves: dict = dataclasses.field(default_factory=dict)
+    burst_phase: list = dataclasses.field(default_factory=list)
+    waves: list = dataclasses.field(default_factory=list)
+    ledger_checks: list = dataclasses.field(default_factory=list)
+    replans: list = dataclasses.field(default_factory=list)
+
+    # --- derived metrics ----------------------------------------------------
+
+    def phase_quality(self, phase: int) -> list:
+        return [q["loss"] for q in self.quality if q["phase"] == phase]
+
+    def recovery(self, phase: int) -> float | None:
+        """Within-phase improvement of the phase's own probe: first minus
+        last probe loss over the bursts where ``phase`` was live traffic
+        (positive = the model recovered quality after the shift)."""
+        curve = self.probe_curves.get(str(phase), [])
+        live = [l for l, p in zip(curve[-len(self.burst_phase):],
+                                  self.burst_phase[-len(curve):])
+                if p == phase]
+        if len(live) < 2:
+            return None
+        return live[0] - live[-1]
+
+    def forgetting(self, phase: int) -> float | None:
+        """Backward transfer: final probe loss minus the phase's best probe
+        loss while it was the live distribution (0 = no forgetting)."""
+        curve = self.probe_curves.get(str(phase), [])
+        live = [l for l, p in zip(curve[-len(self.burst_phase):],
+                                  self.burst_phase[-len(curve):])
+                if p == phase]
+        if not live or not curve:
+            return None
+        return curve[-1] - min(live)
+
+    def curves(self) -> dict:
+        """The deterministic benchmark series (pure in the scenario seed):
+        wall-clock throughput counters are deliberately excluded."""
+        return {
+            "scenario": self.scenario, "arch": self.arch, "seed": self.seed,
+            "quality": self.quality,
+            "probe_curves": self.probe_curves,
+            "burst_phase": self.burst_phase,
+            "waves": [{k: v for k, v in w.items() if k != "tokens_per_s"}
+                      for w in self.waves],
+            "ledger_checks": self.ledger_checks,
+            "replans": self.replans,
+        }
+
+    def summary(self) -> dict:
+        q = [x["loss"] for x in self.quality]
+        return {
+            "scenario": self.scenario, "arch": self.arch, "seed": self.seed,
+            "phases": self.phases, "bursts": len(self.burst_phase),
+            "requests": sum(w["requests"] for w in self.waves),
+            "quality_first": q[0] if q else None,
+            "quality_last": q[-1] if q else None,
+            "recovery": {p: self.recovery(p) for p in range(self.phases)},
+            "forgetting": {p: self.forgetting(p) for p in range(self.phases)},
+            "tokens_per_s": round(float(np.mean(
+                [w["tokens_per_s"] for w in self.waves])), 1)
+            if self.waves else 0.0,
+            "replans": len(self.replans),
+        }
+
+
+# ---------------------------------------------------------------------------
+# measured ledger view
+# ---------------------------------------------------------------------------
+
+def measured_plan_bytes(cfg, batch: int, seq_len: int, rank_plan: dict) -> int:
+    """Ground-truth activation bytes of ``rank_plan``: run every site's
+    actual vjp forward rule eagerly and weigh the saved residuals (the
+    measured counterpart of ``Ledger.bytes_for``)."""
+    led = build_ledger(cfg, batch, seq_len, rank_plan=rank_plan)
+    total = 0
+    for row in led.rows:
+        per_group = measured_site_residual_bytes(
+            row.site.tokens, row.site.k, row.rank, compressed=True)
+        total += per_group * max(row.site.groups, 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+def run_scenario(**kw) -> ScenarioReport:
+    """Run one scenario workload end to end and return its report."""
+    cfg = ScenarioCfg(**kw)
+    if cfg.scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {cfg.scenario!r}; choose from "
+                         f"{SCENARIOS}")
+    if cfg.scenario == "vision":
+        return _run_vision(cfg)
+    return _run_lm(cfg)
+
+
+def _run_lm(cfg: ScenarioCfg) -> ScenarioReport:
+    from repro.api import Session
+    phases = cfg.resolved_phases()
+    sess = Session.from_config(cfg.arch, reduced=cfg.reduced, seed=cfg.seed,
+                               compress="asi",
+                               kernel_backend=cfg.kernel_backend)
+    if sess.cfg.family == "encdec":
+        raise ValueError("encdec serving needs audio frames; LM scenarios "
+                         "target decoder-only archs (use scenario='vision' "
+                         "for the non-LM path)")
+    stream = TaskSequenceStream(TaskStreamCfg(
+        vocab_size=sess.cfg.vocab_size, seq_len=cfg.seq_len,
+        global_batch=cfg.batch, phases=phases,
+        steps_per_phase=cfg.waves_per_phase, seed=cfg.seed, branching=2))
+    traffic = BurstyTraffic(
+        TrafficCfg(rate=cfg.rate, prompt_lens=cfg.prompt_lens,
+                   max_new_tokens=cfg.max_new, seed=cfg.seed), stream)
+    replay = make_replay(cfg.replay_policy, cfg.replay_size, cfg.seq_len,
+                         seed=cfg.seed)
+    adapter = sess.adapter(
+        mem_budget_mb=cfg.budget_for(0), steps=cfg.steps,
+        adapt_every=cfg.adapt_every, burst_steps=cfg.burst_steps,
+        replay_size=cfg.replay_size, batch=cfg.batch, seq_len=cfg.seq_len,
+        rank_select=cfg.rank_select, lr=cfg.lr, max_batch=cfg.max_batch,
+        max_len=cfg.max_len, replay=replay)
+    ds = adapter.device_session()
+
+    report = ScenarioReport(scenario=cfg.scenario, arch=sess.arch,
+                            seed=cfg.seed, phases=phases)
+    model = sess.model
+    eval_loss = jax.jit(lambda p, b, s: model.loss(p, b, s)[0])
+    probes: dict[int, dict] = {}
+    state = {"phase": 0, "n_losses": len(ds.report.adapt_losses)}
+
+    def on_burst(ds):
+        new = ds.report.adapt_losses[state["n_losses"]:]
+        state["n_losses"] = len(ds.report.adapt_losses)
+        for loss in new:
+            report.quality.append({"burst": len(report.burst_phase),
+                                   "phase": state["phase"],
+                                   "loss": round(float(loss), 6)})
+        for p in sorted(probes):
+            report.probe_curves[str(p)].append(round(float(
+                eval_loss(ds.params, probes[p], ds.asi_state)), 6))
+        report.burst_phase.append(state["phase"])
+
+    ds.on_burst = on_burst
+
+    uid = 0
+    for phase in range(phases):
+        state["phase"] = phase
+        probes[phase] = stream.probe_batch(phase)      # frozen on first sight
+        report.probe_curves.setdefault(str(phase), [])
+        replay.set_phase(phase)
+        if phase > 0:
+            report.ledger_checks.append(
+                _elastic_check(adapter, cfg, phase, stream, report))
+        for wave in range(cfg.waves_per_phase):
+            step = phase * cfg.waves_per_phase + wave
+            reqs = traffic.arrivals(step, start_uid=uid)
+            uid += len(reqs)
+            row = {"wave": step, "phase": phase, "requests": len(reqs),
+                   "generated_tokens": 0, "decode_steps": 0,
+                   "tokens_per_s": 0.0}
+            if reqs:
+                adapter.run(reqs, drain_steps=False)
+                s = ds.engine.last_stats
+                row.update(generated_tokens=s.generated_tokens,
+                           decode_steps=s.decode_steps,
+                           tokens_per_s=round(s.tokens_per_s, 1))
+            report.waves.append(row)
+    return report
+
+
+def _elastic_check(adapter, cfg: ScenarioCfg, phase: int,
+                   stream: TaskSequenceStream, report: ScenarioReport) -> dict:
+    """The elastic budget hook: measure the live plan's actual activation
+    bytes; if they exceed the phase's budget or drift past the threshold
+    from the analytic ledger, re-plan on current-phase traffic."""
+    budget_mb = cfg.budget_for(phase)
+    mcfg = adapter.session.cfg
+    analytic = build_ledger(mcfg, adapter.batch, adapter.seq_len,
+                            rank_plan=adapter.plan.rank_plan).asi_total_bytes
+    measured = measured_plan_bytes(mcfg, adapter.batch, adapter.seq_len,
+                                   adapter.plan.rank_plan)
+    drift = abs(measured - analytic) / max(analytic, 1)
+    over_budget = measured > budget_mb * 2 ** 20
+    check = {"phase": phase, "budget_mb": budget_mb,
+             "analytic_bytes": int(analytic), "measured_bytes": int(measured),
+             "drift": round(drift, 4), "replanned": False}
+    if over_budget or drift > cfg.drift_threshold:
+        old_ranks = {k: int(v) for k, v in adapter.plan.rank_plan.items()}
+        calib = [stream.batch(phase * cfg.waves_per_phase + i)
+                 for i in range(adapter.calib_batches)]
+        plan = adapter.replan(budget_mb, batches=calib)
+        check["replanned"] = True
+        report.replans.append({
+            "phase": phase, "budget_mb": budget_mb,
+            "planned_mb": round(plan.planned_bytes / 2 ** 20, 4),
+            "rank_deltas": {k: int(plan.rank_plan[k]) - old_ranks[k]
+                            for k in old_ranks
+                            if int(plan.rank_plan[k]) != old_ranks[k]}})
+    return check
+
+
+# ---------------------------------------------------------------------------
+# vision (convnets family — the paper's own models; no serving engine)
+# ---------------------------------------------------------------------------
+
+def _run_vision(cfg: ScenarioCfg) -> ScenarioReport:
+    from repro.models import convnets
+    from repro.optim.optimizers import make_optimizer
+    ccfg = convnets.mcunet_mini(num_classes=4, compress="asi", last_k=2,
+                                ranks=(4, 4, 4, 4))
+    phases = cfg.phases if cfg.scenario == "vision" else 2
+    batch = max(cfg.batch, 8)           # blobs need a few examples per class
+    stream = VisionPhaseStream(VisionStreamCfg(
+        num_classes=ccfg.num_classes, hw=ccfg.input_hw, global_batch=batch,
+        phases=phases, steps_per_phase=cfg.waves_per_phase * cfg.adapt_every,
+        seed=cfg.seed, noise=0.4))
+    key = jax.random.PRNGKey(cfg.seed)
+    params = convnets.init_params(key, ccfg)
+    asi = convnets.init_asi_state(key, ccfg, batch=batch)
+    opt = make_optimizer("sgdm", lambda s: 0.05, momentum=0.9)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, asi, batch_):
+        def lossf(p):
+            loss, (m, ns) = convnets.loss_fn(p, batch_, ccfg, asi)
+            return loss, ns
+        (loss, ns), g = jax.value_and_grad(lossf, has_aux=True)(params)
+        params, opt_state = opt.update(g, opt_state, params, jnp.int32(0))
+        return params, opt_state, ns, loss
+
+    eval_loss = jax.jit(
+        lambda p, b: convnets.loss_fn(p, b, ccfg, None)[0])
+
+    report = ScenarioReport(scenario="vision", arch=ccfg.name, seed=cfg.seed,
+                            phases=phases)
+    probes: dict[int, dict] = {}
+    steps_per_phase = cfg.waves_per_phase * cfg.adapt_every
+    step = 0
+    for phase in range(phases):
+        probes[phase] = stream.probe_batch(phase)
+        report.probe_curves.setdefault(str(phase), [])
+        for _ in range(steps_per_phase):
+            params, opt_state, asi, loss = train_step(
+                params, opt_state, asi, stream.batch(step))
+            report.quality.append({"burst": len(report.burst_phase),
+                                   "phase": phase,
+                                   "loss": round(float(loss), 6)})
+            for p in sorted(probes):
+                report.probe_curves[str(p)].append(round(float(
+                    eval_loss(params, probes[p])), 6))
+            report.burst_phase.append(phase)
+            step += 1
+    return report

@@ -207,6 +207,19 @@ def test_planned_training_step_learns(tiny, tiny_plan):
     assert losses[-1] < losses[0]
 
 
+def test_plan_ranks_clamped_to_adaptation_shape():
+    """Calibration concatenates batches along tokens, so its candidate
+    ranks can exceed the adaptation shape's M = B*S — the plan must clamp
+    them (an (M, r) factor with r > M collapses under orthonormalization,
+    breaking the custom-vjp state shapes)."""
+    cfg, api, params, data = _setup("mamba2-130m")
+    batches = [data.batch(s) for s in range(2)]   # calib M = 2*B*S > B*S
+    plan = build_plan(api, cfg, params, 0.2, batches, batch_size=B, seq_len=S)
+    m = B * S
+    for site in plan.sites:
+        assert plan.rank_plan[site.name] <= min(m, site.k), site.name
+
+
 def test_plan_grouped_moe_sites():
     """MoE tail: grouped sites capture (E, T, K) activations and the plan's
     shared per-site rank lands in the GroupedASIState stack."""

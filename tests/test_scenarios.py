@@ -1,0 +1,318 @@
+"""Continual-learning scenario harness tests: replay-policy properties,
+SessionReport counter edges, stream purity, the elastic-budget replan hook,
+cross-family scenario smokes through the public API, and the launch CLI."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.ondevice.session import ReplayBuffer, SessionReport
+from repro.scenarios import (REPLAY_POLICIES, ReservoirReplay,
+                             StratifiedReplay, TaskSequenceStream,
+                             TaskStreamCfg, TrafficCfg, BurstyTraffic,
+                             make_replay, run_scenario)
+
+SEQ = 8
+
+
+def _fill(buf, n, length=6, phase_every=None):
+    for i in range(n):
+        if phase_every and i % phase_every == 0:
+            buf.set_phase(i // phase_every)
+        buf.add([1 + (i + j) % 37 for j in range(length)])
+
+
+# --------------------------------------------------------------------------
+# replay policies: deterministic unit tests
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(REPLAY_POLICIES))
+def test_replay_capacity_and_shape(policy):
+    buf = make_replay(policy, capacity=8, seq_len=SEQ, seed=0)
+    for n in (1, 4, 8, 30):
+        _fill(buf, n, phase_every=10)
+        assert len(buf) <= 8
+        batch = buf.sample_batch(5)
+        assert batch["tokens"].shape == (5, SEQ)
+        assert batch["targets"].shape == (5, SEQ)
+        # next-token alignment survives tiling
+        np.testing.assert_array_equal(np.asarray(batch["tokens"])[:, 1:],
+                                      np.asarray(batch["targets"])[:, :-1])
+
+
+@pytest.mark.parametrize("policy", sorted(REPLAY_POLICIES))
+def test_replay_deterministic_under_seed(policy):
+    a = make_replay(policy, 8, SEQ, seed=3)
+    b = make_replay(policy, 8, SEQ, seed=3)
+    _fill(a, 20, phase_every=7)
+    _fill(b, 20, phase_every=7)
+    for _ in range(3):
+        np.testing.assert_array_equal(np.asarray(a.sample_batch(4)["tokens"]),
+                                      np.asarray(b.sample_batch(4)["tokens"]))
+
+
+def test_fifo_evicts_in_add_order():
+    buf = make_replay("fifo", 4, SEQ)
+    for i in range(10):
+        buf.add([i, i, i])
+    assert [row[0] for row in buf._rows()] == [6, 7, 8, 9]
+
+
+def test_replay_empty_raises_and_unknown_policy():
+    with pytest.raises(ValueError, match="empty"):
+        make_replay("reservoir", 4, SEQ).sample_batch(2)
+    with pytest.raises(ValueError, match="unknown replay policy"):
+        make_replay("lru", 4, SEQ)
+
+
+def test_stratified_balances_phases():
+    buf = StratifiedReplay(capacity=8, seq_len=SEQ)
+    buf.set_phase(0)
+    _fill(buf, 20)
+    buf.set_phase(1)
+    _fill(buf, 20)
+    sizes = {p: len(d) for p, d in buf._by_phase.items()}
+    assert sum(sizes.values()) <= 8
+    assert sizes[0] == sizes[1] == 4     # even split across seen phases
+    # round-robin sampling touches both phases
+    buf._rng = np.random.default_rng(0)
+    idx = buf._select_indices(6)
+    assert any(i < 4 for i in idx) and any(i >= 4 for i in idx)
+
+
+def test_reservoir_keeps_early_streams():
+    """Uniform-over-history: with 4x overfill, some pre-capacity streams
+    survive (FIFO would have flushed all of them)."""
+    buf = ReservoirReplay(capacity=16, seq_len=SEQ, seed=0)
+    for i in range(64):
+        buf.add([i, i])
+    firsts = {row[0] for row in buf._rows()}
+    assert len(firsts & set(range(16))) > 0
+    assert len(buf) == 16
+
+
+# --------------------------------------------------------------------------
+# replay policies: hypothesis properties
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    SETTINGS = dict(max_examples=25, deadline=None)
+
+    @given(policy=st.sampled_from(sorted(REPLAY_POLICIES)),
+           capacity=st.integers(1, 16), n_add=st.integers(0, 48),
+           batch=st.integers(1, 6), seed=st.integers(0, 2 ** 16))
+    @settings(**SETTINGS)
+    def test_prop_capacity_never_exceeded(policy, capacity, n_add, batch,
+                                          seed):
+        buf = make_replay(policy, capacity, SEQ, seed=seed)
+        rng = np.random.default_rng(seed)
+        for i in range(n_add):
+            buf.set_phase(int(rng.integers(0, 3)))
+            buf.add(list(rng.integers(0, 99, size=int(rng.integers(2, 12)))))
+            assert len(buf) <= capacity
+        if n_add:
+            b = buf.sample_batch(batch)
+            assert b["tokens"].shape == (batch, SEQ)
+
+    @given(policy=st.sampled_from(sorted(REPLAY_POLICIES)),
+           seed=st.integers(0, 2 ** 16), n_add=st.integers(1, 30))
+    @settings(**SETTINGS)
+    def test_prop_sampling_deterministic(policy, seed, n_add):
+        bufs = [make_replay(policy, 8, SEQ, seed=seed) for _ in range(2)]
+        for buf in bufs:
+            _fill(buf, n_add, phase_every=5)
+        a = np.asarray(bufs[0].sample_batch(3)["tokens"])
+        b = np.asarray(bufs[1].sample_batch(3)["tokens"])
+        np.testing.assert_array_equal(a, b)
+
+    @given(capacity=st.integers(1, 12), n_add=st.integers(0, 40))
+    @settings(**SETTINGS)
+    def test_prop_fifo_add_order_eviction(capacity, n_add):
+        buf = make_replay("fifo", capacity, SEQ)
+        for i in range(n_add):
+            buf.add([i, i])
+        kept = [row[0] for row in buf._rows()]
+        assert kept == list(range(max(0, n_add - capacity), n_add))
+
+
+# --------------------------------------------------------------------------
+# SessionReport counter edges (golden)
+# --------------------------------------------------------------------------
+
+def test_report_probe_drift_edges():
+    rep = SessionReport(serve_stats=None, adapt_losses=[], probe_losses=[])
+    assert rep.probe_drift is None                       # 0 entries
+    rep.probe_losses.append(2.5)
+    assert rep.probe_drift is None                       # 1 entry: no drift
+    rep.probe_losses.append(2.0)
+    assert rep.probe_drift == pytest.approx(-0.5)
+
+
+def test_report_summary_empty_history():
+    rep = SessionReport(serve_stats=None, adapt_losses=[], probe_losses=[])
+    s = rep.summary()
+    assert s["adapt_loss_first"] is None
+    assert s["adapt_loss_last"] is None
+    assert s["probe_loss_before"] is None
+    assert s["probe_loss_after"] is None
+    assert s["probe_drift"] is None
+    assert s["retired"] == 0 and s["bursts"] == 0 and s["adapt_steps"] == 0
+    assert s["tokens_per_s"] == 0.0      # no serve stats recorded yet
+
+
+# --------------------------------------------------------------------------
+# streams: purity in (seed, step)
+# --------------------------------------------------------------------------
+
+def test_task_stream_phase_tables_differ_but_are_stable():
+    cfg = TaskStreamCfg(vocab_size=64, seq_len=8, global_batch=2, phases=3,
+                        steps_per_phase=2, seed=5)
+    s1, s2 = TaskSequenceStream(cfg), TaskSequenceStream(cfg)
+    assert not np.array_equal(s1.table(0), s1.table(1))
+    for p in range(3):
+        np.testing.assert_array_equal(s1.table(p), s2.table(p))
+        np.testing.assert_array_equal(
+            np.asarray(s1.probe_batch(p)["tokens"]),
+            np.asarray(s2.probe_batch(p)["tokens"]))
+    assert [s1.phase_of(s) for s in (0, 1, 2, 3, 4, 99)] == [0, 0, 1, 1, 2, 2]
+
+
+def test_bursty_traffic_pure_and_phase_consistent():
+    stream = TaskSequenceStream(TaskStreamCfg(
+        vocab_size=64, seq_len=8, global_batch=2, phases=2,
+        steps_per_phase=2, seed=1))
+    tr = BurstyTraffic(TrafficCfg(rate=4.0, seed=1), stream)
+    a = tr.arrivals(3, start_uid=7)
+    b = tr.arrivals(3, start_uid=7)
+    assert [(r.uid, r.prompt, r.max_new_tokens) for r in a] \
+        == [(r.uid, r.prompt, r.max_new_tokens) for r in b]
+    # prompts roll the phase table: every transition must exist in it
+    table = stream.table(stream.phase_of(3))
+    for r in a:
+        for t0, t1 in zip(r.prompt, r.prompt[1:]):
+            assert t1 in table[t0]
+
+
+# --------------------------------------------------------------------------
+# scenarios end to end (public API only)
+# --------------------------------------------------------------------------
+
+SMOKE = dict(scenario="domain-shift", arch="tinyllama_1_1b", reduced=True,
+             seed=0, mem_budget_mb=0.05, waves_per_phase=3, rate=4.0,
+             steps=32, adapt_every=2, burst_steps=2, batch=2, seq_len=16,
+             prompt_lens=(10, 14), max_new=4, lr=0.01,
+             replay_policy="fifo", replay_size=32)
+
+
+@pytest.fixture(scope="module")
+def shift_report():
+    return run_scenario(**SMOKE)
+
+
+def test_domain_shift_records_full_curves(shift_report):
+    r = shift_report
+    assert r.phases == 2 and r.burst_phase and 1 in r.burst_phase
+    n_bursts = len(r.burst_phase)
+    # phase-0 probe measured after every burst; phase-1 probe only once seen
+    assert len(r.probe_curves["0"]) == n_bursts
+    assert 0 < len(r.probe_curves["1"]) <= n_bursts
+    assert len(r.quality) >= n_bursts           # burst_steps losses per burst
+    assert all(w["requests"] >= 0 for w in r.waves)
+    assert r.ledger_checks and r.ledger_checks[0]["measured_bytes"] > 0
+
+
+def test_domain_shift_quality_recovers(shift_report):
+    """After the transition-table swap the phase-1 probe improves while
+    phase-1 traffic is live, and phase-0 forgetting stays loosely bounded."""
+    r = shift_report
+    assert r.recovery(1) is not None and r.recovery(1) > 0
+    assert r.forgetting(0) is not None and r.forgetting(0) < 3.0
+
+
+def test_domain_shift_bit_reproducible(shift_report):
+    """Same seed, same public-API call => identical deterministic curves."""
+    again = run_scenario(**SMOKE)
+    assert shift_report.curves() == again.curves()
+    # and the curves round-trip through JSON (the CLI writes them)
+    assert json.loads(json.dumps(again.curves())) == shift_report.curves()
+
+
+def test_scenario_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_scenario(scenario="chaos-monkey")
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-3b-a800m", "mamba2-130m"])
+def test_scenario_cross_family_smoke(arch):
+    """MoE and SSM families run the same streamed scenario through the same
+    public API (tiny shapes, one wave per phase)."""
+    r = run_scenario(scenario="task-sequence", arch=arch, reduced=True,
+                     seed=1, mem_budget_mb=0.2, phases=2, waves_per_phase=1,
+                     rate=4.0, steps=8, adapt_every=2, batch=2, seq_len=16,
+                     max_new=4, replay_policy="reservoir")
+    assert len(r.waves) == 2
+    assert sum(w["requests"] for w in r.waves) > 0
+    assert r.burst_phase, "no adaptation burst fired"
+    assert set(r.probe_curves) <= {"0", "1"} and r.probe_curves["0"]
+
+
+def test_scenario_vision_family():
+    """The convnets family phases class prototypes (no serving engine)."""
+    r = run_scenario(scenario="vision", seed=0, phases=2, waves_per_phase=2,
+                     adapt_every=2, batch=8)
+    assert r.arch.startswith("mcunet")
+    n = len(r.burst_phase)
+    assert n == 8 and len(r.probe_curves["0"]) == n
+    assert r.recovery(1) is not None
+    # learning happened in phase 0 at all
+    p0 = r.probe_curves["0"]
+    assert p0[-1] == p0[-1]                     # finite
+    assert r.quality[0]["loss"] != r.quality[-1]["loss"]
+    # determinism holds on the vision path too
+    again = run_scenario(scenario="vision", seed=0, phases=2,
+                         waves_per_phase=2, adapt_every=2, batch=8)
+    assert again.curves() == r.curves()
+
+
+def test_elastic_budget_replans_midstream():
+    """A negative drift threshold forces the elastic hook: the planner
+    re-runs on current-phase traffic at the phase boundary and the session
+    keeps adapting under the swapped rank plan."""
+    r = run_scenario(scenario="domain-shift", arch="tinyllama_1_1b",
+                     reduced=True, seed=0, mem_budget_mb=0.05,
+                     budget_schedule=(0.05, 0.045), drift_threshold=-1.0,
+                     waves_per_phase=2, rate=4.0, steps=16, adapt_every=2,
+                     batch=2, seq_len=16)
+    assert len(r.replans) == 1
+    assert r.ledger_checks[0]["replanned"] is True
+    assert r.ledger_checks[0]["budget_mb"] == pytest.approx(0.045)
+    assert r.replans[0]["planned_mb"] <= 0.045
+    # adaptation continued after the swap: bursts recorded in phase 1
+    assert 1 in r.burst_phase
+
+
+# --------------------------------------------------------------------------
+# launch CLI
+# --------------------------------------------------------------------------
+
+def test_scenarios_cli(tmp_path, capsys):
+    from repro.launch import scenarios as cli
+    out_path = tmp_path / "curves.json"
+    with pytest.deprecated_call():
+        cli.main(["--arch", "tinyllama-1.1b", "--reduced",
+                  "--scenario", "domain-shift", "--waves-per-phase", "1",
+                  "--rate", "4.0", "--steps", "8", "--seq-len", "16",
+                  "--mem-budget-mb", "0.05", "--out", str(out_path)])
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    keys = [next(iter(l)) for l in lines]
+    assert keys == ["config", "summary", "out"]
+    curves = json.loads(out_path.read_text())
+    assert curves["scenario"] == "domain-shift"
+    assert "probe_curves" in curves and "quality" in curves
+    assert all("tokens_per_s" not in w for w in curves["waves"])

@@ -1,0 +1,77 @@
+"""Benchmark-snapshot schema tests: every checked-in ``BENCH_<name>.json``
+must validate against the shared schema, and malformed snapshots must fail
+loudly (both at validation and at write time)."""
+import glob
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.snapshots import (SCHEMA_VERSION, SNAPSHOT_DIR,  # noqa: E402
+                                  load_snapshot, snapshot_path,
+                                  validate_snapshot, write_snapshot)
+
+CHECKED_IN = sorted(glob.glob(os.path.join(SNAPSHOT_DIR, "BENCH_*.json")))
+
+
+def test_snapshots_are_checked_in():
+    """The repo records at least the four core benchmark snapshots."""
+    names = {os.path.basename(p) for p in CHECKED_IN}
+    for required in ("BENCH_fused_asi.json", "BENCH_serve_throughput.json",
+                     "BENCH_activation_memory.json",
+                     "BENCH_scenario_suite.json"):
+        assert required in names, f"{required} missing from {SNAPSHOT_DIR}"
+
+
+@pytest.mark.parametrize("path", CHECKED_IN,
+                         ids=[os.path.basename(p) for p in CHECKED_IN])
+def test_checked_in_snapshot_schema(path):
+    with open(path) as f:
+        snap = json.load(f)
+    assert validate_snapshot(snap, where=os.path.basename(path)) == []
+    # the filename encodes the benchmark name
+    assert os.path.basename(path) == f"BENCH_{snap['name']}.json"
+    assert snap["schema_version"] == SCHEMA_VERSION
+
+
+def test_scenario_suite_snapshot_contents():
+    snap = load_snapshot("scenario_suite")
+    assert snap["metrics"]["recovered"] is True
+    assert snap["metrics"]["forgetting_bounded"] is True
+    assert snap["config"]["scenario"] == "domain-shift"
+    # the snapshot carries the actual curves, one point per burst
+    assert len(snap["series"]["probe_phase0"]) == snap["metrics"]["bursts"]
+    assert snap["series"]["quality"]
+
+
+def test_validate_flags_malformed():
+    good = {"schema_version": SCHEMA_VERSION, "name": "x", "git": "abc",
+            "config": {}, "metrics": {"m": 1.0}}
+    assert validate_snapshot(good) == []
+    for mutate, frag in [
+        (lambda s: s.pop("git"), "git"),
+        (lambda s: s.update(schema_version=99), "schema_version"),
+        (lambda s: s.update(metrics={}), "metrics is empty"),
+        (lambda s: s.update(metrics={"m": [1, 2]}), "want scalar"),
+        (lambda s: s.update(series={"q": ["a"]}), "numeric list"),
+        (lambda s: s.update(extra=1), "unknown keys"),
+    ]:
+        bad = json.loads(json.dumps(good))
+        mutate(bad)
+        errs = validate_snapshot(bad)
+        assert errs and any(frag in e for e in errs), (frag, errs)
+
+
+def test_write_snapshot_refuses_malformed_and_roundtrips(tmp_path):
+    with pytest.raises(ValueError, match="malformed"):
+        write_snapshot("bad", {}, {}, directory=str(tmp_path))
+    p = write_snapshot("ok", {"b": 2}, {"m": 1.5},
+                       series={"curve": [1.0, 0.5]},
+                       directory=str(tmp_path))
+    assert p == snapshot_path("ok", str(tmp_path))
+    snap = load_snapshot("ok", str(tmp_path))
+    assert validate_snapshot(snap) == []
+    assert snap["metrics"]["m"] == 1.5 and snap["series"]["curve"] == [1, 0.5]
+    assert isinstance(snap["git"], str) and snap["git"]
