@@ -32,7 +32,7 @@ BANNED_IMPORT = re.compile(r"^\s*(?:from|import)\s+repro\.(launch|runtime)",
 # modules whose --help we interrogate for flag checks
 FLAGGED_MODULES = ("repro.launch.train", "repro.launch.serve",
                    "repro.launch.dryrun", "repro.launch.adapt",
-                   "repro.launch.scenarios")
+                   "repro.launch.scenarios", "repro.analysis")
 
 FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
 LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")
@@ -69,9 +69,12 @@ def check_bash_block(code: str, where: str, errors: list,
         if not m:
             continue
         module = m.group(1)
-        path = os.path.join(REPO, *module.split(".")) + ".py"
-        src_path = os.path.join(REPO, "src", *module.split(".")) + ".py"
-        if not (os.path.exists(path) or os.path.exists(src_path)
+        candidates = []
+        for base in (os.path.join(REPO, *module.split(".")),
+                     os.path.join(REPO, "src", *module.split("."))):
+            candidates += [base + ".py",                       # module
+                           os.path.join(base, "__main__.py")]  # package CLI
+        if not (any(os.path.exists(c) for c in candidates)
                 or module == "pytest"):
             errors.append(f"{where}: module {module} not found in repo")
             continue

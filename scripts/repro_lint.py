@@ -1,0 +1,20 @@
+#!/usr/bin/env python
+"""Thin launcher for repro-lint that works without PYTHONPATH set.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis``; see
+``python -m repro.analysis --help`` for the flag reference.  CI runs
+``python scripts/repro_lint.py --format json`` and uploads the document
+as the ``lint-findings`` artifact before any test job starts.
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

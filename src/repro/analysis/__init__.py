@@ -1,0 +1,49 @@
+"""Static contract checker for the repro tree (``repro-lint``).
+
+The paper's headline number — up to 120x activation-memory reduction —
+rests on *source-level* invariants that no runtime test can exhaustively
+cover: custom_vjp forwards must stash sketched ``(P_hat, Q)`` residuals
+rather than dense activations, jit-traced code must stay pure, every
+parameter must resolve to a partition rule under every layout, and
+Pallas kernels must respect their BlockSpec/grid geometry.  This package
+checks those invariants by walking the AST of every file under
+``src/repro`` (plus a few importable facts, gathered without touching a
+device).
+
+Entry points::
+
+    python -m repro.analysis --format json
+    scripts/repro_lint.py --select jit-purity src/repro/runtime
+
+Rules (see DESIGN.md §11 for the catalog):
+
+- ``residual-contract``  dense activations saved as vjp residuals;
+  fwd/bwd arity mismatches.
+- ``jit-purity``         host effects inside traced code; device syncs in
+  runtime loop bodies outside log-step guards.
+- ``partition-coverage`` every param path resolves to exactly one rule
+  per layout; ``LinearCompressionCfg`` calls declare ``out_axis``
+  explicitly with an axis the layouts actually shard.
+- ``pallas-contract``    BlockSpec/grid geometry; ``pl.dslice`` strides;
+  ``GRAD_SKETCH_MAX_N`` confined to ``shard_local_kernels()`` scopes.
+- ``shim-contract``      deprecation shims in ``launch/`` must not import
+  the implementation at module top-level.
+
+Suppression: append ``# repro-lint: disable=<rule>[,<rule>...]`` to the
+offending line; ``# repro-lint: disable-file=<rule>`` anywhere in a file
+silences the rule for the whole file.  Suppressed findings stay visible
+in the JSON report with ``"suppressed": true``.
+"""
+from __future__ import annotations
+
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    RULES,
+    iter_source_files,
+    run_lint,
+    render_text,
+    render_json,
+)
+
+__all__ = ["Finding", "RULES", "iter_source_files", "run_lint",
+           "render_text", "render_json"]

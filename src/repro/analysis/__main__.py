@@ -1,0 +1,71 @@
+"""CLI for repro-lint: ``python -m repro.analysis [paths] [options]``.
+
+Examples:
+
+    python -m repro.analysis --format json
+    python -m repro.analysis --select jit-purity src/repro/runtime
+    python -m repro.analysis --ignore partition-coverage --format text
+
+Exit status is 0 when no *unsuppressed* findings remain, 1 otherwise
+(suppressed findings are still reported, flagged, so CI artifacts keep
+the full audit trail).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def build_parser() -> argparse.ArgumentParser:
+    from repro.analysis.rules import RULES
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: static contract checks for ASI residuals, "
+                    "jit purity, partition coverage, Pallas geometry, and "
+                    "launch shims.",
+        epilog="rules: " + "; ".join(
+            f"{name} — {doc}" for name, (_s, _f, doc) in sorted(RULES.items())))
+    p.add_argument("paths", nargs="*",
+                   help="files or directories to lint (default: src/repro)")
+    p.add_argument("--format", choices=("text", "json"), default="text",
+                   help="output format (default: text)")
+    p.add_argument("--select", action="append", default=None,
+                   metavar="RULE",
+                   help="run only these rules (repeatable, or comma-"
+                        "separated)")
+    p.add_argument("--ignore", action="append", default=None,
+                   metavar="RULE",
+                   help="skip these rules (repeatable, or comma-separated)")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: auto-detected from the "
+                        "installed package location)")
+    return p
+
+
+def _split(values) -> list[str] | None:
+    if not values:
+        return None
+    out: list[str] = []
+    for v in values:
+        out.extend(x.strip() for x in v.split(",") if x.strip())
+    return out or None
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.analysis import core
+    from repro.analysis import rules  # noqa: F401  (registers rules)
+
+    root = args.root or core.find_repo_root()
+    findings = core.run_lint(root=root, paths=args.paths or None,
+                             select=_split(args.select),
+                             ignore=_split(args.ignore))
+    if args.format == "json":
+        print(core.render_json(findings, root))
+    else:
+        print(core.render_text(findings))
+    return 1 if any(not f.suppressed for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

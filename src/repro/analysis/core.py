@@ -1,0 +1,243 @@
+"""repro-lint core: findings, rule registry, suppressions, file walker.
+
+Two kinds of rules register here:
+
+- *file rules* (``scope="file"``): called once per source file with a
+  parsed ``FileContext`` (path, source, AST, suppression table).
+- *tree rules* (``scope="tree"``): called once per lint run with the
+  full list of ``FileContext`` objects — used by rules that need a
+  cross-file view (partition coverage) or that import the package
+  (config × layout sweeps via ``eval_shape``).
+
+Rules yield ``Finding`` objects; the driver stamps ``suppressed`` by
+consulting the per-line ``# repro-lint: disable=<rule>`` table, so rule
+implementations never deal with suppression logic themselves.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Iterable, Iterator
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([\w,\- ]+)")
+
+#: rule name -> (scope, callable, one-line description)
+RULES: dict[str, tuple[str, Callable, str]] = {}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One lint offence, pointing at a file/line with a rule tag."""
+
+    rule: str
+    path: str            # repo-relative, forward slashes
+    line: int
+    message: str
+    col: int = 0
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Parsed view of one source file handed to file-scope rules."""
+
+    path: str            # absolute
+    rel: str             # repo-relative, forward slashes
+    source: str
+    tree: ast.Module
+    # line -> set of rule names disabled on that line
+    line_disables: dict[int, set[str]]
+    # rule names disabled for the entire file
+    file_disables: set[str]
+
+    @classmethod
+    def parse(cls, path: str, root: str) -> "FileContext":
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        line_disables: dict[int, set[str]] = {}
+        file_disables: set[str] = set()
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            names = {n.strip() for n in m.group(2).split(",") if n.strip()}
+            if m.group(1) == "disable-file":
+                file_disables |= names
+            else:
+                line_disables.setdefault(lineno, set()).update(names)
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        return cls(path=path, rel=rel, source=source, tree=tree,
+                   line_disables=line_disables, file_disables=file_disables)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_disables or "all" in self.file_disables:
+            return True
+        names = self.line_disables.get(line, ())
+        return rule in names or "all" in names
+
+
+def rule(name: str, scope: str = "file", doc: str = ""):
+    """Register ``fn`` as a lint rule.  ``scope`` is ``file`` or ``tree``."""
+    assert scope in ("file", "tree"), scope
+    def wrap(fn):
+        RULES[name] = (scope, fn, doc or (fn.__doc__ or "").strip()
+                       .splitlines()[0] if (doc or fn.__doc__) else "")
+        return fn
+    return wrap
+
+
+def iter_source_files(root: str, paths: Iterable[str] | None = None
+                      ) -> Iterator[str]:
+    """Yield absolute paths of the .py files a lint run covers.
+
+    Default coverage is ``src/repro`` under ``root``; explicit ``paths``
+    (files or directories) narrow it.
+    """
+    targets = list(paths) if paths else [os.path.join(root, "src", "repro")]
+    seen = set()
+    for target in targets:
+        target = os.path.abspath(target)
+        if os.path.isfile(target):
+            if target.endswith(".py") and target not in seen:
+                seen.add(target)
+                yield target
+            continue
+        for dirpath, dirnames, filenames in os.walk(target):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    path = os.path.join(dirpath, fn)
+                    if path not in seen:
+                        seen.add(path)
+                        yield path
+
+
+def find_repo_root(start: str | None = None) -> str:
+    """Walk up from ``start`` (or this file) to the directory holding
+    ``src/repro`` — works from a checkout or an installed-in-place tree."""
+    here = os.path.abspath(start or os.path.dirname(__file__))
+    cur = here
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return here
+        cur = parent
+
+
+def run_lint(root: str | None = None,
+             paths: Iterable[str] | None = None,
+             select: Iterable[str] | None = None,
+             ignore: Iterable[str] | None = None) -> list[Finding]:
+    """Run the registered rules and return all findings (suppressed ones
+    included, flagged).  Import rule modules before calling this — the
+    CLI and ``scripts/repro_lint.py`` do so via ``repro.analysis.rules``."""
+    root = root or find_repo_root()
+    active = dict(RULES)
+    if select:
+        wanted = set(select)
+        unknown = wanted - set(active)
+        if unknown:
+            raise SystemExit(f"repro-lint: unknown rule(s) in --select: "
+                             f"{', '.join(sorted(unknown))}")
+        active = {k: v for k, v in active.items() if k in wanted}
+    if ignore:
+        active = {k: v for k, v in active.items() if k not in set(ignore)}
+
+    contexts: list[FileContext] = []
+    findings: list[Finding] = []
+    for path in iter_source_files(root, paths):
+        try:
+            contexts.append(FileContext.parse(path, root))
+        except SyntaxError as e:
+            findings.append(Finding(rule="parse-error",
+                                    path=os.path.relpath(path, root),
+                                    line=e.lineno or 0,
+                                    message=f"does not parse: {e.msg}"))
+
+    for name, (scope, fn, _doc) in active.items():
+        if scope == "file":
+            for ctx in contexts:
+                for f in fn(ctx):
+                    f.suppressed = ctx.is_suppressed(f.rule, f.line)
+                    findings.append(f)
+        else:
+            by_rel = {ctx.rel: ctx for ctx in contexts}
+            for f in fn(root, contexts):
+                ctx = by_rel.get(f.path)
+                if ctx is not None:
+                    f.suppressed = ctx.is_suppressed(f.rule, f.line)
+                findings.append(f)
+    findings.sort(key=Finding.sort_key)
+    return findings
+
+
+def render_text(findings: list[Finding]) -> str:
+    lines = []
+    unsuppressed = 0
+    for f in findings:
+        tag = " (suppressed)" if f.suppressed else ""
+        unsuppressed += not f.suppressed
+        lines.append(f"{f.path}:{f.line}:{f.col}: [{f.rule}] "
+                     f"{f.message}{tag}")
+    lines.append(f"repro-lint: {unsuppressed} finding(s), "
+                 f"{len(findings) - unsuppressed} suppressed")
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding], root: str) -> str:
+    counts: dict[str, int] = {}
+    for f in findings:
+        if not f.suppressed:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+    doc = {
+        "version": 1,
+        "root": root,
+        "rules": sorted(RULES),
+        "findings": [f.to_dict() for f in findings],
+        "counts": counts,
+        "total": sum(counts.values()),
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (used by several rule modules)
+
+def dotted_name(node: ast.AST) -> str | None:
+    """Return ``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def const_int(node: ast.AST) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = const_int(node.operand)
+        return -inner if inner is not None else None
+    return None

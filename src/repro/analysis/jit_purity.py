@@ -1,0 +1,382 @@
+"""jit-purity: host effects must stay out of traced code and hot loops.
+
+Two sub-checks share the ``jit-purity`` rule name:
+
+1. **traced purity** — per module, find the functions that get traced
+   (decorated with / passed to ``jax.jit``, Pallas kernel bodies, custom_vjp
+   primal/fwd/bwd, ``lax.scan``/``while_loop``/``cond`` bodies) and every
+   local function reachable from them through the module's call graph.
+   Inside those bodies flag: ``time.*`` calls, unseeded ``np.random.*``,
+   ``print``, ``.item()`` / ``float()`` / ``int()`` on array-typed values,
+   and Python ``if`` branching on tracer-derived values (these either break
+   tracing or silently bake a host value into the compiled program).
+
+2. **loop syncs** — in ``runtime/``, ``ondevice/`` and ``scenarios/``
+   modules, flag device syncs inside loop bodies: ``.block_until_ready()``
+   and implicit transfers (``float(...)`` / ``int(...)`` / ``.item()`` of a
+   device value) outside a log-step guard (an enclosing ``if`` whose test
+   uses ``%``).  A per-step sync stalls dispatch pipelining — the serving
+   and adaptation hot paths are designed around a single explicit
+   ``jax.device_get`` per step, which is exempt.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Finding, FileContext, call_name,
+                                 dotted_name, rule)
+
+SYNC_SCOPES = ("src/repro/runtime/", "src/repro/ondevice/",
+               "src/repro/scenarios/")
+
+# call roots whose results are host values (safe to convert in a loop)
+_HOST_CALL_ROOTS = ("jax.device_get", "time.", "np.", "numpy.", "len",
+                    "range", "enumerate", "zip", "sorted", "min", "max",
+                    "sum", "abs", "round", "list", "dict", "tuple", "set",
+                    "str", "int", "float", "bool", "getattr", "isinstance")
+
+_CONVERSIONS = {"float", "int", "bool"}
+
+
+def _is_host_call(name: str | None) -> bool:
+    if name is None:
+        return False
+    return any(name == r or name.startswith(r) for r in _HOST_CALL_ROOTS
+               if not r.endswith(".")) or any(
+        name.startswith(r) for r in _HOST_CALL_ROOTS if r.endswith("."))
+
+
+def _functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    fns: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            fns.setdefault(node.name, node)
+    return fns
+
+
+def _all_functions(tree: ast.Module) -> list[ast.FunctionDef]:
+    """Every FunctionDef, including same-named methods on different
+    classes (the name-keyed dict above keeps only the first)."""
+    return [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+
+
+def _own_walk(fn: ast.FunctionDef):
+    """Walk ``fn``'s body without descending into nested function defs —
+    those are visited as functions in their own right."""
+    stack: list[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _is_jit_like(name: str | None) -> bool:
+    return name in ("jax.jit", "jit", "pjit", "jax.pjit")
+
+
+def _traced_roots(tree: ast.Module, fns: dict) -> set[str]:
+    """Names of local functions that are traced entry points."""
+    roots: set[str] = set()
+    for fn in fns.values():
+        for dec in fn.decorator_list:
+            dname = dotted_name(dec)
+            if _is_jit_like(dname) or dname in ("jax.custom_vjp",
+                                                "custom_vjp",
+                                                "jax.checkpoint"):
+                roots.add(fn.name)
+            if isinstance(dec, ast.Call):
+                cname = call_name(dec)
+                if _is_jit_like(cname) or cname in ("jax.checkpoint",):
+                    roots.add(fn.name)
+                if cname in ("partial", "functools.partial") and dec.args:
+                    inner = dotted_name(dec.args[0])
+                    if _is_jit_like(inner) or inner in ("jax.custom_vjp",
+                                                        "custom_vjp"):
+                        roots.add(fn.name)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        # X.defvjp(fwd, bwd): both halves trace
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "defvjp":
+            for a in node.args:
+                t = dotted_name(a)
+                if t in fns:
+                    roots.add(t)
+            continue
+        first_fn_arg = None
+        if node.args:
+            first_fn_arg = dotted_name(node.args[0])
+            if first_fn_arg is None and isinstance(node.args[0], ast.Call):
+                inner = node.args[0]
+                if call_name(inner) in ("partial", "functools.partial") \
+                        and inner.args:
+                    first_fn_arg = dotted_name(inner.args[0])
+        if name is None:
+            continue
+        if _is_jit_like(name) or name in (
+                "pl.pallas_call", "pallas_call",
+                "jax.lax.scan", "lax.scan", "jax.lax.while_loop",
+                "lax.while_loop", "jax.lax.cond", "lax.cond",
+                "jax.lax.fori_loop", "lax.fori_loop", "jax.checkpoint"):
+            if first_fn_arg in fns:
+                roots.add(first_fn_arg)
+            # lax.cond branches are args 1..2
+            if name.endswith("cond"):
+                for a in node.args[1:3]:
+                    t = dotted_name(a)
+                    if t in fns:
+                        roots.add(t)
+    return roots
+
+
+def _reachable(fns: dict, roots: set[str]) -> set[str]:
+    calls: dict[str, set[str]] = {}
+    for name, fn in fns.items():
+        callees = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                t = call_name(node)
+                if t in fns and t != name:
+                    callees.add(t)
+        calls[name] = callees
+    seen = set()
+    stack = [r for r in roots if r in fns]
+    while stack:
+        cur = stack.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(calls.get(cur, ()))
+    return seen
+
+
+def _array_typed_names(fn: ast.FunctionDef) -> set[str]:
+    """Names assigned (in ``fn``) from jnp/jax/lax calls — tracer-valued
+    under tracing."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = call_name(node.value)
+            if name and (name.startswith(("jnp.", "lax.", "jax.numpy.",
+                                          "jax.lax."))
+                         or (name.startswith("jax.")
+                             and not name.startswith("jax.device_get"))):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            out.add(n.id)
+    # annotated Array params
+    for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs:
+        ann = a.annotation
+        if ann is not None and dotted_name(ann) in (
+                "Array", "jax.Array", "jnp.ndarray"):
+            out.add(a.arg)
+    return out
+
+
+def _test_is_host_safe(test: ast.AST, array_names: set[str]) -> bool:
+    """True when an ``if`` test cannot involve a tracer value."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            continue
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "shape", "ndim", "dtype", "size"):
+            return True
+        if isinstance(node, ast.Name) and node.id in array_names:
+            return False
+    return True
+
+
+def _check_traced_body(ctx: FileContext, fn: ast.FunctionDef):
+    array_names = _array_typed_names(fn)
+    stack: list[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue                       # nested defs analyzed on their own
+        stack.extend(ast.iter_child_nodes(node))
+        if isinstance(node, ast.If) and not _test_is_host_safe(
+                node.test, array_names):
+            yield Finding("jit-purity", ctx.rel, node.lineno,
+                          f"{fn.name}: Python `if` on a tracer-derived "
+                          "value — use jnp.where / lax.cond inside traced "
+                          "code")
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name is None:
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item":
+                yield Finding("jit-purity", ctx.rel, node.lineno,
+                              f"{fn.name}: .item() forces a device sync "
+                              "inside traced code")
+            continue
+        if name.startswith("time."):
+            yield Finding("jit-purity", ctx.rel, node.lineno,
+                          f"{fn.name}: {name}() in traced code — wall-clock "
+                          "reads are baked in at trace time")
+        elif name.startswith(("np.random.", "numpy.random.")) and \
+                not name.endswith("default_rng"):
+            yield Finding("jit-purity", ctx.rel, node.lineno,
+                          f"{fn.name}: unseeded {name}() in traced code — "
+                          "use jax.random with an explicit key")
+        elif name == "print":
+            yield Finding("jit-purity", ctx.rel, node.lineno,
+                          f"{fn.name}: print() in traced code — use "
+                          "jax.debug.print")
+        elif name.endswith(".item"):
+            yield Finding("jit-purity", ctx.rel, node.lineno,
+                          f"{fn.name}: .item() forces a device sync inside "
+                          "traced code")
+        elif name in ("float", "int") and node.args:
+            arg = node.args[0]
+            aname = dotted_name(arg)
+            direct = call_name(arg) if isinstance(arg, ast.Call) else None
+            if (aname in array_names
+                    or (direct or "").startswith(("jnp.", "jax.", "lax."))):
+                yield Finding("jit-purity", ctx.rel, node.lineno,
+                              f"{fn.name}: {name}() on an array value "
+                              "inside traced code forces a sync (breaks "
+                              "under jit)")
+
+
+# ---------------------------------------------------------------------------
+# loop-sync sub-check
+# ---------------------------------------------------------------------------
+
+def _jitted_names(tree: ast.Module) -> set[str]:
+    """Names (locals and self attributes) bound to jax.jit(...) products."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _is_jit_like(call_name(node.value)):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+                    elif isinstance(t, ast.Attribute):
+                        out.add(t.attr)
+    return out
+
+
+def _root_name(node: ast.AST) -> str | None:
+    while isinstance(node, (ast.Subscript, ast.Attribute, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class _LoopSyncChecker:
+    def __init__(self, ctx: FileContext, jitted: set[str]):
+        self.ctx = ctx
+        self.jitted = jitted
+
+    def check_fn(self, fn: ast.FunctionDef):
+        host_names: set[str] = set()       # assigned from host-safe calls
+        device_names: set[str] = set()     # assigned from device-valued calls
+        for node in _own_walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                name = call_name(node.value)
+                targets = [n.id for t in node.targets
+                           for n in ast.walk(t) if isinstance(n, ast.Name)]
+                if _is_host_call(name):
+                    host_names.update(targets)
+                elif self._is_device_call(name):
+                    device_names.update(targets)
+                # unknown calls stay unknown: flagging them would drown the
+                # report in numpy / dict-method false positives
+        findings = []
+        for loop in _own_walk(fn):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            findings.extend(self._check_loop(fn, loop, host_names,
+                                             device_names))
+        # dedupe by line (nested loops walk the same calls twice)
+        seen = set()
+        for f in findings:
+            if f.line not in seen:
+                seen.add(f.line)
+                yield f
+
+    def _check_loop(self, fn, loop, host_names, device_names):
+        # map child -> parent inside the loop for guard lookup
+        parents: dict[ast.AST, ast.AST] = {}
+        stack = [loop]
+        while stack:
+            cur = stack.pop()
+            for child in ast.iter_child_nodes(cur):
+                parents[child] = cur
+                if not isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                    stack.append(child)
+        for node, parent in list(parents.items()):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "block_until_ready":
+                yield Finding("jit-purity", self.ctx.rel, node.lineno,
+                              f"{fn.name}: .block_until_ready() inside a "
+                              "loop body — a per-iteration device sync")
+                continue
+            name = call_name(node)
+            is_item = (isinstance(node.func, ast.Attribute)
+                       and node.func.attr == "item")
+            if not (is_item or (name in _CONVERSIONS and node.args)):
+                continue
+            arg = node if is_item else node.args[0]
+            if is_item:
+                arg = node.func.value
+            if not self._is_device_value(arg, host_names, device_names):
+                continue
+            if self._log_guarded(node, parents, loop):
+                continue
+            what = ".item()" if is_item else f"{name}()"
+            yield Finding(
+                "jit-purity", self.ctx.rel, node.lineno,
+                f"{fn.name}: {what} on a device value inside a loop body — "
+                "an implicit per-iteration sync; hoist it out of the loop, "
+                "batch via jax.device_get, or guard it to log steps")
+
+    def _is_device_call(self, name: str | None) -> bool:
+        if name is None or _is_host_call(name):
+            return False
+        return (name.startswith(("jnp.", "lax.", "jax.numpy.", "jax.lax."))
+                or (name.startswith("jax.")
+                    and not name.startswith("jax.device_get"))
+                or name in self.jitted
+                or name.split(".")[-1] in self.jitted)
+
+    def _is_device_value(self, arg, host_names, device_names) -> bool:
+        if isinstance(arg, ast.Call):
+            return self._is_device_call(call_name(arg))
+        root = _root_name(arg)
+        return root is not None and root in device_names \
+            and root not in host_names
+
+    def _log_guarded(self, node, parents, loop) -> bool:
+        cur = parents.get(node)
+        while cur is not None and cur is not loop:
+            if isinstance(cur, ast.If):
+                for t in ast.walk(cur.test):
+                    if isinstance(t, ast.BinOp) and isinstance(t.op, ast.Mod):
+                        return True
+            cur = parents.get(cur)
+        return False
+
+
+@rule("jit-purity",
+      doc="no host effects in traced code; no device syncs in runtime "
+          "loop bodies outside log-step guards")
+def check_purity(ctx: FileContext):
+    fns = _functions(ctx.tree)
+    roots = _traced_roots(ctx.tree, fns)
+    for name in sorted(_reachable(fns, roots)):
+        yield from _check_traced_body(ctx, fns[name])
+
+    if any(ctx.rel.startswith(s) for s in SYNC_SCOPES):
+        checker = _LoopSyncChecker(ctx, _jitted_names(ctx.tree))
+        for fn in _all_functions(ctx.tree):
+            yield from checker.check_fn(fn)

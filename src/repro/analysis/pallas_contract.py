@@ -1,0 +1,212 @@
+"""pallas-contract: static geometry checks for every ``pallas_call``.
+
+For each ``pl.pallas_call(kernel, grid=..., in_specs=..., out_specs=...,
+out_shape=...)(*operands)`` in ``kernels/``:
+
+* one BlockSpec per operand, one out_spec per out_shape entry;
+* every BlockSpec index_map takes exactly ``len(grid)`` arguments and
+  returns one coordinate per block-shape dim (a mismatch compiles on the
+  interpreter but mis-tiles on Mosaic);
+* block shapes and their ShapeDtypeStructs agree in rank;
+* ``pl.dslice(i * step, width)`` strides must step by exactly ``width`` —
+  ``step != width`` silently reads overlapping or out-of-bounds columns of
+  the padded dim;
+* ``GRAD_SKETCH_MAX_N`` is dispatch.py's private VMEM cap: referencing it
+  anywhere else bypasses ``local_feature_dim``'s shard-awareness, and any
+  dispatch function that divides widths by a mesh-axis size must consult
+  ``_shard_local()`` (per-shard accounting is only sound inside a
+  ``shard_local_kernels()`` scope).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Finding, FileContext, call_name, dotted_name,
+                                 rule)
+
+KERNEL_SCOPE = "src/repro/kernels/"
+DISPATCH = "src/repro/kernels/dispatch.py"
+
+
+def _enclosing_assignments(fn: ast.FunctionDef) -> dict[str, ast.expr]:
+    out: dict[str, ast.expr] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _resolve(node: ast.expr | None, env: dict) -> ast.expr | None:
+    seen = 0
+    while isinstance(node, ast.Name) and node.id in env and seen < 4:
+        node = env[node.id]
+        seen += 1
+    return node
+
+
+def _as_list(node: ast.expr | None) -> list | None:
+    """Spec/shape arguments may be a single entry or a [list, of, entries]."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _blockspec_parts(node: ast.expr):
+    """(block_shape_elts | None, index_map_lambda | None) of a BlockSpec."""
+    if not (isinstance(node, ast.Call)
+            and (call_name(node) or "").endswith("BlockSpec")):
+        return None, None
+    shape = node.args[0] if node.args else None
+    index_map = node.args[1] if len(node.args) > 1 else None
+    for kw in node.keywords:
+        if kw.arg in ("block_shape",):
+            shape = kw.value
+        if kw.arg in ("index_map",):
+            index_map = kw.value
+    shape_elts = list(shape.elts) if isinstance(shape,
+                                                (ast.Tuple, ast.List)) else None
+    lam = index_map if isinstance(index_map, ast.Lambda) else None
+    return shape_elts, lam
+
+
+def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
+                       env: dict):
+    kw = {k.arg: k.value for k in call.keywords}
+    grid = _resolve(kw.get("grid"), env)
+    n_grid = len(grid.elts) if isinstance(grid, (ast.Tuple, ast.List)) else None
+
+    in_specs = _as_list(_resolve(kw.get("in_specs"), env))
+    out_specs = _as_list(_resolve(kw.get("out_specs"), env))
+    out_shape = _as_list(_resolve(kw.get("out_shape"), env))
+
+    if in_specs is not None and operands and \
+            not any(isinstance(a, ast.Starred) for a in operands) and \
+            len(in_specs) != len(operands):
+        yield Finding("pallas-contract", ctx.rel, call.lineno,
+                      f"pallas_call declares {len(in_specs)} in_specs but "
+                      f"is applied to {len(operands)} operands")
+    if out_specs is not None and out_shape is not None and \
+            len(out_specs) != len(out_shape):
+        yield Finding("pallas-contract", ctx.rel, call.lineno,
+                      f"pallas_call declares {len(out_specs)} out_specs but "
+                      f"{len(out_shape)} out_shape entries")
+
+    def check_spec(spec_node, what: str, rank_hint: int | None):
+        shape_elts, lam = _blockspec_parts(_resolve(spec_node, env))
+        if shape_elts is None:
+            return
+        if n_grid is not None and lam is not None and \
+                len(lam.args.args) != n_grid:
+            yield Finding(
+                "pallas-contract", ctx.rel, lam.lineno,
+                f"{what}: index_map takes {len(lam.args.args)} args but the "
+                f"grid has {n_grid} dims")
+        if lam is not None and isinstance(lam.body, (ast.Tuple, ast.List)) \
+                and len(lam.body.elts) != len(shape_elts):
+            yield Finding(
+                "pallas-contract", ctx.rel, lam.lineno,
+                f"{what}: index_map returns {len(lam.body.elts)} block "
+                f"coords for a {len(shape_elts)}-d block shape")
+        if rank_hint is not None and len(shape_elts) != rank_hint:
+            yield Finding(
+                "pallas-contract", ctx.rel, spec_node.lineno,
+                f"{what}: block shape is {len(shape_elts)}-d but its "
+                f"out_shape entry is {rank_hint}-d")
+
+    for i, spec in enumerate(in_specs or []):
+        yield from check_spec(spec, f"in_specs[{i}]", None)
+    for i, spec in enumerate(out_specs or []):
+        rank = None
+        if out_shape is not None and i < len(out_shape):
+            entry = _resolve(out_shape[i], env)
+            if isinstance(entry, ast.Call) and \
+                    (call_name(entry) or "").endswith("ShapeDtypeStruct") \
+                    and entry.args and isinstance(entry.args[0],
+                                                  (ast.Tuple, ast.List)):
+                rank = len(entry.args[0].elts)
+        yield from check_spec(spec, f"out_specs[{i}]", rank)
+
+
+def _check_dslices(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) in ("pl.dslice", "pl.ds", "dslice")
+                and len(node.args) >= 2):
+            continue
+        start, width = node.args[0], node.args[1]
+        if not (isinstance(start, ast.BinOp)
+                and isinstance(start.op, ast.Mult)):
+            continue
+        # i * step: the non-index factor must equal the slice width
+        factors = [dotted_name(start.left) or
+                   (start.left.value if isinstance(start.left, ast.Constant)
+                    else None),
+                   dotted_name(start.right) or
+                   (start.right.value if isinstance(start.right, ast.Constant)
+                    else None)]
+        width_key = dotted_name(width) if not isinstance(width, ast.Constant) \
+            else width.value
+        if width_key is not None and width_key not in factors:
+            yield Finding(
+                "pallas-contract", ctx.rel, node.lineno,
+                f"pl.dslice steps by {factors} but slices {width_key!r} "
+                "columns — a step != width over-indexes or overlaps the "
+                "padded dim")
+
+
+def _check_cap(ctx: FileContext):
+    """GRAD_SKETCH_MAX_N / shard-local discipline."""
+    if ctx.rel == DISPATCH:
+        for fn in (n for n in ast.walk(ctx.tree)
+                   if isinstance(n, ast.FunctionDef)):
+            loads = {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+            attrs = {n.attr for n in ast.walk(fn)
+                     if isinstance(n, ast.Attribute)}
+            if ("_mesh_axis_size" in loads or "_mesh_axis_size" in attrs) \
+                    and "_shard_local" not in loads:
+                yield Finding(
+                    "pallas-contract", ctx.rel, fn.lineno,
+                    f"{fn.name} divides widths by a mesh-axis size without "
+                    "consulting _shard_local() — per-shard VMEM accounting "
+                    "is only sound inside shard_local_kernels()")
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Name) and node.id == "GRAD_SKETCH_MAX_N":
+            yield Finding(
+                "pallas-contract", ctx.rel, node.lineno,
+                "GRAD_SKETCH_MAX_N referenced outside kernels/dispatch.py — "
+                "go through dispatch.matmul_grad_sketch / local_feature_dim "
+                "so the cap stays shard-aware")
+        if isinstance(node, ast.Attribute) and \
+                node.attr == "GRAD_SKETCH_MAX_N" and \
+                dotted_name(node.value) not in ("dispatch",):
+            yield Finding(
+                "pallas-contract", ctx.rel, node.lineno,
+                "GRAD_SKETCH_MAX_N referenced outside kernels/dispatch.py — "
+                "go through dispatch helpers so the cap stays shard-aware")
+
+
+@rule("pallas-contract",
+      doc="BlockSpec/grid geometry, dslice strides, and the "
+          "GRAD_SKETCH_MAX_N shard-local discipline")
+def check_pallas(ctx: FileContext):
+    if not ctx.rel.startswith("src/repro/"):
+        return
+    if ctx.rel.startswith(KERNEL_SCOPE):
+        for fn in (n for n in ast.walk(ctx.tree)
+                   if isinstance(n, ast.FunctionDef)):
+            env = _enclosing_assignments(fn)
+            for node in ast.walk(fn):
+                # pl.pallas_call(...)(operands); a bare pallas_call that is
+                # stored and applied later has no operand list to check, so
+                # only the applied form is geometry-checked.
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Call) and \
+                        (call_name(node.func) or "").endswith("pallas_call"):
+                    yield from _check_pallas_call(ctx, node.func, node.args,
+                                                  env)
+        yield from _check_dslices(ctx)
+    yield from _check_cap(ctx)

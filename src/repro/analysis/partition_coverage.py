@@ -1,0 +1,227 @@
+"""partition-coverage: every parameter resolves to exactly one partition
+rule under every layout, and every declared ``out_axis`` is real.
+
+Two halves:
+
+1. **AST half** — every ``LinearCompressionCfg(...)`` construction in
+   ``models/`` must pass ``out_axis`` *explicitly* (``out_axis=None`` when
+   the output dim is replicated): the field defaults to None, so an omitted
+   keyword is indistinguishable from a deliberate "replicated" declaration —
+   and an undeclared TP-sharded dim silently checks the VMEM cap against
+   the global width (see ``kernels.dispatch.local_feature_dim``).  Declared
+   axis names must exist in the logical vocabulary and be mapped to a mesh
+   axis by the TP layout (an axis no layout shards is a dead declaration).
+
+2. **import half** — for each config in ``configs/registry.py``, build the
+   parameter struct via ``ModelAPI.init_struct()`` (``eval_shape`` — no
+   device arrays), then for each layout in {dp, fsdp, tp} on an
+   ``AbstractMesh`` run ``partition.param_specs`` and verify each leaf path
+   matches exactly one ``_param_rule`` branch (matchers are extracted from
+   the rule's AST, so this stays in lock-step with the real if-chain).
+   A >=2-d leaf matching no branch falls through to replication — silent
+   memory waste at scale; a leaf matching two branches is order-dependent.
+
+Findings anchor to ``parallel/partition.py`` / the ccfg call site, so
+suppressions live next to the code they bless.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.core import Finding, call_name, rule
+
+PARTITION = "src/repro/parallel/partition.py"
+MODEL_SCOPE = "src/repro/models/"
+LAYOUTS = ("dp", "fsdp", "tp")
+
+# Leaf names whose fall-through to replication is the *intended* rule.
+# 1-d leaves are exempt wholesale; this list is for >=2-d leaves only —
+# all of them are per-layer *vectors* stacked to (n_layers, dim) by the
+# scan-over-layers parameter layout, so replicating them costs O(L * d),
+# negligible next to any weight matrix.
+REPLICATED_OK: frozenset = frozenset({
+    "dec_pos",                          # matched explicitly, listed defensively
+    "bias", "bq", "bk", "bv", "bo",     # attention / norm bias vectors
+    "up_b", "down_b",                   # MLP bias vectors
+    "norm", "scale",                    # RMS/LayerNorm gain vectors
+})
+
+
+def _out_axis_nodes(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name and name.split(".")[-1] == "LinearCompressionCfg":
+                yield node
+
+
+def _literal_axes(node: ast.expr):
+    """String constants an out_axis value expression can *evaluate to* —
+    IfExp tests and comparison operands are conditions, not axis names."""
+    if isinstance(node, ast.IfExp):
+        yield from _literal_axes(node.body)
+        yield from _literal_axes(node.orelse)
+    elif isinstance(node, (ast.Compare, ast.BoolOp)):
+        return
+    elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    else:
+        for child in ast.iter_child_nodes(node):
+            yield from _literal_axes(child)
+
+
+def _vocabulary():
+    from repro.parallel import sharding
+    tp = sharding.single_pod_rules()
+    return set(tp), {k for k, v in tp.items() if v is not None}
+
+
+def _check_out_axes(contexts):
+    try:
+        vocab, tp_sharded = _vocabulary()
+    except Exception as e:                                # pragma: no cover
+        yield Finding("partition-coverage", PARTITION, 1,
+                      f"could not import sharding rules: {e!r}")
+        return
+    for ctx in contexts:
+        if not ctx.rel.startswith(MODEL_SCOPE):
+            continue
+        for node in _out_axis_nodes(ctx.tree):
+            kw = next((k for k in node.keywords if k.arg == "out_axis"), None)
+            if kw is None:
+                yield Finding(
+                    "partition-coverage", ctx.rel, node.lineno,
+                    "LinearCompressionCfg without an explicit out_axis — "
+                    "declare the output dim's logical axis, or out_axis="
+                    "None if it is replicated (the VMEM cap is sized "
+                    "against this)")
+                continue
+            for axis in _literal_axes(kw.value):
+                if axis not in vocab:
+                    yield Finding(
+                        "partition-coverage", ctx.rel, kw.value.lineno,
+                        f"out_axis={axis!r} is not in the logical-axis "
+                        f"vocabulary {sorted(vocab)}")
+                elif axis not in tp_sharded:
+                    yield Finding(
+                        "partition-coverage", ctx.rel, kw.value.lineno,
+                        f"out_axis={axis!r} is never sharded by the TP "
+                        "layout — a dead declaration (use None)")
+
+
+# ---------------------------------------------------------------------------
+# import half
+# ---------------------------------------------------------------------------
+
+def _rule_matchers(partition_path: str):
+    """Ordered (lineno, frozenset_of_last_names) per ``_param_rule`` branch
+    that dispatches on the leaf's last path component."""
+    with open(partition_path, encoding="utf-8") as f:
+        tree = ast.parse(f.read())
+    fn = next(n for n in ast.walk(tree)
+              if isinstance(n, ast.FunctionDef) and n.name == "_param_rule")
+    matchers = []
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.If)
+                and isinstance(node.test, ast.Compare)):
+            continue
+        test = node.test
+        if not (isinstance(test.left, ast.Name) and test.left.id == "last"):
+            continue
+        comp = test.comparators[0]
+        if isinstance(test.ops[0], ast.Eq) and isinstance(comp, ast.Constant):
+            matchers.append((node.lineno, frozenset([comp.value])))
+        elif isinstance(test.ops[0], ast.In) and isinstance(
+                comp, (ast.Tuple, ast.List)):
+            names = frozenset(e.value for e in comp.elts
+                              if isinstance(e, ast.Constant))
+            matchers.append((node.lineno, names))
+    return matchers
+
+
+def _abstract_mesh():
+    import jax.sharding as js
+    return js.AbstractMesh((("data", 2), ("model", 4)))
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _check_coverage(root: str):
+    import jax
+
+    from repro.configs.registry import ARCHS, get_config
+    from repro.models.registry import build_model
+    from repro.parallel import partition
+
+    matchers = _rule_matchers(os.path.join(root, *PARTITION.split("/")))
+    if not matchers:                                      # pragma: no cover
+        yield Finding("partition-coverage", PARTITION, 1,
+                      "could not extract any `last`-name matchers from "
+                      "_param_rule — the coverage check is blind")
+        return
+    mesh = _abstract_mesh()
+    rule_line = min(line for line, _ in matchers)
+
+    uncovered: dict[tuple, set] = {}
+    ambiguous: dict[tuple, set] = {}
+    prev_layout = partition.LAYOUT
+    try:
+        for arch in ARCHS:
+            cfg = get_config(arch).reduced()
+            struct = build_model(cfg).init_struct()
+            flat, _ = jax.tree_util.tree_flatten_with_path(struct)
+            leaves = [(_leaf_name(p), len(leaf.shape), leaf.shape)
+                      for p, leaf in flat]
+            for layout in LAYOUTS:
+                partition.set_layout(layout)
+                try:
+                    partition.param_specs(cfg, struct, mesh)
+                except Exception as e:
+                    yield Finding(
+                        "partition-coverage", PARTITION, rule_line,
+                        f"param_specs raised for arch={arch} "
+                        f"layout={layout}: {e!r}")
+                    continue
+                for name, ndim, shape in leaves:
+                    last = name.split("/")[-1]
+                    hits = [line for line, names in matchers
+                            if last in names]
+                    if len(hits) > 1:
+                        ambiguous.setdefault((last, tuple(hits)),
+                                             set()).add(arch)
+                    elif not hits and ndim >= 2 and \
+                            last not in REPLICATED_OK:
+                        uncovered.setdefault((last, ndim),
+                                             set()).add(f"{arch}:{layout}")
+    finally:
+        partition.set_layout(prev_layout)
+
+    for (last, ndim), cells in sorted(uncovered.items()):
+        sample = ", ".join(sorted(cells)[:3])
+        yield Finding(
+            "partition-coverage", PARTITION, rule_line,
+            f"param leaf {last!r} ({ndim}-d; e.g. {sample}) matches no "
+            "_param_rule branch — it silently replicates; add a rule or "
+            "extend the replicated-by-design set")
+    for (last, hits), archs in sorted(ambiguous.items()):
+        yield Finding(
+            "partition-coverage", PARTITION, hits[1],
+            f"param leaf {last!r} matches {len(hits)} _param_rule branches "
+            f"(lines {list(hits)}) — resolution is order-dependent")
+
+
+@rule("partition-coverage", scope="tree",
+      doc="every param path resolves to exactly one partition rule per "
+          "layout; every declared out_axis is a real, TP-sharded axis")
+def check_partition(root: str, contexts):
+    yield from _check_out_axes(contexts)
+    yield from _check_coverage(root)

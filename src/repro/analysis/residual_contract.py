@@ -1,0 +1,382 @@
+"""residual-contract: custom_vjp forwards must not save dense activations.
+
+The paper's activation-memory reduction exists only if the residual tuple a
+``custom_vjp`` fwd returns carries the sketched factors (P̂, Q / Tucker
+core+factors) and *never* the full-width activation X.  The rule runs a
+name/shape-provenance (taint) analysis over each fwd body in ``core/``,
+``models/`` and ``kernels/``:
+
+* taint seeds: the fwd's differentiable activation-like parameters (anything
+  not named like a weight/bias/state/config);
+* taint propagates through shape-preserving ops (reshape / astype /
+  transpose / ``.T`` / elementwise arithmetic / slicing) and through calls
+  to *local* helpers (inlined one level, memoized);
+* taint is severed by contractions (``@``, ``jnp.dot``, ``einsum``,
+  ``dispatch.*``), decompositions (``svd``, ``orthonormalize``,
+  ``tucker_asi_step``) and any other imported call — their outputs are
+  rank-reduced or otherwise not the dense activation;
+* a tainted element inside the returned residual tuple is a finding.
+
+It also checks the registration arithmetic: fwd must mirror the primal's
+signature and return a 2-tuple, and bwd must return one cotangent per
+differentiable primal argument.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import (Finding, FileContext, call_name, const_int,
+                                 dotted_name, rule)
+
+SCOPES = ("src/repro/core/", "src/repro/models/", "src/repro/kernels/")
+
+# fwd parameters that are not activations (weights/state/config/randomness)
+_NON_ACTIVATION = re.compile(
+    r"^(w|b|weight|bias|state|params?|cfg|config|key|rng|.*_state|.*_cfg)$")
+
+# shape-preserving methods: receiver taint flows to the result
+_PROPAGATE_METHODS = {"reshape", "astype", "transpose", "swapaxes",
+                      "moveaxis", "ravel", "flatten", "squeeze", "copy"}
+# shape-preserving free functions (taint = OR of argument taints)
+_PROPAGATE_FUNCS = {
+    "jnp.reshape", "jnp.transpose", "jnp.swapaxes", "jnp.moveaxis",
+    "jnp.asarray", "jnp.pad", "jnp.expand_dims", "jnp.squeeze", "jnp.flip",
+    "jnp.roll", "jnp.concatenate", "jnp.stack", "jnp.split", "jnp.where",
+    "jnp.broadcast_to", "jax.numpy.reshape", "tuple", "list",
+}
+_SHAPE_ATTRS = {"shape", "dtype", "ndim", "size", "at"}
+_MAX_INLINE_DEPTH = 3
+
+
+def _collect_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    fns: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            fns.setdefault(node.name, node)
+    return fns
+
+
+def _decorator_custom_vjp(fn: ast.FunctionDef):
+    """Return the nondiff_argnums tuple if ``fn`` is a custom_vjp primal."""
+    for dec in fn.decorator_list:
+        name = dotted_name(dec)
+        if name in ("jax.custom_vjp", "custom_vjp"):
+            return ()
+        if isinstance(dec, ast.Call) and call_name(dec) in (
+                "partial", "functools.partial"):
+            if dec.args and dotted_name(dec.args[0]) in (
+                    "jax.custom_vjp", "custom_vjp"):
+                for kw in dec.keywords:
+                    if kw.arg == "nondiff_argnums" and isinstance(
+                            kw.value, (ast.Tuple, ast.List)):
+                        vals = tuple(const_int(e) for e in kw.value.elts)
+                        if all(v is not None for v in vals):
+                            return vals
+                return ()
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _own_returns(fn: ast.FunctionDef) -> list[ast.Return]:
+    """Return statements belonging to ``fn`` itself (not nested defs)."""
+    out: list[ast.Return] = []
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Return):
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _any(t) -> bool:
+    return any(_any(x) for x in t) if isinstance(t, tuple) else bool(t)
+
+
+class _Taint:
+    """Flow-insensitive-per-branch, order-sensitive taint evaluator."""
+
+    def __init__(self, fns: dict[str, ast.FunctionDef]):
+        self.fns = fns
+        self._memo: dict = {}
+
+    # -- function-level -----------------------------------------------------
+
+    def run(self, fn: ast.FunctionDef, arg_taints: dict[str, bool],
+            depth: int = 0):
+        """Execute ``fn`` and return (env, return_taint)."""
+        env: dict[str, object] = dict(arg_taints)
+        ret = self._exec(fn.body, env, depth)
+        return env, ret
+
+    def call_fn(self, name: str, arg_taints: list, kw_taints: dict,
+                depth: int) -> object:
+        fn = self.fns.get(name)
+        if fn is None or depth >= _MAX_INLINE_DEPTH:
+            return False
+        params = _param_names(fn)
+        key = (name, tuple(bool(_any(t)) for t in arg_taints),
+               tuple(sorted((k, bool(_any(v)))
+                            for k, v in kw_taints.items())))
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = False           # cycle guard
+        env = {p: False for p in params}
+        for p, t in zip(params, arg_taints):
+            env[p] = t
+        env.update({k: v for k, v in kw_taints.items() if k in env})
+        ret = self._exec(fn.body, env, depth + 1)
+        self._memo[key] = ret
+        return ret
+
+    def _exec(self, body: list, env: dict, depth: int) -> object:
+        ret: object = False
+        for stmt in body:
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                self._assign(stmt, env, depth)
+            elif isinstance(stmt, ast.Return):
+                if stmt.value is not None:
+                    ret = self.eval(stmt.value, env, depth)
+            elif isinstance(stmt, ast.If):
+                e1, e2 = dict(env), dict(env)
+                r1 = self._exec(stmt.body, e1, depth)
+                r2 = self._exec(stmt.orelse, e2, depth)
+                for k in set(e1) | set(e2):
+                    env[k] = self._merge(e1.get(k, False), e2.get(k, False))
+                ret = self._merge(ret, self._merge(r1, r2))
+            elif isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._bind(stmt.target,
+                               self.eval(stmt.iter, env, depth), env)
+                r = self._exec(stmt.body + stmt.orelse, env, depth)
+                ret = self._merge(ret, r)
+            elif isinstance(stmt, (ast.With,)):
+                r = self._exec(stmt.body, env, depth)
+                ret = self._merge(ret, r)
+            elif isinstance(stmt, ast.Try):
+                r = self._exec(stmt.body + stmt.finalbody, env, depth)
+                ret = self._merge(ret, r)
+            # Expr / FunctionDef / Assert / Raise: no bindings we track
+        return ret
+
+    def _merge(self, a, b):
+        if isinstance(a, tuple) and isinstance(b, tuple) and len(a) == len(b):
+            return tuple(self._merge(x, y) for x, y in zip(a, b))
+        return a if _any(a) else b
+
+    def _assign(self, stmt, env: dict, depth: int):
+        if isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name):
+                cur = env.get(stmt.target.id, False)
+                if isinstance(stmt.op, ast.MatMult):
+                    env[stmt.target.id] = False
+                else:
+                    env[stmt.target.id] = _any(cur) or _any(
+                        self.eval(stmt.value, env, depth))
+            return
+        value = stmt.value
+        if value is None:
+            return
+        taint = self.eval(value, env, depth)
+        targets = stmt.targets if isinstance(stmt, ast.Assign) else [
+            stmt.target]
+        for tgt in targets:
+            self._bind(tgt, taint, env)
+
+    def _bind(self, tgt, taint, env: dict):
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = taint
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            if isinstance(taint, tuple) and len(taint) == len(tgt.elts):
+                for e, t in zip(tgt.elts, taint):
+                    self._bind(e, t, env)
+            else:
+                for e in tgt.elts:
+                    self._bind(e, _any(taint), env)
+        # attribute/subscript targets: not tracked
+
+    # -- expressions --------------------------------------------------------
+
+    def eval(self, node: ast.AST, env: dict, depth: int) -> object:
+        if isinstance(node, ast.Name):
+            return env.get(node.id, False)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return tuple(self.eval(e, env, depth) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value, env, depth)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SHAPE_ATTRS:
+                return False
+            return _any(self.eval(node.value, env, depth))
+        if isinstance(node, ast.Subscript):
+            return _any(self.eval(node.value, env, depth))
+        if isinstance(node, ast.BinOp):
+            if isinstance(node.op, ast.MatMult):
+                return False
+            return _any(self.eval(node.left, env, depth)) or _any(
+                self.eval(node.right, env, depth))
+        if isinstance(node, ast.UnaryOp):
+            return _any(self.eval(node.operand, env, depth))
+        if isinstance(node, ast.IfExp):
+            return self._merge(self.eval(node.body, env, depth),
+                               self.eval(node.orelse, env, depth))
+        if isinstance(node, (ast.Compare, ast.BoolOp)):
+            return False
+        if isinstance(node, ast.Call):
+            return self._call(node, env, depth)
+        return False
+
+    def _call(self, node: ast.Call, env: dict, depth: int) -> object:
+        arg_taints = [self.eval(a, env, depth) for a in node.args]
+        kw_taints = {kw.arg: self.eval(kw.value, env, depth)
+                     for kw in node.keywords if kw.arg}
+        name = call_name(node)
+        # transform wrappers applied inline:  jax.vmap(local)(x, p)
+        if isinstance(node.func, ast.Call):
+            inner = node.func
+            iname = call_name(inner)
+            if iname in ("jax.vmap", "vmap", "jax.checkpoint", "jax.remat",
+                         "partial", "functools.partial") and inner.args:
+                target = dotted_name(inner.args[0])
+                if target in self.fns:
+                    pre = [self.eval(a, env, depth) for a in inner.args[1:]]
+                    return self.call_fn(target, pre + arg_taints, kw_taints,
+                                        depth)
+            return False
+        if name is None:
+            return False
+        if name in self.fns:                      # local helper: inline
+            return self.call_fn(name, arg_taints, kw_taints, depth)
+        if name in _PROPAGATE_FUNCS:
+            merged = False
+            for t in arg_taints + list(kw_taints.values()):
+                merged = merged or _any(t)
+            return merged
+        # method call on an expression: x.reshape(...) etc.
+        if isinstance(node.func, ast.Attribute):
+            recv = node.func.value
+            if node.func.attr in _PROPAGATE_METHODS:
+                return _any(self.eval(recv, env, depth))
+        # anything else (contractions, decompositions, imported code) severs
+        return False
+
+
+def _src(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:                                       # pragma: no cover
+        return "<expr>"
+
+
+@rule("residual-contract",
+      doc="custom_vjp residuals must be sketched factors, never dense "
+          "activations; fwd/bwd arities must match the primal")
+def check_residuals(ctx: FileContext):
+    if not any(ctx.rel.startswith(s) for s in SCOPES):
+        return
+    fns = _collect_functions(ctx.tree)
+    primals: dict[str, tuple] = {}
+    for fn in fns.values():
+        nondiff = _decorator_custom_vjp(fn)
+        if nondiff is not None:
+            primals[fn.name] = nondiff
+
+    registrations = []           # (primal_name, fwd_name, bwd_name, lineno)
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "defvjp" and len(node.args) >= 2):
+            primal = dotted_name(node.func.value)
+            fwd, bwd = dotted_name(node.args[0]), dotted_name(node.args[1])
+            registrations.append((primal, fwd, bwd, node.lineno))
+
+    registered = {r[0] for r in registrations}
+    for pname, fn in ((n, fns[n]) for n in primals if n in fns):
+        if pname not in registered:
+            yield Finding("residual-contract", ctx.rel, fn.lineno,
+                          f"custom_vjp primal {pname!r} has no defvjp "
+                          "registration in this module")
+
+    taint = _Taint(fns)
+    for primal, fwd_name, bwd_name, lineno in registrations:
+        if primal not in primals:
+            continue
+        nondiff = primals[primal]
+        pparams = _param_names(fns[primal])
+        n_diff = len(pparams) - len(nondiff)
+        fwd, bwd = fns.get(fwd_name), fns.get(bwd_name)
+        if fwd is None or bwd is None:
+            continue
+
+        # --- arity contracts ---------------------------------------------
+        fparams = _param_names(fwd)
+        if len(fparams) != len(pparams):
+            yield Finding("residual-contract", ctx.rel, fwd.lineno,
+                          f"{fwd_name} takes {len(fparams)} args but primal "
+                          f"{primal} takes {len(pparams)} — fwd must mirror "
+                          "the primal signature")
+        bparams = _param_names(bwd)
+        if len(bparams) != len(nondiff) + 2:
+            yield Finding("residual-contract", ctx.rel, bwd.lineno,
+                          f"{bwd_name} takes {len(bparams)} args; expected "
+                          f"{len(nondiff) + 2} (nondiff args + residuals + "
+                          "cotangents)")
+        for ret in _own_returns(bwd):
+            if isinstance(ret.value, ast.Tuple) and \
+                    len(ret.value.elts) != n_diff:
+                yield Finding(
+                    "residual-contract", ctx.rel, ret.lineno,
+                    f"{bwd_name} returns {len(ret.value.elts)} cotangents "
+                    f"but primal {primal} has {n_diff} differentiable args")
+
+        # --- dense-residual taint ------------------------------------------
+        seeds = {p: bool(i not in nondiff
+                         and not _NON_ACTIVATION.match(p))
+                 for i, p in enumerate(fparams)}
+        env, _ = taint.run(fwd, seeds)
+        for ret in _own_returns(fwd):
+            if not isinstance(ret.value, ast.Tuple):
+                continue
+            if len(ret.value.elts) != 2:
+                yield Finding(
+                    "residual-contract", ctx.rel, ret.lineno,
+                    f"{fwd_name} must return (output, residuals) — got a "
+                    f"{len(ret.value.elts)}-tuple")
+                continue
+            res_node = ret.value.elts[1]
+            res_taint = taint.eval(res_node, env, 0)
+            # resolve a bare name to its element structure for reporting
+            if isinstance(res_node, ast.Name):
+                for stmt in ast.walk(fwd):
+                    if (isinstance(stmt, ast.Assign)
+                            and any(isinstance(t, ast.Name)
+                                    and t.id == res_node.id
+                                    for t in stmt.targets)
+                            and isinstance(stmt.value, ast.Tuple)):
+                        res_node = stmt.value
+                        break
+            if isinstance(res_taint, tuple) and isinstance(res_node,
+                                                           ast.Tuple):
+                for i, (el, t) in enumerate(zip(res_node.elts, res_taint)):
+                    if _any(t):
+                        # anchor at the element so a suppression sits next
+                        # to the tuple that saves it, not the return
+                        yield Finding(
+                            "residual-contract", ctx.rel, el.lineno,
+                            f"{fwd_name} residual element {i} "
+                            f"({_src(el)}) carries a full-width activation "
+                            "— save sketched factors (P̂, Q) instead")
+            elif _any(res_taint):
+                yield Finding(
+                    "residual-contract", ctx.rel, res_node.lineno,
+                    f"{fwd_name} residuals ({_src(res_node)}) carry a "
+                    "full-width activation — save sketched factors instead")

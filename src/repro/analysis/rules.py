@@ -1,0 +1,14 @@
+"""Import every rule module so its ``@rule`` registrations land in
+``repro.analysis.core.RULES``.  The CLI and ``scripts/repro_lint.py``
+import this module once before calling ``run_lint``; tests can import it
+too and then select individual rules."""
+from __future__ import annotations
+
+from repro.analysis import jit_purity  # noqa: F401
+from repro.analysis import pallas_contract  # noqa: F401
+from repro.analysis import partition_coverage  # noqa: F401
+from repro.analysis import residual_contract  # noqa: F401
+from repro.analysis import shim_contract  # noqa: F401
+from repro.analysis.core import RULES
+
+__all__ = ["RULES"]

@@ -1,0 +1,73 @@
+"""shim-contract: deprecation shims in ``launch/`` must only re-export.
+
+A *shim* is a ``launch/`` module with a module-level ``__getattr__`` that
+emits a ``DeprecationWarning`` — its job is to forward old entry-point
+names to their new homes (``repro.api`` etc.) and nothing else.  A shim
+that imports ``repro.*`` at module top level defeats the point: importing
+the shim (e.g. for ``--help`` in docs checks, or transitively via the
+package) drags in jax and the heavy runtime even when no forwarded name
+is touched, and any env-var setup the shim does (``XLA_FLAGS``,
+``LIBTPU_INIT_ARGS``) happens *after* the library is already imported.
+
+The rule builds a top-level import graph per shim and flags any
+``repro.*`` import outside a function body, except ``repro.configs*``
+(pure-dataclass config tables, safe and cheap) and ``repro.analysis*``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, FileContext, rule
+
+LAUNCH_SCOPE = "src/repro/launch/"
+#: top-level imports of these prefixes are allowed even in shims
+_ALLOWED_PREFIXES = ("repro.configs", "repro.analysis")
+
+
+def _is_shim(tree: ast.Module) -> bool:
+    """Module-level ``__getattr__`` that raises a DeprecationWarning."""
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == "__getattr__":
+            for inner in ast.walk(node):
+                if isinstance(inner, ast.Name) and \
+                        inner.id == "DeprecationWarning":
+                    return True
+    return False
+
+
+def _top_level_repro_imports(tree: ast.Module):
+    """(lineno, dotted_module) for each module-scope ``repro.*`` import."""
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "repro" or alias.name.startswith("repro."):
+                    yield node.lineno, alias.name
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            if mod == "repro" or mod.startswith("repro."):
+                if mod == "repro":
+                    # `from repro import api` names the submodule in the
+                    # alias, not the module field
+                    for alias in node.names:
+                        yield node.lineno, f"repro.{alias.name}"
+                else:
+                    yield node.lineno, mod
+
+
+@rule("shim-contract",
+      doc="launch/ deprecation shims must only re-export: no top-level "
+          "repro.* imports beyond configs")
+def check_shims(ctx: FileContext):
+    if not ctx.rel.startswith(LAUNCH_SCOPE):
+        return
+    if not _is_shim(ctx.tree):
+        return
+    for lineno, mod in _top_level_repro_imports(ctx.tree):
+        if any(mod == p or mod.startswith(p + ".")
+               for p in _ALLOWED_PREFIXES):
+            continue
+        yield Finding(
+            "shim-contract", ctx.rel, lineno,
+            f"deprecation shim imports {mod} at module top level — move it "
+            "into the function/__getattr__ that needs it so importing the "
+            "shim stays side-effect-free")

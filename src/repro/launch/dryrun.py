@@ -24,13 +24,13 @@ import argparse
 import json
 import warnings
 
-from repro import api
-from repro.api import analyze as _analyze
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCHS
 
 
 def build_parser() -> argparse.ArgumentParser:
+    from repro import api
+
     ap = argparse.ArgumentParser()
     api.add_arch_argument(ap, required=False)
     ap.add_argument("--shape", choices=list(SHAPES))
@@ -67,6 +67,9 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
+    from repro import api
+    from repro.api import analyze as _analyze
+
     api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
 
@@ -115,6 +118,7 @@ def __getattr__(name):
         warnings.warn(f"repro.launch.dryrun.{name} moved to "
                       f"repro.api.analyze.{name}", DeprecationWarning,
                       stacklevel=2)
+        from repro.api import analyze as _analyze
         return getattr(_analyze, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 

@@ -27,10 +27,10 @@ import argparse
 import json
 import warnings
 
-from repro import api
-
 
 def build_parser() -> argparse.ArgumentParser:
+    from repro import api
+
     ap = argparse.ArgumentParser(
         epilog="Full flag matrix, quickstart and architecture map: README.md")
     api.add_arch_argument(ap)
@@ -64,6 +64,8 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv=None):
+    from repro import api
+
     api.warn_programmatic_use(__name__, argv)
     ap = build_parser()
     args = ap.parse_args(argv)
@@ -94,6 +96,7 @@ def __getattr__(name):
         warnings.warn("repro.launch.train.build_data moved to "
                       "repro.api.data_source", DeprecationWarning,
                       stacklevel=2)
+        from repro import api
         return api.data_source
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 

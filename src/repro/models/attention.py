@@ -167,7 +167,8 @@ def attn_forward(params: dict, x: Array, cfg: ModelConfig,
     o = o.reshape(B, S, h * hd)
     # wo's output dim is d_model — replicated under TP (out_axis=None keeps
     # the VMEM cap at the full width)
-    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend)
+    ccfg = LinearCompressionCfg(rank=cfg.asi_rank, backend=cfg.kernel_backend,
+                                out_axis=None)
     if asi_state is not None and "wo" in asi_state:
         if cfg.compress == "hosvd":
             y = hosvd_linear(ccfg, o, params["wo"], params.get("bo"))

@@ -91,7 +91,8 @@ def moe_apply(params: dict, x: Array, cfg: ModelConfig,
         # ffn width — each device holds full-width blocks of its experts, so
         # the VMEM cap must see the global width (out_axis=None)
         ccfg = LinearCompressionCfg(rank=cfg.asi_rank,
-                                    backend=cfg.kernel_backend)
+                                    backend=cfg.kernel_backend,
+                                    out_axis=None)
         if asi_state is not None and name in asi_state:
             flat = jnp.swapaxes(inp, 0, 1).reshape(e, b * cap, -1)
             y, ns = grouped_asi_linear(ccfg, flat, w, asi_state[name])

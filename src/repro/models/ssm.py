@@ -140,8 +140,10 @@ def mamba_forward(params: dict, u: Array, cfg: ModelConfig,
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
     y = rms_norm(y, params["norm"], cfg.norm_eps)
     if asi_state is not None and "out_proj" in asi_state:
+        # out_proj's output dim is d_model — replicated under TP
         out_ccfg = LinearCompressionCfg(rank=cfg.asi_rank,
-                                        backend=cfg.kernel_backend)
+                                        backend=cfg.kernel_backend,
+                                        out_axis=None)
         out, ns = asi_linear(out_ccfg, y, params["out_proj"], None,
                              asi_state["out_proj"])
         new_asi["out_proj"] = ns

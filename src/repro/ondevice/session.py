@@ -211,8 +211,11 @@ class DeviceSession:
             self.params, self.opt_state, self.asi_state, metrics = \
                 self._train_step(self.params, self.opt_state, self.asi_state,
                                  batch, jnp.int32(self._step_count))
-            losses.append(float(metrics["loss"]))
+            losses.append(metrics["loss"])   # device array; convert after loop
             self._step_count += 1
+        # one sync for the whole burst (also makes adapt_wall_s honest:
+        # device_get blocks until every queued step has finished)
+        losses = [float(v) for v in jax.device_get(losses)]
         self.engine.params = self.params          # weights go live for decode
         self.report.adapt_wall_s += time.perf_counter() - t0
         self.report.adapt_losses.extend(losses)

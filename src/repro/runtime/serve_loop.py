@@ -317,10 +317,12 @@ class SequentialEngine:
                     row = logits[slot]
                     if self.cfg.temperature > 0:
                         self.key, sub = jax.random.split(self.key)
-                        tok = int(jax.random.categorical(
+                        # per-token sync is the point of this A/B baseline:
+                        # it measures what Engine's batched device_get avoids
+                        tok = int(jax.random.categorical(  # repro-lint: disable=jit-purity
                             sub, row / self.cfg.temperature))
                     else:
-                        tok = int(jnp.argmax(row))
+                        tok = int(jnp.argmax(row))  # repro-lint: disable=jit-purity
                     req.out.append(tok)
                     gen += 1
                     if req.ttft_s is None:

@@ -232,7 +232,9 @@ def _run_lm(cfg: ScenarioCfg) -> ScenarioReport:
                                    "phase": state["phase"],
                                    "loss": round(float(loss), 6)})
         for p in sorted(probes):
-            report.probe_curves[str(p)].append(round(float(
+            # probe reads happen once per burst, not per step — the sync is
+            # the measurement
+            report.probe_curves[str(p)].append(round(float(  # repro-lint: disable=jit-purity
                 eval_loss(ds.params, probes[p], ds.asi_state)), 6))
         report.burst_phase.append(state["phase"])
 
@@ -343,7 +345,9 @@ def _run_vision(cfg: ScenarioCfg) -> ScenarioReport:
                                    "phase": phase,
                                    "loss": round(float(loss), 6)})
             for p in sorted(probes):
-                report.probe_curves[str(p)].append(round(float(
+                # the per-burst probe reading IS the measurement — syncing
+                # here is deliberate, and bursts are sparse
+                report.probe_curves[str(p)].append(round(float(  # repro-lint: disable=jit-purity
                     eval_loss(params, probes[p])), 6))
             report.burst_phase.append(phase)
             step += 1

@@ -1,0 +1,486 @@
+"""repro-lint: each rule fires on a violating fixture, stays quiet on its
+clean twin, and honors suppressions; the real tree is clean at HEAD; the
+partition-coverage sweep runs every config x layout without device arrays."""
+import json
+import shutil
+import textwrap
+
+import pytest
+
+from repro.analysis import core
+from repro.analysis import partition_coverage
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+from repro.analysis.core import FileContext
+
+REPO_ROOT = core.find_repo_root()
+
+
+def _ctx(tmp_path, rel, src) -> FileContext:
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return FileContext.parse(str(path), str(tmp_path))
+
+
+def _run(rule_name: str, ctx: FileContext):
+    """Run one file-scope rule over one fixture, stamping suppressions the
+    way the driver does."""
+    scope, fn, _doc = core.RULES[rule_name]
+    assert scope == "file"
+    out = []
+    for f in fn(ctx):
+        f.suppressed = ctx.is_suppressed(f.rule, f.line)
+        out.append(f)
+    return out
+
+
+def _unsuppressed(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# residual-contract
+# ---------------------------------------------------------------------------
+
+_VJP_DENSE = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.custom_vjp
+    def f(x, w):
+        return x @ w
+
+    def f_fwd(x, w):
+        y = x @ w
+        res = (x, w){suffix}
+        return y, res
+
+    def f_bwd(res, g):
+        x, w = res
+        return (g @ w.T, x.T @ g)
+
+    f.defvjp(f_fwd, f_bwd)
+"""
+
+_VJP_CLEAN = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.custom_vjp
+    def f(x, w):
+        return x @ w
+
+    def f_fwd(x, w):
+        y = x @ w
+        p = jnp.dot(x.T, y)      # contraction: rank-r, not a dense save
+        res = (p, w)
+        return y, res
+
+    def f_bwd(res, g):
+        p, w = res
+        return (g @ w.T, p)
+
+    f.defvjp(f_fwd, f_bwd)
+"""
+
+
+def test_residual_contract_flags_dense_activation_save(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/fx.py",
+               _VJP_DENSE.format(suffix=""))
+    found = _run("residual-contract", ctx)
+    assert any("x" in f.message for f in _unsuppressed(found)), found
+
+
+def test_residual_contract_quiet_on_contracted_save(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/fx.py", _VJP_CLEAN)
+    assert _unsuppressed(_run("residual-contract", ctx)) == []
+
+
+def test_residual_contract_suppression(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/fx.py",
+               _VJP_DENSE.format(
+                   suffix="  # repro-lint: disable=residual-contract"))
+    found = _run("residual-contract", ctx)
+    assert found and all(f.suppressed for f in found)
+
+
+def test_residual_contract_arity_mismatch(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/fx.py", """\
+        import jax
+
+        @jax.custom_vjp
+        def f(x, w):
+            return x @ w
+
+        def f_fwd(x, w):
+            p = jax.numpy.dot(x.T, x)
+            return x @ w, (p, w)
+
+        def f_bwd(res, g):
+            p, w = res
+            return (g @ w.T,)        # one cotangent for two diff args
+
+        f.defvjp(f_fwd, f_bwd)
+        """)
+    found = _unsuppressed(_run("residual-contract", ctx))
+    assert any("cotangent" in f.message or "returns" in f.message
+               for f in found), found
+
+
+def test_residual_contract_out_of_scope(tmp_path):
+    # same dense save outside core/, models/, kernels/: not this rule's beat
+    ctx = _ctx(tmp_path, "src/repro/runtime/fx.py",
+               _VJP_DENSE.format(suffix=""))
+    assert _run("residual-contract", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity: traced bodies
+# ---------------------------------------------------------------------------
+
+def test_jit_purity_flags_host_effects_in_traced_code(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/p.py", """\
+        import time
+        import jax
+
+        @jax.jit
+        def step(x):
+            t = time.time()
+            print(x)
+            return x * t
+        """)
+    msgs = [f.message for f in _unsuppressed(_run("jit-purity", ctx))]
+    assert any("time." in m for m in msgs), msgs
+    assert any("print" in m for m in msgs), msgs
+
+
+def test_jit_purity_reaches_helpers_through_call_graph(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/p.py", """\
+        import time
+        import jax
+
+        def helper(x):
+            return x * time.time()
+
+        @jax.jit
+        def step(x):
+            return helper(x)
+        """)
+    found = _unsuppressed(_run("jit-purity", ctx))
+    assert any("helper" in f.message for f in found), found
+
+
+def test_jit_purity_quiet_on_pure_traced_code(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/p.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            y = jnp.tanh(x)
+            if y.ndim > 1:            # shape branch: resolved at trace time
+                y = y.sum(axis=-1)
+            return y
+        """)
+    assert _unsuppressed(_run("jit-purity", ctx)) == []
+
+
+def test_jit_purity_suppression(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/core/p.py", """\
+        import jax
+
+        @jax.jit
+        def step(x):
+            print(x)  # repro-lint: disable=jit-purity
+            return x
+        """)
+    found = _run("jit-purity", ctx)
+    assert found and all(f.suppressed for f in found)
+
+
+# ---------------------------------------------------------------------------
+# jit-purity: loop syncs
+# ---------------------------------------------------------------------------
+
+_LOOP = """\
+    import jax
+    import jax.numpy as jnp
+
+    def run(n):
+        out = []
+        for i in range(n):
+            v = jnp.sum(jnp.ones((3,)) * i)
+            {line}
+        return out
+"""
+
+
+def test_loop_sync_flags_per_iteration_float(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/runtime/loop.py",
+               _LOOP.format(line="out.append(float(v))"))
+    found = _unsuppressed(_run("jit-purity", ctx))
+    assert any("loop body" in f.message for f in found), found
+
+
+def test_loop_sync_exempts_log_guard(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/runtime/loop.py", _LOOP.format(
+        line="out.append(float(v))\n"
+             "        if i % 10 == 0:\n"
+             "            out.append(float(v))"))
+    # only the unguarded conversion (first line) fires, not the guarded one
+    found = _unsuppressed(_run("jit-purity", ctx))
+    assert len(found) == 1, found
+
+
+def test_loop_sync_exempts_device_get_batches(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/runtime/loop.py", _LOOP.format(
+        line="h = jax.device_get(v)\n        out.append(float(h))"))
+    assert _unsuppressed(_run("jit-purity", ctx)) == []
+
+
+def test_loop_sync_out_of_scope(tmp_path):
+    # the same pattern in models/ is trace-time code, not a serving loop
+    ctx = _ctx(tmp_path, "src/repro/models/loop.py",
+               _LOOP.format(line="out.append(float(v))"))
+    assert _unsuppressed(_run("jit-purity", ctx)) == []
+
+
+# ---------------------------------------------------------------------------
+# partition-coverage: AST half (out_axis declarations)
+# ---------------------------------------------------------------------------
+
+def _out_axis_findings(ctx):
+    out = []
+    for f in partition_coverage._check_out_axes([ctx]):
+        f.suppressed = ctx.is_suppressed(f.rule, f.line)
+        out.append(f)
+    return out
+
+
+def test_out_axis_missing_is_flagged(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/models/m.py", """\
+        from repro.core.compressed_linear import LinearCompressionCfg
+        cfg = LinearCompressionCfg(rank=4)
+        """)
+    found = _unsuppressed(_out_axis_findings(ctx))
+    assert any("explicit out_axis" in f.message for f in found), found
+
+
+def test_out_axis_unknown_name_is_flagged(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/models/m.py", """\
+        from repro.core.compressed_linear import LinearCompressionCfg
+        cfg = LinearCompressionCfg(rank=4, out_axis="bogus")
+        """)
+    found = _unsuppressed(_out_axis_findings(ctx))
+    assert any("vocabulary" in f.message for f in found), found
+
+
+def test_out_axis_clean_and_conditional(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/models/m.py", """\
+        from repro.core.compressed_linear import LinearCompressionCfg
+        a = LinearCompressionCfg(rank=4, out_axis="mlp")
+        b = LinearCompressionCfg(rank=4, out_axis=None)
+        c = LinearCompressionCfg(
+            rank=4, out_axis="mlp" if True else None)  # test strings ignored
+        """)
+    assert _unsuppressed(_out_axis_findings(ctx)) == []
+
+
+def test_out_axis_suppression(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/models/m.py", """\
+        from repro.core.compressed_linear import LinearCompressionCfg
+        cfg = LinearCompressionCfg(rank=4)  # repro-lint: disable=partition-coverage
+        """)
+    found = _out_axis_findings(ctx)
+    assert found and all(f.suppressed for f in found)
+
+
+# ---------------------------------------------------------------------------
+# partition-coverage: import half (config x layout sweep, device-free)
+# ---------------------------------------------------------------------------
+
+def test_partition_matchers_extracted():
+    import os
+    matchers = partition_coverage._rule_matchers(
+        os.path.join(REPO_ROOT, *partition_coverage.PARTITION.split("/")))
+    names = set().union(*(names for _line, names in matchers))
+    assert {"embed", "wq", "down"} <= names
+
+
+def test_partition_coverage_sweep_all_configs_all_layouts():
+    """Every registry config x {dp, fsdp, tp} resolves every >=2-d param to
+    a rule (or the blessed replicated set) — via eval_shape on an
+    AbstractMesh, so no device arrays are ever materialized."""
+    findings = list(partition_coverage._check_coverage(REPO_ROOT))
+    assert findings == [], [f.message for f in findings]
+
+
+def test_partition_coverage_catches_unknown_leaf(tmp_path, monkeypatch):
+    # shrink the blessed set: the bias leaves must resurface as findings
+    monkeypatch.setattr(partition_coverage, "REPLICATED_OK", frozenset())
+    findings = list(partition_coverage._check_coverage(REPO_ROOT))
+    assert any("matches no _param_rule branch" in f.message
+               for f in findings), "detector is blind to uncovered leaves"
+
+
+# ---------------------------------------------------------------------------
+# pallas-contract
+# ---------------------------------------------------------------------------
+
+_PALLAS = """\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def call(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(4, 4),
+            in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((8, 8), lambda {lam_args}: ({lam_body})),
+            out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        )(x)
+"""
+
+
+def test_pallas_contract_flags_index_map_arity(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS.format(lam_args="i", lam_body="i, 0"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("index_map takes 1 args" in f.message for f in found), found
+
+
+def test_pallas_contract_flags_operand_count(tmp_path):
+    src = _PALLAS.format(lam_args="i, j", lam_body="i, j").replace(
+        "in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))]",
+        "in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+        "                      pl.BlockSpec((8, 8), lambda i, j: (i, j))]")
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py", src)
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("2 in_specs" in f.message and "1 operands" in f.message
+               for f in found), found
+
+
+def test_pallas_contract_clean(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS.format(lam_args="i, j", lam_body="i, j"))
+    assert _unsuppressed(_run("pallas-contract", ctx)) == []
+
+
+def test_pallas_contract_dslice_stride(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py", """\
+        from jax.experimental import pallas as pl
+
+        def kernel(o_ref, *, bn):
+            col = pl.dslice(3 * (bn + 1), bn)   # step != width
+            o_ref[:, col] = 0.0
+        """)
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("dslice" in f.message for f in found), found
+
+
+def test_pallas_contract_cap_containment(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/models/z.py", """\
+        from repro.kernels.dispatch import GRAD_SKETCH_MAX_N
+
+        def fits(n):
+            return n <= GRAD_SKETCH_MAX_N
+        """)
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("GRAD_SKETCH_MAX_N" in f.message for f in found), found
+
+
+# ---------------------------------------------------------------------------
+# shim-contract
+# ---------------------------------------------------------------------------
+
+_SHIM = """\
+    import warnings
+    {imp}
+
+    def __getattr__(name):
+        warnings.warn("moved", DeprecationWarning, stacklevel=2)
+        {body}
+"""
+
+
+def test_shim_contract_flags_top_level_import(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/launch/s.py", _SHIM.format(
+        imp="from repro import api", body="return getattr(api, name)"))
+    found = _unsuppressed(_run("shim-contract", ctx))
+    assert any("repro.api" in f.message for f in found), found
+
+
+def test_shim_contract_clean_lazy_import(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/launch/s.py", _SHIM.format(
+        imp="from repro.configs.registry import ARCHS",
+        body="from repro import api\n        return getattr(api, name)"))
+    assert _unsuppressed(_run("shim-contract", ctx)) == []
+
+
+def test_shim_contract_ignores_non_shims(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/launch/s.py",
+               "from repro import api\n\n\ndef main():\n    return api\n")
+    assert _run("shim-contract", ctx) == []
+
+
+# ---------------------------------------------------------------------------
+# whole-tree invariants and output formats
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def head_findings():
+    return core.run_lint(root=REPO_ROOT)
+
+
+def test_tree_is_clean_at_head(head_findings):
+    bad = [f for f in head_findings if not f.suppressed]
+    assert bad == [], "\n" + core.render_text(bad)
+
+
+def test_suppressed_findings_keep_audit_trail(head_findings):
+    # the blessed per-token baseline syncs stay visible in the report
+    assert any(f.suppressed and f.rule == "jit-purity"
+               for f in head_findings)
+
+
+def test_json_schema(head_findings):
+    doc = json.loads(core.render_json(head_findings, REPO_ROOT))
+    assert doc["version"] == 1
+    assert set(doc) == {"version", "root", "rules", "findings", "counts",
+                        "total"}
+    assert set(doc["rules"]) == {"residual-contract", "jit-purity",
+                                 "partition-coverage", "pallas-contract",
+                                 "shim-contract"}
+    for f in doc["findings"]:
+        assert set(f) == {"rule", "path", "line", "message", "col",
+                          "suppressed"}
+        assert isinstance(f["line"], int) and f["line"] >= 0
+    assert doc["total"] == sum(doc["counts"].values())
+    assert doc["total"] == sum(1 for f in doc["findings"]
+                               if not f["suppressed"])
+
+
+def test_cli_select_and_exit_code(capsys):
+    from repro.analysis.__main__ import main
+    rc = main(["--format", "json", "--select", "shim-contract",
+               "--root", REPO_ROOT])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 0 and doc["total"] == 0
+
+
+def test_cli_unknown_rule_errors():
+    from repro.analysis.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--select", "no-such-rule", "--root", REPO_ROOT])
+
+
+def test_parse_error_is_reported(tmp_path):
+    bad = tmp_path / "src" / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "broken.py").write_text("def f(:\n")
+    findings = core.run_lint(root=str(tmp_path), select=["jit-purity"])
+    assert any(f.rule == "parse-error" for f in findings)
