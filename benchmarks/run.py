@@ -64,6 +64,29 @@ def _benches():
                                               for r in o["rows"]), 3),
                      "parity_all": all(r["parity_batch1"]
                                        for r in o["rows"])}, None)),
+        ("serve_trace", serve_throughput.run_trace,
+         lambda o: f"kv_reduction={o['kv_reduction_x']:.2f}x;"
+                   f"tok_s_ratio={o['tok_s_ratio']:.2f};"
+                   f"parity={o['parity']}",
+         lambda o: ({"arch": o["arch"], "n_requests": o["n_requests"],
+                     "seed": o["seed"], "max_batch": o["max_batch"],
+                     "max_len": o["max_len"],
+                     "page_block": o["page_block"],
+                     "pool_blocks": o["pool_blocks"]},
+                    {"parity": o["parity"],
+                     "kv_reduction_x": round(float(o["kv_reduction_x"]), 3),
+                     "tok_s_ratio": round(float(o["tok_s_ratio"]), 3),
+                     "paged_peak_used_blocks":
+                         o["paged"]["peak_used_blocks"],
+                     "paged_preemptions": o["paged"]["preemptions"],
+                     "dense_peak_cache_bytes":
+                         o["dense"]["peak_cache_bytes"],
+                     "paged_peak_cache_bytes":
+                         o["paged"]["peak_cache_bytes"]},
+                    {"ttft_p50_s": [round(o["dense"]["ttft_p50_s"], 5),
+                                    round(o["paged"]["ttft_p50_s"], 5)],
+                     "ttft_p99_s": [round(o["dense"]["ttft_p99_s"], 5),
+                                    round(o["paged"]["ttft_p99_s"], 5)]})),
         ("shard_scaling", shard_scaling.run,
          lambda o: f"min_arg_mem_ratio_1to8="
                    f"{o['min_arg_mem_ratio_1to8']:.1f}x",

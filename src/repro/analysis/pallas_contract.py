@@ -75,6 +75,21 @@ def _blockspec_parts(node: ast.expr):
 def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
                        env: dict):
     kw = {k.arg: k.value for k in call.keywords}
+    # PrefetchScalarGridSpec bundles the geometry and prepends
+    # num_scalar_prefetch operands whose values feed every index_map: the
+    # leading scalar operands have no BlockSpec, and index_maps take
+    # len(grid) + num_scalar_prefetch arguments.
+    nsp = 0
+    gs = _resolve(kw.get("grid_spec"), env)
+    if isinstance(gs, ast.Call) and \
+            (call_name(gs) or "").endswith("PrefetchScalarGridSpec"):
+        gkw = {k.arg: k.value for k in gs.keywords}
+        kw = {**kw, **{k: gkw[k] for k in ("grid", "in_specs", "out_specs")
+                       if k in gkw}}
+        nsp_node = _resolve(gkw.get("num_scalar_prefetch"), env)
+        if isinstance(nsp_node, ast.Constant) and \
+                isinstance(nsp_node.value, int):
+            nsp = nsp_node.value
     grid = _resolve(kw.get("grid"), env)
     n_grid = len(grid.elts) if isinstance(grid, (ast.Tuple, ast.List)) else None
 
@@ -84,10 +99,11 @@ def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
 
     if in_specs is not None and operands and \
             not any(isinstance(a, ast.Starred) for a in operands) and \
-            len(in_specs) != len(operands):
+            len(in_specs) + nsp != len(operands):
         yield Finding("pallas-contract", ctx.rel, call.lineno,
-                      f"pallas_call declares {len(in_specs)} in_specs but "
-                      f"is applied to {len(operands)} operands")
+                      f"pallas_call declares {len(in_specs)} in_specs"
+                      + (f" (+ {nsp} scalar-prefetch operands)" if nsp else "")
+                      + f" but is applied to {len(operands)} operands")
     if out_specs is not None and out_shape is not None and \
             len(out_specs) != len(out_shape):
         yield Finding("pallas-contract", ctx.rel, call.lineno,
@@ -99,11 +115,12 @@ def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
         if shape_elts is None:
             return
         if n_grid is not None and lam is not None and \
-                len(lam.args.args) != n_grid:
+                len(lam.args.args) != n_grid + nsp:
             yield Finding(
                 "pallas-contract", ctx.rel, lam.lineno,
                 f"{what}: index_map takes {len(lam.args.args)} args but the "
-                f"grid has {n_grid} dims")
+                f"grid has {n_grid} dims"
+                + (f" plus {nsp} scalar-prefetch refs" if nsp else ""))
         if lam is not None and isinstance(lam.body, (ast.Tuple, ast.List)) \
                 and len(lam.body.elts) != len(shape_elts):
             yield Finding(

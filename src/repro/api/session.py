@@ -396,16 +396,24 @@ class Server:
 
     def __init__(self, session: Session, *, engine: str = "continuous",
                  max_batch: int = 4, max_len: int = 128,
-                 temperature: float = 0.0, eos_id: int = -1):
+                 temperature: float = 0.0, eos_id: int = -1,
+                 cache: str = "dense", prefill_chunk: int = 0,
+                 page_block: int = 16, pool_blocks: int = 0):
         if engine not in ("continuous", "sequential"):
             raise ValueError(f"engine {engine!r} must be continuous or "
                              "sequential")
+        if cache != "dense" and engine == "sequential":
+            raise ValueError("the sequential engine has no paged cache; "
+                             "use engine='continuous' with cache='paged'")
         self.session = session
         self.engine_name = engine
         cls = Engine if engine == "continuous" else SequentialEngine
         self.engine = cls(session.model, session.params,
                           ServeCfg(max_batch=max_batch, max_len=max_len,
-                                   temperature=temperature, eos_id=eos_id),
+                                   temperature=temperature, eos_id=eos_id,
+                                   cache=cache, prefill_chunk=prefill_chunk,
+                                   page_block=page_block,
+                                   pool_blocks=pool_blocks),
                           seed=session.seed)
         session._servers.add(self)      # trainers must not donate our params
 
@@ -436,11 +444,16 @@ class Server:
 
     def stats_dict(self) -> dict:
         s = self.engine.last_stats
-        return {"engine": self.engine_name, "requests": s.requests,
-                "generated_tokens": s.generated_tokens,
-                "decode_steps": s.decode_steps,
-                "tokens_per_s": round(s.tokens_per_s, 1),
-                "ttft_mean_s": round(s.ttft_mean_s, 4)}
+        d = {"engine": self.engine_name, "requests": s.requests,
+             "generated_tokens": s.generated_tokens,
+             "decode_steps": s.decode_steps,
+             "tokens_per_s": round(s.tokens_per_s, 1),
+             "ttft_mean_s": round(s.ttft_mean_s, 4)}
+        if getattr(self.engine.cfg, "cache", "dense") == "paged":
+            d.update(cache="paged", preemptions=s.preemptions,
+                     peak_used_blocks=s.peak_used_blocks,
+                     peak_cache_bytes=s.peak_cache_bytes)
+        return d
 
 
 class Adapter:

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 Array = jax.Array
@@ -41,6 +42,12 @@ def flash_attention(q: Array, k: Array, v: Array, **kw):
     while skv % min(bk, skv):
         bk -= 1
     return _flash_attention(q, k, v, bq=min(bq, sq), bk=min(bk, skv), **kw)
+
+
+def paged_attention(q: Array, k_pool: Array, v_pool: Array, table: Array,
+                    pos: Array, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _paged_attention(q, k_pool, v_pool, table, pos, **kw)
 
 
 def ssd_scan(x: Array, dt: Array, a: Array, b: Array, c: Array, *,

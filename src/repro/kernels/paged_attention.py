@@ -1,0 +1,133 @@
+"""Paged-attention decode Pallas TPU kernel.
+
+Single-token decode over a block-paged KV cache: physical K/V blocks live in
+one shared pool ``(n_blocks, block_size, KV, hd)`` and each batch slot maps
+its logical blocks through a ``(B, L)`` block table.  The table and per-slot
+positions ride in as *scalar-prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps gather
+physical blocks by table lookup — the kernel never materializes a dense
+``(B, max_len)`` cache.
+
+Grid is (batch, logical-block); the logical-block dimension is sequential
+with the running max/denominator/accumulator in VMEM scratch (same online
+softmax as ``flash_attention``).  Blocks wholly past a slot's frontier
+(table rows point at the trash block, see ``runtime/paged_kv.py``) are
+skipped block-granularly; the last partial block is masked per-position.
+
+``paged_attention_ref`` is the pure-jnp oracle: gather-by-table + the exact
+masked softmax ``models/attention.py:attn_decode`` uses, so off-TPU serving
+is bit-identical to the dense engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, nl: int, n_kv: int,
+            scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos_b = pos_ref[b]
+
+    # block-level skip: logical blocks wholly past the slot's write frontier
+    # hold no valid positions (their table entries point at trash) — issue no
+    # MXU work for them
+    @pl.when(j * bs <= pos_b)
+    def _compute():
+        q = q_ref[0]                                   # (KV, G, hd)
+        k_blk = k_ref[0]                               # (bs, KV, hd)
+        v_blk = v_ref[0]
+        for kh in range(n_kv):
+            s = jax.lax.dot_general(
+                q[kh], k_blk[:, kh], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale      # (G, bs)
+            kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= pos_b, s, NEG_INF)   # partial-block mask
+            m_prev = m_ref[kh]
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[kh] = l_ref[kh] * corr + p.sum(-1)
+            pv = jax.lax.dot_general(
+                p.astype(v_blk.dtype), v_blk[:, kh], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)              # (G, hd)
+            acc_ref[kh] = acc_ref[kh] * corr[:, None] + pv
+            m_ref[kh] = m_new
+
+    @pl.when(j == nl - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: Array, k_pool: Array, v_pool: Array, table: Array,
+                    pos: Array, *, interpret: bool = False) -> Array:
+    """q (B, KV, G, hd); k/v pools (n_blocks, bs, KV, hd); table (B, L)
+    int32 physical-block ids; pos (B,) int32 — the highest valid cache
+    position per slot (the token just written).  Returns (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    L = table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # table + pos feed the index maps
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, tbl, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, j, tbl, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, nl=L, n_kv=KV, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)
+
+
+def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array, table: Array,
+                        pos: Array) -> Array:
+    """Pure-jnp oracle: gather blocks by table, then the dense decode
+    softmax.  With ``L * bs == max_len`` this is shape-for-shape the same
+    reduction ``attn_decode`` runs on a dense cache, hence bit-identical."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    L = table.shape[1]
+    k = k_pool[table].reshape(B, L * bs, KV, hd)
+    v = v_pool[table].reshape(B, L * bs, KV, hd)
+    valid = jnp.arange(L * bs)[None, :] <= pos[:, None]
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)

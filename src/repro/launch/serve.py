@@ -31,6 +31,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense",
+                    help="KV cache layout: dense per-slot rows, or paged "
+                         "block tables over a shared pool (continuous "
+                         "engine only)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size; 0 = whole-prompt for dense "
+                         "(paged prefill is always chunked, at --page-block)")
+    ap.add_argument("--page-block", type=int, default=16,
+                    help="positions per physical KV block (--cache paged)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="physical blocks in the shared pool; 0 sizes it to "
+                         "dense-equivalent capacity (--cache paged)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -44,7 +56,10 @@ def main(argv=None):
         raise SystemExit("encdec serving needs audio frames; use "
                          "examples/serve_decode.py for the full pipeline")
     server = sess.server(engine=args.engine, max_batch=args.max_batch,
-                         max_len=args.max_len, temperature=args.temperature)
+                         max_len=args.max_len, temperature=args.temperature,
+                         cache=args.cache, prefill_chunk=args.prefill_chunk,
+                         page_block=args.page_block,
+                         pool_blocks=args.pool_blocks)
     done = server.run(api.demo_requests(args.requests, args.max_new))
     for r in done:
         print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out,

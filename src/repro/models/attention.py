@@ -254,6 +254,93 @@ def attn_decode(params: dict, x: Array, cache: dict, pos: Array,
     return y, new_cache
 
 
+def attn_decode_paged(params: dict, x: Array, pool: dict, table: Array,
+                      pos: Array, cfg: ModelConfig):
+    """One-token decode against a block-paged KV pool.
+
+    x (B, 1, d); pool {'k','v'[,scales]} of shape (n_blocks, bs, KV, hd);
+    table (B, L) int32 physical-block ids (trash block 0 for unallocated
+    entries — see ``runtime/paged_kv.py``); pos (B,) per-slot positions with
+    ``L * bs == max_len``.  The gathered view then has exactly the dense
+    cache's (B, max_len, KV, hd) shape, so the reference read path below is
+    bit-identical to ``attn_decode`` on a dense cache (the parity contract in
+    DESIGN.md §12).  Compiled/interpreted Pallas modes route the read through
+    ``kernels/paged_attention`` instead (fp16/32 pools only — int8 pools
+    dequantize on the gather path).  Returns (y, new_pool).
+    """
+    from repro.kernels import dispatch
+    from repro.kernels.paged_attention import paged_attention
+
+    B, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    rows = jnp.arange(B)
+    q, k1, v1 = _project(params, x, cfg, None, {})
+    q = _split_heads(q, h, hd)
+    k1 = _split_heads(k1, kv, hd)
+    v1 = _split_heads(v1, kv, hd)
+    if not cfg.learned_pos:
+        cos, sin = rope_tables(posb[:, None], hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k1 = apply_rope(k1, cos, sin)
+    bs = pool["k"].shape[1]
+    L = table.shape[1]
+    phys = table[rows, posb // bs]          # physical block per slot
+    off = posb % bs                         # position within the block
+    if "k_scale" in pool:                   # int8 pool path
+        k1q, k1s = _quantize_kv(k1)
+        v1q, v1s = _quantize_kv(v1)
+        new_pool = {"k": pool["k"].at[phys, off].set(k1q[:, 0]),
+                    "v": pool["v"].at[phys, off].set(v1q[:, 0]),
+                    "k_scale": pool["k_scale"].at[phys, off].set(k1s[:, 0]),
+                    "v_scale": pool["v_scale"].at[phys, off].set(v1s[:, 0])}
+        k = (new_pool["k"][table].astype(jnp.float32)
+             * new_pool["k_scale"][table]).astype(x.dtype)
+        v = (new_pool["v"][table].astype(jnp.float32)
+             * new_pool["v_scale"][table]).astype(x.dtype)
+        use_kernel = False
+    else:
+        new_pool = {"k": pool["k"].at[phys, off].set(k1[:, 0]),
+                    "v": pool["v"].at[phys, off].set(v1[:, 0])}
+        mode = dispatch.resolve(cfg.kernel_backend)
+        use_kernel = mode != "reference"
+    if use_kernel:
+        q4 = q[:, 0].reshape(B, kv, g, hd)
+        o = paged_attention(q4, new_pool["k"], new_pool["v"], table, posb,
+                            interpret=(mode == "interpret"))
+        o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    else:
+        if "k_scale" not in pool:
+            k, v = new_pool["k"][table], new_pool["v"][table]
+        k = k.reshape(B, L * bs, kv, hd)
+        v = v.reshape(B, L * bs, kv, hd)
+        valid = jnp.arange(L * bs)[None, :] <= posb[:, None]
+        q = q.reshape(B, 1, kv, g, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, 1, h * hd).astype(x.dtype)
+    y = dense_linear(o, params["wo"], params.get("bo"))
+    return y, new_pool
+
+
+def init_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        dtype) -> dict:
+    """Shared physical block pool for one attention layer.  Block 0 is the
+    trash block every unallocated table entry points at."""
+    shape = (n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:3] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     n = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     shape = (batch, n, cfg.n_kv_heads, cfg.hd)

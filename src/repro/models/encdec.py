@@ -15,8 +15,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.asi import MatrixASIState
-from repro.models.attention import (attn_decode, attn_forward, attn_init,
-                                    cross_kv, init_kv_cache, quantize_cache)
+from repro.models.attention import (attn_decode, attn_decode_paged,
+                                    attn_forward, attn_init, cross_kv,
+                                    init_kv_cache, init_paged_kv_cache,
+                                    quantize_cache)
 from repro.models.layers import (embed_init, initializer, mlp_apply, mlp_init,
                                  norm_apply, norm_init, sinusoidal_positions,
                                  unembed_init)
@@ -218,6 +220,58 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return {"self": self_cache, "cross": cross}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int) -> dict:
+    """Paged layout: decoder self-attention K/V page through a shared block
+    pool; cross K/V stay per-slot (fixed ``enc_len`` rows primed once per
+    request — nothing grows, nothing to page)."""
+    dtype = jnp.dtype(cfg.dtype)
+    self_pool = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype),
+        init_paged_kv_cache(cfg, n_blocks, block_size, dtype))
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads,
+                        cfg.hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads,
+                        cfg.hd), dtype),
+    }
+    return {"self": self_pool, "cross": cross}
+
+
+def write_paged_slot(cfg: ModelConfig, cache: dict, one: dict,
+                     table_row: Array, slot) -> dict:
+    """Install a batch-1 prefill cache: self-attention rows scatter into the
+    physical blocks of ``table_row``; cross K/V write per-slot."""
+    L = table_row.shape[0]
+
+    def put(pool, leaf):
+        nl, _, s = leaf.shape[:3]
+        r = leaf.reshape((nl, L, s // L) + leaf.shape[3:])
+        return pool.at[:, table_row].set(r.astype(pool.dtype))
+
+    return {
+        "self": jax.tree.map(put, cache["self"], one["self"]),
+        "cross": jax.tree.map(
+            lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+                c, o.astype(c.dtype), slot, axis=1),
+            cache["cross"], one["cross"]),
+    }
+
+
+def prime_cross(params: dict, frames: Array, cfg: ModelConfig) -> dict:
+    """Encode frames and project per-decoder-layer cross K/V, without
+    touching the self cache — the chunked-prefill path installs this into a
+    transient batch-1 cache, then feeds the prompt through ``decode_step``."""
+    enc_out = encode(params, frames, cfg)
+
+    def layer(_, bp):
+        k, v = cross_kv(bp["cross"], enc_out, cfg)
+        return None, {"k": k, "v": v}
+
+    _, cross = jax.lax.scan(layer, None, params["decoder"])
+    return cross          # {"k","v"} each (n_layers, B, enc_len, KV, hd)
+
+
 def prefill(params: dict, frames: Array, tokens: Array, cfg: ModelConfig,
             max_len: int):
     """Encode the audio stub + teacher-force the prompt, returning
@@ -270,6 +324,36 @@ def decode_step(params: dict, cache: dict, token: Array, pos: Array,
         bp, bc = xs
         h = norm_apply(bp["norm1"], x, cfg)
         y, new_self = attn_decode(bp["self"], h, bc["self"], pos, cfg)
+        x = x + y
+        h = norm_apply(bp["norm2"], x, cfg)
+        y, _ = attn_decode(bp["cross"], h, bc["cross"], pos, cfg, cross=True)
+        x = x + y
+        h = norm_apply(bp["norm3"], x, cfg)
+        y, _ = mlp_apply(bp["mlp"], h, cfg)
+        return x + y, {"self": new_self, "cross": bc["cross"]}
+
+    x, new_cache = jax.lax.scan(block_fn, x, (params["decoder"], cache),
+                                unroll=cfg.n_layers if cfg.scan_unroll else 1)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], new_cache
+
+
+def decode_step_paged(params: dict, cache: dict, table: Array, token: Array,
+                      pos: Array, cfg: ModelConfig):
+    """``decode_step`` against a paged self cache (``init_paged_cache``)."""
+    B = token.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]
+    x = x + _dec_pos_emb(params, posb % params["dec_pos"].shape[0],
+                         x.dtype)[:, None]
+
+    def block_fn(x, xs):
+        bp, bc = xs
+        h = norm_apply(bp["norm1"], x, cfg)
+        y, new_self = attn_decode_paged(bp["self"], h, bc["self"], table,
+                                        pos, cfg)
         x = x + y
         h = norm_apply(bp["norm2"], x, cfg)
         y, _ = attn_decode(bp["cross"], h, bc["cross"], pos, cfg, cross=True)

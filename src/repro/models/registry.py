@@ -29,6 +29,18 @@ class ModelAPI:
                                       # -> (last_logits, cache); ``extra`` is
                                       # prefix embeds (vlm) / audio frames
                                       # (encdec), None otherwise
+    # --- paged serving hooks (None when a family does not support them) ---
+    init_paged_cache: Callable | None = None   # (batch, n_blocks, block_size)
+    decode_step_paged: Callable | None = None  # (params, cache, table, token,
+                                               #  pos) — table (B, L) int32
+    write_paged_slot: Callable | None = None   # (cache, one, table_row, slot)
+    # --- chunked-prefill hooks ---
+    embed_tokens: Callable | None = None       # (params, token) -> (B, d)
+    decode_step_embed: Callable | None = None  # (params, cache, x, pos) with
+                                               # pre-embedded x (B, d) — vlm
+                                               # prefix chunks
+    prime_cross: Callable | None = None        # encdec: (params, frames) ->
+                                               # cross K/V for a fresh cache
 
     def init_struct(self, key: Array | None = None):
         """``eval_shape``-safe init: the parameter pytree as
@@ -53,6 +65,13 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
             init_cache=lambda b, n: encdec.init_cache(cfg, b, n),
             prefill=lambda p, t, n, extra=None: encdec.prefill(p, extra, t, cfg, n),
+            init_paged_cache=lambda b, nb, bs: encdec.init_paged_cache(
+                cfg, b, nb, bs),
+            decode_step_paged=lambda p, c, tb, t, pos: encdec.decode_step_paged(
+                p, c, tb, t, pos, cfg),
+            write_paged_slot=lambda c, o, row, slot: encdec.write_paged_slot(
+                cfg, c, o, row, slot),
+            prime_cross=lambda p, frames: encdec.prime_cross(p, frames, cfg),
         )
     return ModelAPI(
         cfg=cfg,
@@ -64,4 +83,13 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         decode_step=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg),
         init_cache=lambda b, n: transformer.init_cache(cfg, b, n),
         prefill=lambda p, t, n, extra=None: transformer.prefill(p, t, cfg, n, extra),
+        init_paged_cache=lambda b, nb, bs: transformer.init_paged_cache(
+            cfg, b, nb, bs),
+        decode_step_paged=lambda p, c, tb, t, pos: transformer.decode_step_paged(
+            p, c, tb, t, pos, cfg),
+        write_paged_slot=lambda c, o, row, slot: transformer.write_paged_slot(
+            cfg, c, o, row, slot),
+        embed_tokens=lambda p, t: transformer.embed_tokens(p, t, cfg),
+        decode_step_embed=lambda p, c, x, pos: transformer.decode_step_embed(
+            p, c, x, pos, cfg),
     )

@@ -26,8 +26,9 @@ from repro.core.asi import MatrixASIState
 from repro.kernels import dispatch
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.attention import (attn_decode, attn_forward, attn_init,
-                                    init_kv_cache, quantize_cache)
+from repro.models.attention import (attn_decode, attn_decode_paged,
+                                    attn_forward, attn_init, init_kv_cache,
+                                    init_paged_kv_cache, quantize_cache)
 from repro.models.layers import (embed_init, mlp_apply, mlp_init, norm_apply,
                                  norm_init, unembed_init)
 from repro.parallel.sharding import logical_shard
@@ -341,11 +342,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
         lambda a: jnp.zeros((np_,) + a.shape, a.dtype), one)
 
 
-def _sublayer_decode(params, x, cache, pos, cfg, spec):
+def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int) -> dict:
+    """Like ``init_cache`` but attention sublayers get a shared block pool
+    (``n_blocks`` physical blocks, block 0 = trash) instead of dense
+    per-slot rows.  SSM/conv states stay per-slot — they are O(1) in
+    sequence length, so there is nothing to page."""
+    dtype = jnp.dtype(cfg.dtype)
+    specs = period_pattern(cfg)
+    np_ = n_periods(cfg)
+    one = {}
+    for j, (mixer, _) in enumerate(specs):
+        if mixer == "attn":
+            one[f"sub{j}"] = init_paged_kv_cache(cfg, n_blocks, block_size,
+                                                 dtype)
+        else:
+            one[f"sub{j}"] = ssm_lib.init_mamba_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((np_,) + a.shape, a.dtype), one)
+
+
+def write_paged_slot(cfg: ModelConfig, cache: dict, one: dict,
+                     table_row: Array, slot) -> dict:
+    """Install a batch-1 prefill cache into the paged shared cache: attention
+    K/V rows scatter into the physical blocks named by ``table_row`` (the
+    slot's block-table row, (L,) int32); SSM states write per-slot as in the
+    dense engine.  Unallocated table entries point at the trash block, so
+    their writes land there harmlessly."""
+    specs = period_pattern(cfg)
+    L = table_row.shape[0]
+    new = {}
+    for j, (mixer, _) in enumerate(specs):
+        sub = f"sub{j}"
+        if mixer == "attn":
+            def put(pool, leaf):
+                np_, _, s = leaf.shape[:3]
+                r = leaf.reshape((np_, L, s // L) + leaf.shape[3:])
+                return pool.at[:, table_row].set(r.astype(pool.dtype))
+            new[sub] = jax.tree.map(put, cache[sub], one[sub])
+        else:
+            new[sub] = jax.tree.map(
+                lambda c, o: jax.lax.dynamic_update_slice_in_dim(
+                    c, o.astype(c.dtype), slot, axis=1), cache[sub], one[sub])
+    return new
+
+
+def _sublayer_decode(params, x, cache, pos, cfg, spec, table=None):
     mixer, ffn = spec
     h = norm_apply(params["norm1"], x, cfg)
     if mixer == "attn":
-        y, new_cache = attn_decode(params["mixer"], h, cache, pos, cfg)
+        if table is None:
+            y, new_cache = attn_decode(params["mixer"], h, cache, pos, cfg)
+        else:
+            y, new_cache = attn_decode_paged(params["mixer"], h, cache,
+                                             table, pos, cfg)
     else:
         y, new_cache = ssm_lib.mamba_decode(params["mixer"], h, cache, cfg)
     x = x + y
@@ -359,11 +409,9 @@ def _sublayer_decode(params, x, cache, pos, cfg, spec):
     return x, new_cache
 
 
-def decode_step(params: dict, cache: dict, token: Array, pos: Array,
-                cfg: ModelConfig):
-    """One decode step.  token (B,) int32; pos scalar or (B,) per-slot
-    positions (continuous batching).  Returns (logits, cache)."""
-    x = params["embed"].astype(jnp.dtype(cfg.dtype))[token][:, None]   # (B,1,d)
+def _decode_x(params: dict, cache: dict, x: Array, pos: Array,
+              cfg: ModelConfig, table: Array | None = None):
+    """Shared one-step decode body over an embedded input x (B, 1, d)."""
     specs = period_pattern(cfg)
 
     def period_fn(x, xs):
@@ -371,7 +419,7 @@ def decode_step(params: dict, cache: dict, token: Array, pos: Array,
         new_pc = {}
         for j, spec in enumerate(specs):
             x, nc = _sublayer_decode(pparams[f"sub{j}"], x, pcache[f"sub{j}"],
-                                     pos, cfg, spec)
+                                     pos, cfg, spec, table)
             new_pc[f"sub{j}"] = nc
         return x, new_pc
 
@@ -382,6 +430,34 @@ def decode_step(params: dict, cache: dict, token: Array, pos: Array,
                         preferred_element_type=jnp.float32)
     logits = logical_shard(logits, "batch", None, "vocab")
     return logits[:, 0], new_cache
+
+
+def embed_tokens(params: dict, token: Array, cfg: ModelConfig) -> Array:
+    """token (B,) int32 -> (B, d) embeddings (the decode-step input)."""
+    return params["embed"].astype(jnp.dtype(cfg.dtype))[token]
+
+
+def decode_step(params: dict, cache: dict, token: Array, pos: Array,
+                cfg: ModelConfig):
+    """One decode step.  token (B,) int32; pos scalar or (B,) per-slot
+    positions (continuous batching).  Returns (logits, cache)."""
+    x = embed_tokens(params, token, cfg)[:, None]                   # (B,1,d)
+    return _decode_x(params, cache, x, pos, cfg)
+
+
+def decode_step_embed(params: dict, cache: dict, x: Array, pos: Array,
+                      cfg: ModelConfig):
+    """Decode step over a pre-embedded input x (B, d) — lets chunked prefill
+    feed VLM image-patch embeddings and token embeddings through one body."""
+    return _decode_x(params, cache, x[:, None], pos, cfg)
+
+
+def decode_step_paged(params: dict, cache: dict, table: Array, token: Array,
+                      pos: Array, cfg: ModelConfig):
+    """Decode step against a block-paged cache (``init_paged_cache``);
+    table (B, L) int32 maps each slot's logical blocks to pool blocks."""
+    x = embed_tokens(params, token, cfg)[:, None]
+    return _decode_x(params, cache, x, pos, cfg, table)
 
 
 def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int,

@@ -1,0 +1,127 @@
+"""Host-side block accounting for the block-paged KV cache.
+
+The device side (``models/attention.py``, ``kernels/paged_attention.py``)
+sees one shared pool of ``n_blocks`` physical KV blocks per attention layer
+plus a ``(max_batch, max_len // block_size)`` block table mapping each slot's
+logical block index to a physical block.  This module owns the table: which
+physical blocks are free, which slot owns which, and when admission must
+back-pressure because the pool is exhausted.
+
+Conventions:
+
+* **Physical block 0 is the trash block.**  Every unallocated table entry
+  points at it, so the lock-step decode kernel can scatter/gather for
+  *inactive* slots without branching — their writes land in trash and their
+  reads are fully masked (fully-masked softmax columns contribute exact
+  zeros, see DESIGN.md §12).  Block 0 is never handed out.
+* Allocation is whole-request-atomic at admission (``admit``) and
+  block-at-a-time during decode (``ensure``); both fail soft (return False)
+  so the scheduler can queue or preempt instead of raising.
+* Internal fragmentation is bounded by construction: a slot owns exactly
+  ``ceil(used_positions / block_size)`` blocks, so it wastes at most
+  ``block_size - 1`` positions (asserted in tests/test_paged_kv.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+class PagedKVManager:
+    """Free-list + per-slot block-table bookkeeping (pure host, no jax)."""
+
+    def __init__(self, n_blocks: int, block_size: int, max_batch: int,
+                 max_len: int):
+        if block_size < 1:
+            raise ValueError(f"block_size={block_size} must be >= 1")
+        if max_len % block_size:
+            raise ValueError(f"max_len={max_len} must divide by "
+                             f"block_size={block_size} (the gathered paged "
+                             "view must equal the dense cache extent)")
+        if n_blocks < 2:
+            raise ValueError(f"n_blocks={n_blocks} must be >= 2 "
+                             "(block 0 is reserved as the trash block)")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.blocks_per_slot = max_len // block_size
+        # LIFO free list: a freed block is reused by the very next allocation
+        # (cache-friendly, and makes reuse-after-retirement directly testable)
+        self._free = list(range(1, n_blocks))
+        self._owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.table = np.full((max_batch, self.blocks_per_slot), TRASH_BLOCK,
+                             np.int32)
+        self.peak_used_blocks = 0
+
+    # --- accounting ---------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def blocks_for(self, n_positions: int) -> int:
+        """Physical blocks covering ``n_positions`` cache positions."""
+        return -(-n_positions // self.block_size)
+
+    def can_admit(self, n_positions: int) -> bool:
+        return self.blocks_for(n_positions) <= len(self._free)
+
+    def owned_blocks(self, slot: int) -> list[int]:
+        return list(self._owned[slot])
+
+    def internal_fragmentation(self, slot: int, used_positions: int) -> int:
+        """Allocated-but-unused positions for a slot at depth
+        ``used_positions`` — bounded by ``block_size - 1``."""
+        return len(self._owned[slot]) * self.block_size - used_positions
+
+    def _grab(self, slot: int) -> int:
+        phys = self._free.pop()
+        row = self._owned[slot]
+        self.table[slot, len(row)] = phys
+        row.append(phys)
+        self.peak_used_blocks = max(self.peak_used_blocks, self.used_blocks)
+        return phys
+
+    # --- allocation ---------------------------------------------------------
+
+    def admit(self, slot: int, n_positions: int) -> bool:
+        """Atomically allocate blocks covering ``n_positions`` for a fresh
+        slot.  Returns False (allocating nothing) when the pool cannot cover
+        the request — admission back-pressure, not an error."""
+        if self._owned[slot]:
+            raise ValueError(f"slot {slot} already owns blocks; release first")
+        need = self.blocks_for(n_positions)
+        if need > len(self._free):
+            return False
+        for _ in range(need):
+            self._grab(slot)
+        return True
+
+    def ensure(self, slot: int, position: int) -> bool:
+        """Grow ``slot`` so cache ``position`` is backed by a real block.
+        Returns False when the pool is exhausted (caller preempts/queues)."""
+        need = position // self.block_size + 1
+        if need > self.blocks_per_slot:
+            raise ValueError(f"position {position} beyond max_len "
+                             f"({self.blocks_per_slot} blocks/slot)")
+        while len(self._owned[slot]) < need:
+            if not self._free:
+                return False
+            self._grab(slot)
+        return True
+
+    def release(self, slot: int) -> list[int]:
+        """Return all of ``slot``'s blocks to the pool and point its table
+        row back at the trash block.  Returns the freed block ids."""
+        freed = self._owned[slot]
+        self._owned[slot] = []
+        self.table[slot, :] = TRASH_BLOCK
+        self._free.extend(freed)
+        if len(self._free) > self.n_blocks - 1:
+            raise AssertionError("double free: pool over-full")
+        return freed

@@ -3,23 +3,33 @@
 ``Engine`` keeps one KV/SSM cache of ``max_batch`` rows alive for the whole
 request stream and drives all active rows in lock-step:
 
-* **prefill** — a whole prompt runs through the model in one jitted call
-  (``ModelAPI.prefill``), and its batch-1 cache is scattered into a free slot
-  of the shared cache (``_write_slot``).  Freed rows are reused by later
-  admissions; the cache is allocated once per ``run``, never per wave.
+* **prefill** — either a whole prompt in one jitted call (``ModelAPI.prefill``,
+  the legacy default) or *chunked*: the prompt runs through ``decode_step`` in
+  fixed-size chunks interleaved with decode steps, so a long admission never
+  stalls the lock-step batch and compile state stays bounded at ~one entry
+  per chunk size instead of one per (prompt length, embeds shape).
 * **decode** — one jitted ``_step`` advances every slot together.  Each slot
   carries its own position counter (per-slot ``pos`` threads through
   ``decode_step`` into the attention cache writes/masks), its own
   remaining-token budget, and an active flag; finished slots are frozen by
   masking, so retirement and admission never trigger recompilation.
+* **paged KV** (``ServeCfg.cache == "paged"``) — attention layers share one
+  physical block pool; each slot maps logical blocks through a host-side
+  block table (``runtime/paged_kv.py``).  Blocks are allocated lazily as
+  slots deepen and returned at retirement, so peak cache bytes track the
+  *live* token count, not ``max_batch × max_len``.  Pool exhaustion
+  back-pressures admission and, mid-decode, preempts the newest slot
+  (recompute on re-admission — exact under the engine's deterministic
+  sampling because the re-fed prompt+output prefix reproduces the cache).
 * **sampling** — on device, inside the jitted step: greedy ``argmax`` or
   temperature sampling via per-slot ``jax.random.categorical``.  The only
   per-step host transfer is the sampled-token vector and the
   finished-this-step mask (two ``(max_batch,)`` vectors).
 
 The scheduler (plain Python around the jitted calls) retires finished
-requests, admits pending ones into freed slots, and records throughput
-counters (tokens/s, per-request time-to-first-token) in ``Engine.last_stats``.
+requests, admits pending ones into freed slots (``Request.arrival_step``
+gates admission for traffic-trace replay), and records throughput counters
+(tokens/s, TTFT percentiles, peak cache bytes) in ``Engine.last_stats``.
 
 ``SequentialEngine`` preserves the original one-request-at-a-time loop
 (per-token Python prefill, host-side argmax) as the A/B baseline for
@@ -36,6 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.paged_kv import PagedKVManager
+
 Array = jax.Array
 
 
@@ -49,6 +61,9 @@ class Request:
     embeds: Any = None            # vlm prefix embeds / encdec audio frames,
                                   # shape (1, n, d) — threaded into prefill
     ttft_s: float | None = None   # time-to-first-token, set by Engine.run
+    arrival_step: int = 0         # earliest decode step this request may be
+                                  # admitted at (traffic-trace replay; 0 =
+                                  # available immediately, the legacy default)
 
 
 @dataclasses.dataclass
@@ -57,6 +72,13 @@ class ServeCfg:
     max_len: int = 128
     temperature: float = 0.0
     eos_id: int = -1              # -1: never stop early
+    cache: str = "dense"          # dense | paged
+    prefill_chunk: int = 0        # >0: chunked prefill with this chunk size;
+                                  # 0 = whole-prompt (dense) / page_block
+                                  # (paged — paged prefill is always chunked)
+    page_block: int = 16          # positions per physical KV block (paged)
+    pool_blocks: int = 0          # physical blocks in the shared pool; 0 =
+                                  # dense-equivalent capacity + trash block
 
 
 @dataclasses.dataclass
@@ -70,17 +92,30 @@ class ServeStats:
     tokens_per_s: float = 0.0
     ttft_mean_s: float = 0.0
     ttft_max_s: float = 0.0
+    ttft_p50_s: float = 0.0
+    ttft_p99_s: float = 0.0
+    prefill_chunks: int = 0       # chunked-prefill jit invocations
+    preemptions: int = 0          # paged: slots evicted on pool exhaustion
+    peak_cache_bytes: int = 0     # persistent cache + transient prefill cache
+    peak_used_blocks: int = 0     # paged: high-water mark of pool blocks
 
 
 def _mk_stats(results: list[Request], gen: int, prefills: int, steps: int,
-              wall: float) -> ServeStats:
+              wall: float, *, chunks: int = 0, preemptions: int = 0,
+              peak_cache_bytes: int = 0,
+              peak_used_blocks: int = 0) -> ServeStats:
     ttfts = [r.ttft_s for r in results if r.ttft_s is not None]
     return ServeStats(
         requests=len(results), generated_tokens=gen,
         prefill_calls=prefills, decode_steps=steps, wall_s=wall,
         tokens_per_s=gen / wall if wall > 0 else 0.0,
         ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
-        ttft_max_s=float(np.max(ttfts)) if ttfts else 0.0)
+        ttft_max_s=float(np.max(ttfts)) if ttfts else 0.0,
+        ttft_p50_s=float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+        ttft_p99_s=float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+        prefill_chunks=chunks, preemptions=preemptions,
+        peak_cache_bytes=peak_cache_bytes,
+        peak_used_blocks=peak_used_blocks)
 
 
 def _prefix_len(req: Request, family: str) -> int:
@@ -89,6 +124,25 @@ def _prefix_len(req: Request, family: str) -> int:
     if req.embeds is None or family == "encdec":
         return 0
     return req.embeds.shape[1]
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+class _PrefillJob:
+    """An in-flight chunked prefill: one request being fed chunk-by-chunk
+    through a transient batch-1 cache, interleaved with decode steps."""
+    __slots__ = ("req", "slot", "cache1", "items", "done", "logits",
+                 "embeds", "emb_key")
+
+    def __init__(self, req, slot, cache1, items, embeds, emb_key):
+        self.req, self.slot, self.cache1 = req, slot, cache1
+        self.items = items            # token id per decoder item (prefix
+        self.done = 0                 # positions carry a placeholder 0 —
+        self.logits = None            # the vlm runner swaps in embeds)
+        self.embeds, self.emb_key = embeds, emb_key
 
 
 class Engine:
@@ -101,11 +155,36 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.last_stats = ServeStats()
         self._prefill_jit: dict = {}      # (prompt_len, embeds_shape) -> fn
+        self._chunk_jit: dict = {}        # (chunk, embeds_shape) -> fn
+        self._prime = None                # lazy jit of api.prime_cross
         B, temp, eos, max_len = (cfg.max_batch, cfg.temperature, cfg.eos_id,
                                  cfg.max_len)
+        self._paged = cfg.cache == "paged"
+        if cfg.cache not in ("dense", "paged"):
+            raise ValueError(f"cache={cfg.cache!r}; expected dense|paged")
+        if self._paged:
+            if model_api.init_paged_cache is None:
+                raise ValueError("this model family has no paged-cache "
+                                 "support (ModelAPI.init_paged_cache is None)")
+            if getattr(model_api.cfg, "sliding_window", 0):
+                raise ValueError(
+                    "cache='paged' is incompatible with sliding-window "
+                    "attention: the SWA ring buffer already bounds the cache "
+                    "at window size — use cache='dense' for SWA archs")
+            if max_len % cfg.page_block:
+                raise ValueError(
+                    f"max_len={max_len} must divide by page_block="
+                    f"{cfg.page_block} so the gathered paged view matches "
+                    "the dense cache extent (the bitwise parity contract)")
+        # paged prefill is always chunked (whole-prompt writes need the full
+        # dense row); dense engines opt in via prefill_chunk > 0
+        self._chunk = (cfg.prefill_chunk if cfg.prefill_chunk > 0
+                       else (cfg.page_block if self._paged else 0))
+        self._pool_blocks = (cfg.pool_blocks if cfg.pool_blocks > 0
+                             else B * (max_len // cfg.page_block) + 1)
         # Donating the cache/state lets XLA update the (large) KV buffers in
         # place each step; CPU ignores donation, so only request it off-CPU.
-        donate = jax.default_backend() != "cpu"
+        self._donate = donate = jax.default_backend() != "cpu"
 
         def sample(logits: Array, key: Array) -> Array:
             """(n, V) logits -> (n,) sampled tokens, on device."""
@@ -116,11 +195,7 @@ class Engine:
                 )(keys, logits).astype(jnp.int32)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-        def step_fn(params, cache, state, key):
-            """Advance all slots one token.  Frozen (inactive) slots keep
-            their position/budget; their sampled token is discarded."""
-            logits, cache = model_api.decode_step(params, cache,
-                                                  state["tok"], state["pos"])
+        def _advance(cache, state, logits, key):
             tok = sample(logits, key)
             pos = jnp.where(state["active"], state["pos"] + 1, state["pos"])
             rem = jnp.where(state["active"], state["rem"] - 1, state["rem"])
@@ -130,6 +205,18 @@ class Engine:
             state = {"tok": tok, "pos": pos, "rem": rem,
                      "active": state["active"] & ~done}
             return cache, state, tok, finished
+
+        def step_fn(params, cache, state, key):
+            """Advance all slots one token.  Frozen (inactive) slots keep
+            their position/budget; their sampled token is discarded."""
+            logits, cache = model_api.decode_step(params, cache,
+                                                  state["tok"], state["pos"])
+            return _advance(cache, state, logits, key)
+
+        def step_paged_fn(params, cache, state, table, key):
+            logits, cache = model_api.decode_step_paged(
+                params, cache, table, state["tok"], state["pos"])
+            return _advance(cache, state, logits, key)
 
         def admit_fn(state, slot, logits, pos0, rem0, key):
             """Occupy ``slot``: sample the first token from the prefill
@@ -151,9 +238,15 @@ class Engine:
 
         self._step = jax.jit(step_fn,
                              donate_argnums=(1, 2) if donate else ())
+        self._step_paged = jax.jit(step_paged_fn,
+                                   donate_argnums=(1, 2) if donate else ())
         self._admit = jax.jit(admit_fn)
         self._write_slot = jax.jit(write_slot,
                                    donate_argnums=(0,) if donate else ())
+        self._write_paged = jax.jit(
+            lambda cache, one, row, slot: model_api.write_paged_slot(
+                cache, one, row, slot),
+            donate_argnums=(0,) if donate else ())
         self._B = B
 
     # Each distinct (prompt length, embeds shape) compiles its own prefill;
@@ -161,7 +254,10 @@ class Engine:
     # engine over naturally varying lengths cannot grow compile state without
     # bound.  Length-bucketing with right-padding would bound compiles harder
     # but is not exactness-preserving for SSM/conv states (pad tokens enter
-    # the recurrence), so we keep exact per-length prefill.
+    # the recurrence), so we keep exact per-length prefill.  Chunked prefill
+    # (prefill_chunk > 0) sidesteps the whole issue: every prompt length
+    # shares the one compiled chunk body, so the compile-cache cardinality is
+    # ~one entry per chunk size (asserted in tests/test_paged_serving.py).
     _PREFILL_MEMO_MAX = 64
 
     def _prefill(self, req: Request):
@@ -184,19 +280,123 @@ class Engine:
             return fn(self.params, toks)
         return fn(self.params, toks, jnp.asarray(req.embeds))
 
+    # --- chunked prefill ---------------------------------------------------
+
+    def _chunk_runner(self, C: int, emb_key):
+        """One compiled fn per (chunk size, embeds shape): scan ``decode_step``
+        over a fixed-size padded chunk of a batch-1 cache.  Items beyond
+        ``n_valid`` are computed then reverted (cache and logits keep their
+        pre-step values), so every prompt length reuses the same program."""
+        fn = self._chunk_jit.get((C, emb_key))
+        if fn is not None:
+            return fn
+        api = self.api
+        V = api.cfg.vocab_size
+
+        if emb_key is None:
+            def scan_chunk(params, cache, toks, pos0, n_valid):
+                def body(carry, i):
+                    cache, logits = carry
+                    lg, c2 = api.decode_step(params, cache, toks[i][None],
+                                             pos0 + i)
+                    act = i < n_valid
+                    cache = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                         c2, cache)
+                    logits = jnp.where(act, lg, logits)
+                    return (cache, logits), None
+                init = (cache, jnp.zeros((1, V), jnp.float32))
+                (cache, logits), _ = jax.lax.scan(body, init, jnp.arange(C))
+                return logits, cache
+        else:
+            n_img = emb_key[1]          # vlm: items [0, n_img) are patches
+
+            def scan_chunk(params, cache, toks, embeds, pos0, n_valid):
+                emb_t = embeds[0]                               # (n_img, d)
+
+                def body(carry, i):
+                    cache, logits = carry
+                    pos = pos0 + i
+                    tok_x = api.embed_tokens(params, toks[i][None])[0]
+                    img_x = emb_t[jnp.clip(pos, 0, n_img - 1)].astype(
+                        tok_x.dtype)
+                    x = jnp.where(pos < n_img, img_x, tok_x)
+                    lg, c2 = api.decode_step_embed(params, cache, x[None],
+                                                   pos)
+                    act = i < n_valid
+                    cache = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                         c2, cache)
+                    logits = jnp.where(act, lg, logits)
+                    return (cache, logits), None
+                init = (cache, jnp.zeros((1, V), jnp.float32))
+                (cache, logits), _ = jax.lax.scan(body, init, jnp.arange(C))
+                return logits, cache
+
+        fn = jax.jit(scan_chunk,
+                     donate_argnums=(1,) if self._donate else ())
+        while len(self._chunk_jit) >= self._PREFILL_MEMO_MAX:
+            self._chunk_jit.pop(next(iter(self._chunk_jit)))
+        self._chunk_jit[(C, emb_key)] = fn
+        return fn
+
+    def _start_job(self, req: Request, slot: int, family: str) -> _PrefillJob:
+        prefix = _prefix_len(req, family)
+        # re-admission after preemption re-feeds prompt + generated prefix:
+        # exact recompute of the released cache rows
+        items = [0] * prefix + list(req.prompt) + list(req.out)
+        cache1 = self.api.init_cache(1, self.cfg.max_len)
+        embeds = emb_key = None
+        if req.embeds is not None:
+            if family == "encdec":
+                if self._prime is None:
+                    self._prime = jax.jit(
+                        lambda p, f: self.api.prime_cross(p, f))
+                cache1["cross"] = self._prime(self.params,
+                                              jnp.asarray(req.embeds))
+            else:
+                embeds = jnp.asarray(req.embeds)
+                emb_key = tuple(embeds.shape)
+        return _PrefillJob(req, slot, cache1, items, embeds, emb_key)
+
+    def _advance_job(self, job: _PrefillJob):
+        C = self._chunk
+        sel = job.items[job.done: job.done + C]
+        toks = np.zeros((C,), np.int32)
+        toks[: len(sel)] = sel
+        fn = self._chunk_runner(C, job.emb_key)
+        args = (self.params, job.cache1, jnp.asarray(toks))
+        if job.emb_key is not None:
+            args += (job.embeds,)
+        job.logits, job.cache1 = fn(*args, jnp.int32(job.done),
+                                    jnp.int32(len(sel)))
+        job.done += len(sel)
+
+    def compile_cache_sizes(self) -> dict:
+        """Compile-state cardinality (regression-tested: chunked prefill
+        keeps this bounded under mixed-length traffic)."""
+        return {"prefill": len(self._prefill_jit),
+                "chunk": len(self._chunk_jit)}
+
+    # --- scheduler ---------------------------------------------------------
+
     def run(self, requests: list[Request], on_retire=None) -> list[Request]:
         """Serve ``requests``; returns them in completion order.  Counters
         for the run land in ``self.last_stats``.
 
-        ``on_retire(req)`` is called once per request the moment it
-        finishes, letting consumers stream completions (e.g. the on-device
-        ``DeviceSession`` feeding its replay buffer) without copying this
-        loop.  The callback runs between jitted steps, so it may mutate
-        ``self.params`` (live weight swaps) — in-flight slots keep decoding
-        under whatever params the next step reads."""
+        Requests are admitted FIFO, gated by ``arrival_step`` against the
+        decode-step clock (when the engine is fully idle the clock jumps to
+        the next arrival).  ``on_retire(req)`` is called once per request the
+        moment it finishes, letting consumers stream completions (e.g. the
+        on-device ``DeviceSession`` feeding its replay buffer) without
+        copying this loop.  The callback runs between jitted steps, so it may
+        mutate ``self.params`` (live weight swaps) — in-flight slots keep
+        decoding under whatever params the next step reads."""
         cfg = self.cfg
         B = self._B
+        paged = self._paged
+        chunk = self._chunk
         family = getattr(self.api.cfg, "family", "")
+        bs = cfg.page_block
+        usable = self._pool_blocks - 1
         for r in requests:
             if family == "encdec" and r.embeds is None:
                 raise ValueError(f"request {r.uid}: encdec serving needs "
@@ -206,6 +406,14 @@ class Engine:
                     f"request {r.uid}: prompt ({len(r.prompt)} tokens "
                     f"+ {_prefix_len(r, family)} prefix) does not fit "
                     f"max_len={cfg.max_len} with room to generate")
+            if paged:
+                worst = min(len(r.prompt) + _prefix_len(r, family)
+                            + r.max_new_tokens, cfg.max_len)
+                if -(-worst // bs) > usable:
+                    raise ValueError(
+                        f"request {r.uid}: worst case needs "
+                        f"{-(-worst // bs)} blocks but the pool has "
+                        f"{usable} usable — raise ServeCfg.pool_blocks")
         t0 = time.perf_counter()
         # zero-budget requests complete immediately (matches the sequential
         # engine, whose generate loop never runs for them)
@@ -217,12 +425,27 @@ class Engine:
         pending = collections.deque(r for r in requests
                                     if r.max_new_tokens > 0)
         slots: list[Request | None] = [None] * B
-        cache = self.api.init_cache(B, cfg.max_len)
+        if paged:
+            cache = self.api.init_paged_cache(B, self._pool_blocks, bs)
+            mgr = PagedKVManager(self._pool_blocks, bs, B, cfg.max_len)
+        else:
+            cache = self.api.init_cache(B, cfg.max_len)
+            mgr = None
+        persistent_bytes = _tree_bytes(cache)
+        transient_shape = jax.eval_shape(
+            lambda: self.api.init_cache(1, cfg.max_len))
         state = {"tok": jnp.zeros((B,), jnp.int32),
                  "pos": jnp.zeros((B,), jnp.int32),
                  "rem": jnp.zeros((B,), jnp.int32),
                  "active": jnp.zeros((B,), bool)}
-        gen = prefills = steps = 0
+        gen = prefills = steps = chunks = preempts = clock = 0
+        pos_h = [0] * B               # host mirror of per-slot positions
+        admit_seq = [0] * B           # admission order (preemption victims)
+        seq = 0
+        table_dev = jnp.asarray(mgr.table) if paged else None
+        table_dirty = False
+        job: _PrefillJob | None = None
+        arr_wall: dict[int, float] = {}
 
         def _retire(req: Request):
             req.done = True
@@ -230,45 +453,149 @@ class Engine:
             if on_retire is not None:
                 on_retire(req)
 
-        while pending or any(s is not None for s in slots):
-            # --- admission: fill every free slot from the queue ------------
-            for slot in range(B):
-                while slots[slot] is None and pending:
-                    req = pending.popleft()
-                    logits, pcache = self._prefill(req)
-                    cache = self._write_slot(cache, pcache, slot)
-                    self.key, sub = jax.random.split(self.key)
-                    pos0 = len(req.prompt) + _prefix_len(req, family)
-                    state, tok0, done0 = self._admit(
-                        state, slot, logits, pos0, req.max_new_tokens, sub)
-                    prefills += 1
-                    tok0_h, done0_h = jax.device_get((tok0, done0))
-                    req.out.append(int(tok0_h))
-                    req.ttft_s = time.perf_counter() - t0
-                    gen += 1
-                    if bool(done0_h):
-                        _retire(req)          # slot stays free for the next
-                    else:
-                        slots[slot] = req
-            if not any(s is not None for s in slots):
-                continue
-            # --- lock-step decode over all active slots --------------------
+        def _free(slot: int):
+            nonlocal table_dirty
+            slots[slot] = None
+            if paged:
+                mgr.release(slot)
+                table_dirty = True
+
+        def _finish_admit(jb_logits, slot, req, cache):
+            """Sample the first token off the prefill logits and install the
+            slot (shared between the legacy and chunked paths)."""
+            nonlocal gen, table_dirty, seq
             self.key, sub = jax.random.split(self.key)
-            cache, state, tok, finished = self._step(self.params, cache,
-                                                     state, sub)
+            pos0 = len(req.prompt) + _prefix_len(req, family) + len(req.out)
+            rem0 = req.max_new_tokens - len(req.out)
+            state2, tok0, done0 = self._admit(state, slot, jb_logits,
+                                              pos0, rem0, sub)
+            tok0_h, done0_h = jax.device_get((tok0, done0))
+            req.out.append(int(tok0_h))
+            if req.ttft_s is None:
+                req.ttft_s = time.perf_counter() - arr_wall.get(req.uid, t0)
+            gen += 1
+            if bool(done0_h):
+                _retire(req)
+                if paged:
+                    mgr.release(slot)
+                    table_dirty = True
+            else:
+                slots[slot] = req
+                pos_h[slot] = pos0
+                admit_seq[slot] = seq
+                seq += 1
+            return state2, cache
+
+        def _preempt(victim: int):
+            nonlocal table_dirty, preempts
+            req = slots[victim]
+            slots[victim] = None
+            state["active"] = state["active"].at[victim].set(False)
+            mgr.release(victim)
+            table_dirty = True
+            pending.appendleft(req)
+            preempts += 1
+
+        while pending or job is not None or any(s is not None for s in slots):
+            now = time.perf_counter()
+            for r in pending:
+                if r.arrival_step <= clock and r.uid not in arr_wall:
+                    arr_wall[r.uid] = now
+            # --- admission -------------------------------------------------
+            if chunk == 0:
+                # legacy: fill every free slot with a whole-prompt prefill
+                for slot in range(B):
+                    while (slots[slot] is None and pending
+                           and pending[0].arrival_step <= clock):
+                        req = pending.popleft()
+                        logits, pcache = self._prefill(req)
+                        cache = self._write_slot(cache, pcache, slot)
+                        prefills += 1
+                        state, cache = _finish_admit(logits, slot, req, cache)
+            else:
+                # chunked: start at most one job, advance it one chunk per
+                # loop iteration — admissions interleave with decode steps
+                if (job is None and pending
+                        and pending[0].arrival_step <= clock):
+                    slot = next((i for i in range(B) if slots[i] is None),
+                                None)
+                    if slot is not None:
+                        req = pending[0]
+                        total = (len(req.prompt) + _prefix_len(req, family)
+                                 + len(req.out))
+                        if not paged or mgr.admit(slot, total + 1):
+                            pending.popleft()
+                            job = self._start_job(req, slot, family)
+                            prefills += 1
+                            if paged:
+                                table_dirty = True
+                        # else: pool exhausted — back-pressure, retry after
+                        # retirements free blocks
+                if job is not None:
+                    self._advance_job(job)
+                    chunks += 1
+                    if job.done == len(job.items):
+                        if paged:
+                            row = jnp.asarray(mgr.table[job.slot])
+                            cache = self._write_paged(cache, job.cache1, row,
+                                                      job.slot)
+                        else:
+                            cache = self._write_slot(cache, job.cache1,
+                                                     job.slot)
+                        state, cache = _finish_admit(job.logits, job.slot,
+                                                     job.req, cache)
+                        job = None
+            # --- lock-step decode over all active slots --------------------
+            if not any(s is not None for s in slots):
+                if (job is None and pending
+                        and pending[0].arrival_step > clock):
+                    clock = pending[0].arrival_step   # idle: jump ahead
+                continue
+            if paged:
+                # back every slot's next write position with a real block;
+                # on exhaustion evict the newest admission (recompute later)
+                for slot in sorted(range(B), key=lambda i: admit_seq[i]):
+                    if slots[slot] is None:
+                        continue
+                    while not mgr.ensure(slot, pos_h[slot]):
+                        victims = [i for i in range(B)
+                                   if slots[i] is not None]
+                        victim = max(victims, key=lambda i: admit_seq[i])
+                        _preempt(victim)
+                        if victim == slot:
+                            break
+                if table_dirty:
+                    table_dev = jnp.asarray(mgr.table)
+                    table_dirty = False
+                if not any(s is not None for s in slots):
+                    continue
+            self.key, sub = jax.random.split(self.key)
+            if paged:
+                cache, state, tok, finished = self._step_paged(
+                    self.params, cache, state, table_dev, sub)
+            else:
+                cache, state, tok, finished = self._step(self.params, cache,
+                                                         state, sub)
             steps += 1
+            clock += 1
             tok_h, fin_h = jax.device_get((tok, finished))
             for slot, req in enumerate(slots):
                 if req is None:
                     continue
                 req.out.append(int(tok_h[slot]))
                 gen += 1
+                pos_h[slot] += 1
                 if bool(fin_h[slot]):
                     _retire(req)
-                    slots[slot] = None
+                    _free(slot)
 
-        self.last_stats = _mk_stats(results, gen, prefills, steps,
-                                    time.perf_counter() - t0)
+        peak_bytes = persistent_bytes
+        if prefills > 0:
+            peak_bytes += _tree_bytes(transient_shape)
+        self.last_stats = _mk_stats(
+            results, gen, prefills, steps, time.perf_counter() - t0,
+            chunks=chunks, preemptions=preempts, peak_cache_bytes=peak_bytes,
+            peak_used_blocks=mgr.peak_used_blocks if paged else 0)
         return results
 
 

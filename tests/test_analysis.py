@@ -382,6 +382,61 @@ def test_pallas_contract_dslice_stride(tmp_path):
     assert any("dslice" in f.message for f in found), found
 
 
+_PALLAS_PREFETCH = """\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kernel(tbl_ref, pos_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def call(tbl, pos, x):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(4, 4),
+            in_specs=[pl.BlockSpec((8, 8),
+                                   lambda i, j, tbl, pos: (tbl[i, j], j))],
+            out_specs=pl.BlockSpec((8, 8), lambda {lam_args}: ({lam_body})),
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        )({operands})
+"""
+
+
+def test_pallas_contract_prefetch_grid_spec_clean(tmp_path):
+    """Scalar-prefetch geometry: index_maps take grid + prefetch args and
+    the prefetch operands ride in front of the BlockSpec'd ones."""
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_PREFETCH.format(lam_args="i, j, tbl, pos",
+                                       lam_body="i, j",
+                                       operands="tbl, pos, x"))
+    assert _unsuppressed(_run("pallas-contract", ctx)) == []
+
+
+def test_pallas_contract_prefetch_flags_index_map_arity(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_PREFETCH.format(lam_args="i, j", lam_body="i, j",
+                                       operands="tbl, pos, x"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("index_map takes 2 args" in f.message
+               and "2 scalar-prefetch refs" in f.message
+               for f in found), found
+
+
+def test_pallas_contract_prefetch_flags_operand_count(tmp_path):
+    # forgetting to pass the scalar operands ahead of the array ones
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_PREFETCH.format(lam_args="i, j, tbl, pos",
+                                       lam_body="i, j", operands="x"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("1 in_specs" in f.message and "1 operands" in f.message
+               for f in found), found
+
+
 def test_pallas_contract_cap_containment(tmp_path):
     ctx = _ctx(tmp_path, "src/repro/models/z.py", """\
         from repro.kernels.dispatch import GRAD_SKETCH_MAX_N

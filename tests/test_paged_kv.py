@@ -1,0 +1,202 @@
+"""Block-table mechanics in isolation (no model): allocation/growth/free,
+reuse after retirement, the fragmentation bound, admission back-pressure on
+pool exhaustion, and partial-block masking in the paged-attention kernel
+against a hand-rolled dense softmax on the raw arrays."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.kernels.paged_attention import (paged_attention,  # noqa: E402
+                                           paged_attention_ref)
+from repro.runtime.paged_kv import TRASH_BLOCK, PagedKVManager  # noqa: E402
+
+
+# --- constructor contracts --------------------------------------------------
+
+def test_rejects_bad_geometry():
+    with pytest.raises(ValueError, match="block_size"):
+        PagedKVManager(8, 0, 2, 16)
+    with pytest.raises(ValueError, match="divide"):
+        PagedKVManager(8, 5, 2, 16)
+    with pytest.raises(ValueError, match="trash"):
+        PagedKVManager(1, 4, 2, 16)
+
+
+def test_fresh_table_points_at_trash():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    assert TRASH_BLOCK == 0
+    assert (mgr.table == TRASH_BLOCK).all()
+    assert mgr.free_blocks == 8 and mgr.used_blocks == 0
+
+
+# --- allocate / append / free ----------------------------------------------
+
+def test_admit_allocates_covering_blocks():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    assert mgr.blocks_for(1) == 1 and mgr.blocks_for(4) == 1
+    assert mgr.blocks_for(5) == 2
+    assert mgr.admit(0, 6)
+    assert len(mgr.owned_blocks(0)) == 2
+    # the table row maps logical -> physical, rest stays trash
+    assert list(mgr.table[0, :2]) == mgr.owned_blocks(0)
+    assert (mgr.table[0, 2:] == TRASH_BLOCK).all()
+    assert TRASH_BLOCK not in mgr.owned_blocks(0)
+    assert mgr.used_blocks == 2 and mgr.peak_used_blocks == 2
+
+
+def test_ensure_grows_one_block_at_a_time():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    assert mgr.admit(0, 3)
+    assert mgr.ensure(0, 3)                   # position 3 in block 0: no-op
+    assert len(mgr.owned_blocks(0)) == 1
+    assert mgr.ensure(0, 4)                   # crosses into block 1
+    assert len(mgr.owned_blocks(0)) == 2
+    with pytest.raises(ValueError, match="beyond max_len"):
+        mgr.ensure(0, 16)
+
+
+def test_release_returns_blocks_and_resets_row():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    mgr.admit(0, 10)
+    owned = mgr.owned_blocks(0)
+    freed = mgr.release(0)
+    assert freed == owned
+    assert (mgr.table[0] == TRASH_BLOCK).all()
+    assert mgr.free_blocks == 8
+    # double free is a bug, not back-pressure
+    mgr._free.extend(freed)
+    with pytest.raises(AssertionError, match="double free"):
+        mgr.release(0)
+
+
+def test_double_admit_raises():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    mgr.admit(0, 4)
+    with pytest.raises(ValueError, match="already owns"):
+        mgr.admit(0, 4)
+
+
+def test_blocks_reused_after_retirement():
+    """LIFO free list: a retired slot's blocks are handed to the very next
+    admission."""
+    mgr = PagedKVManager(9, 4, 2, 16)
+    mgr.admit(0, 8)
+    freed = mgr.release(0)
+    mgr.admit(1, 8)
+    assert mgr.owned_blocks(1) == freed[::-1]
+
+
+def test_fragmentation_bounded_by_block_size():
+    mgr = PagedKVManager(33, 4, 4, 32)
+    for used in range(1, 33):
+        mgr.admit(2, used)
+        waste = mgr.internal_fragmentation(2, used)
+        assert 0 <= waste <= mgr.block_size - 1, (used, waste)
+        mgr.release(2)
+
+
+# --- exhaustion back-pressure ----------------------------------------------
+
+def test_admission_backpressure_allocates_nothing():
+    mgr = PagedKVManager(5, 4, 2, 16)          # 4 usable blocks
+    assert mgr.admit(0, 12)                    # takes 3
+    assert not mgr.can_admit(8)
+    assert mgr.admit(1, 8) is False            # needs 2, only 1 free
+    assert mgr.owned_blocks(1) == []           # atomic: nothing allocated
+    assert mgr.free_blocks == 1
+    mgr.release(0)
+    assert mgr.admit(1, 8)                     # retirement unblocks it
+
+
+def test_ensure_exhaustion_returns_false():
+    mgr = PagedKVManager(3, 4, 2, 16)          # 2 usable blocks
+    mgr.admit(0, 4)
+    mgr.admit(1, 4)
+    assert mgr.ensure(0, 4) is False           # pool dry: caller preempts
+    assert len(mgr.owned_blocks(0)) == 1       # no partial growth
+
+
+def test_peak_tracks_high_water_mark():
+    mgr = PagedKVManager(9, 4, 2, 16)
+    mgr.admit(0, 16)
+    mgr.release(0)
+    mgr.admit(1, 4)
+    assert mgr.used_blocks == 1
+    assert mgr.peak_used_blocks == 4
+
+
+# --- partial-block masking --------------------------------------------------
+
+def _rand_paged(seed, B=2, L=4, bs=4, kv=2, g=2, hd=8, n_blocks=9):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, kv, g, hd)).astype(np.float32)
+    k = rng.standard_normal((n_blocks, bs, kv, hd)).astype(np.float32)
+    v = rng.standard_normal((n_blocks, bs, kv, hd)).astype(np.float32)
+    # distinct physical blocks per slot, deliberately out of order
+    table = np.array([[3, 1, 7, 5], [8, 2, 4, 6]][:B], np.int32)[:, :L]
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(table)
+
+
+def _dense_oracle(q, k, v, table, pos):
+    """Gather the paged layout into dense rows and attend with a plain
+    numpy softmax over positions <= pos."""
+    q, k, v, table = map(np.asarray, (q, k, v, table))
+    B, kv, g, hd = q.shape
+    bs = k.shape[1]
+    out = np.zeros_like(q)
+    for b in range(B):
+        kk = k[table[b]].reshape(-1, kv, hd)[: pos[b] + 1]
+        vv = v[table[b]].reshape(-1, kv, hd)[: pos[b] + 1]
+        for h in range(kv):
+            s = (q[b, h] @ kk[:, h].T) / np.sqrt(hd)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[b, h] = p @ vv[:, h]
+    return out
+
+
+@pytest.mark.parametrize("pos", [[0, 0], [2, 5], [3, 14], [15, 7]])
+def test_reference_masks_partial_blocks(pos):
+    """Attention must stop exactly at ``pos`` — positions in the same block
+    beyond it (garbage or stale retired-slot data) contribute nothing."""
+    q, k, v, table = _rand_paged(0)
+    pos = jnp.asarray(pos, jnp.int32)
+    got = paged_attention_ref(q, k, v, table, pos)
+    want = _dense_oracle(q, k, v, table, pos)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_reference_ignores_trash_blocks():
+    """Unallocated logical blocks point at the trash block; as long as the
+    position mask excludes them, their contents must not matter."""
+    q, k, v, table = _rand_paged(1)
+    pos = jnp.asarray([3, 3], jnp.int32)       # only block 0 of each slot
+    a = paged_attention_ref(q, k, v, table, pos)
+    poisoned = jnp.asarray(np.where(
+        np.arange(k.shape[0])[:, None, None, None] == TRASH_BLOCK,
+        1e6, np.asarray(k)).astype(np.float32))
+    b = paged_attention_ref(q, poisoned, v,
+                            table.at[:, 1:].set(TRASH_BLOCK), pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("pos", [[0, 4], [3, 15], [11, 2]])
+def test_kernel_interpret_matches_reference(pos):
+    q, k, v, table = _rand_paged(2)
+    pos = jnp.asarray(pos, jnp.int32)
+    got = paged_attention(q, k, v, table, pos, interpret=True)
+    want = paged_attention_ref(q, k, v, table, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_kernel_single_kv_head_mqa_geometry():
+    q, k, v, table = _rand_paged(3, kv=1, g=4)
+    pos = jnp.asarray([6, 13], jnp.int32)
+    got = paged_attention(q, k, v, table, pos, interpret=True)
+    want = _dense_oracle(q, k, v, table, pos)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)

@@ -21,7 +21,7 @@ def test_snapshots_are_checked_in():
     names = {os.path.basename(p) for p in CHECKED_IN}
     for required in ("BENCH_fused_asi.json", "BENCH_serve_throughput.json",
                      "BENCH_activation_memory.json",
-                     "BENCH_scenario_suite.json"):
+                     "BENCH_scenario_suite.json", "BENCH_serve_trace.json"):
         assert required in names, f"{required} missing from {SNAPSHOT_DIR}"
 
 
@@ -44,6 +44,23 @@ def test_scenario_suite_snapshot_contents():
     # the snapshot carries the actual curves, one point per burst
     assert len(snap["series"]["probe_phase0"]) == snap["metrics"]["bursts"]
     assert snap["series"]["quality"]
+
+
+def test_serve_trace_snapshot_contents():
+    """The recorded traffic-trace run holds the paged-cache claims: token
+    parity with the dense engine, >= 2x peak-KV reduction, and throughput
+    within 10% of dense."""
+    snap = load_snapshot("serve_trace")
+    m = snap["metrics"]
+    assert m["parity"] is True
+    assert m["kv_reduction_x"] >= 2.0
+    assert m["tok_s_ratio"] >= 0.9
+    assert m["paged_peak_cache_bytes"] < m["dense_peak_cache_bytes"]
+    # the pool is sized by config, the high-water mark can't exceed it
+    assert m["paged_peak_used_blocks"] <= snap["config"]["pool_blocks"] - 1
+    # TTFT percentiles ride along as [dense, paged] series
+    assert len(snap["series"]["ttft_p50_s"]) == 2
+    assert len(snap["series"]["ttft_p99_s"]) == 2
 
 
 def test_validate_flags_malformed():
