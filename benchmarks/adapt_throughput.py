@@ -23,6 +23,7 @@ from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import warmup_cosine
 from repro.runtime.serve_loop import Engine, Request, ServeCfg
 from repro.runtime.train_loop import make_train_step
+from repro.telemetry import Recorder
 
 ARCH = "tinyllama-1.1b"
 N_REQUESTS, MAX_NEW, MAX_BATCH, MAX_LEN = 8, 8, 4, 64
@@ -46,7 +47,8 @@ def run(verbose: bool = True) -> dict:
                                 global_batch=BATCH, seed=0, branching=2))
 
     # --- baseline: serve only (warmed) --------------------------------------
-    eng = Engine(api, params, scfg)
+    base_rec = Recorder()
+    eng = Engine(api, params, scfg, telemetry=base_rec)
     eng.run(_requests(2))
     eng.run(_requests())
     base = eng.last_stats
@@ -61,21 +63,32 @@ def run(verbose: bool = True) -> dict:
     step_fn = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
                               trainable_mask=api.trainable_mask(params),
                               donate=False, kernel_backend=cfg.kernel_backend)
+    sess_rec = Recorder()
     session = DeviceSession(
         api, params, step_fn, opt_state=opt.init(params),
         asi_state=asi_state, serve_cfg=scfg,
         cfg=SessionCfg(adapt_every=ADAPT_EVERY, burst_steps=BURST,
                        total_steps=TOTAL_STEPS, batch_size=BATCH,
                        seq_len=SEQ),
-        probe_batch=data.batch(10_000))
+        probe_batch=data.batch(10_000), telemetry=sess_rec)
     # warm-up: engine prefill/step compiles AND the train-step compile (the
     # replay is seeded so one real adaptation step traces), then reset
     session.replay.add([1 + i % 37 for i in range(SEQ + 2)])
     session.engine.run(_requests(2))
     session.adapt_steps(1)
     session.reset_counters()
+    # reset_counters zeroes the report, not the recorder: the telemetry
+    # streams are cumulative, so take deltas from post-warm-up marks
+    steps_mark = sess_rec.counter("adapt.steps").value
+    loss_mark = sess_rec.hist("adapt.loss").count
     report = session.run(_requests(), drain_steps=True)
     adapt = report.serve_stats
+    tele_steps = int(sess_rec.counter("adapt.steps").value - steps_mark)
+    tele_losses = sess_rec.hist("adapt.loss").count - loss_mark
+    # one source of truth: the report's counters must reconcile with the
+    # recorder's adapt.* streams exactly
+    assert tele_steps == report.steps, (tele_steps, report.steps)
+    assert tele_losses == len(report.adapt_losses)
 
     retention = (adapt.tokens_per_s / base.tokens_per_s
                  if base.tokens_per_s else 0.0)
@@ -89,6 +102,10 @@ def run(verbose: bool = True) -> dict:
         "plan_mb": plan.planned_bytes / 2 ** 20,
         "budget_mb": BUDGET_MB,
         "quality": report.summary(),
+        "telemetry": {"adapt_steps": tele_steps,
+                      "bursts": int(sess_rec.counter("adapt.bursts").value),
+                      "baseline_tokens":
+                          int(base_rec.counter("serve.tokens").value)},
     }
     if verbose:
         print(f"serve-only        {base.tokens_per_s:7.1f} tok/s")

@@ -28,7 +28,7 @@ def _benches():
     from benchmarks import (activation_memory, adapt_throughput, fused_asi,
                             latency_ondevice, scenario_suite,
                             serve_throughput, shard_scaling, table1_imagenet,
-                            table4_tinyllama, warm_start)
+                            table4_tinyllama, telemetry_overhead, warm_start)
 
     # (name, run, derive, snap) — snap: out -> (config, metrics, series)
     # for benchmarks with a recorded BENCH_<name>.json snapshot
@@ -104,6 +104,18 @@ def _benches():
          lambda o: f"retention={o['retention']:.2f}x;"
                    f"adapt_steps_per_s={o['adapt_steps_per_s']:.1f}",
          None),
+        ("telemetry_overhead", telemetry_overhead.run,
+         lambda o: f"overhead={o['overhead_frac'] * 100:.2f}%;"
+                   f"parity={o['derived_matches_stats']}",
+         lambda o: ({"arch": o["arch"], "n_requests": o["n_requests"],
+                     "seed": o["seed"], "repeats": o["repeats"]},
+                    {"overhead_frac": round(float(o["overhead_frac"]), 4),
+                     "gate_frac": o["gate_frac"],
+                     "off_tok_s": round(float(o["off_tok_s"]), 1),
+                     "on_tok_s": round(float(o["on_tok_s"]), 1),
+                     "derived_matches_stats": o["derived_matches_stats"],
+                     "events_per_run": o["events_per_run"],
+                     "dropped": o["dropped"]}, None)),
         ("scenario_suite", scenario_suite.run,
          lambda o: f"recovered={o['recovered']};"
                    f"forgetting_phase0={o['forgetting_phase0']:.3f};"

@@ -30,6 +30,7 @@ from repro.configs.registry import get_config
 from repro.models import build_model
 from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
                                       ServeCfg)
+from repro.telemetry import Recorder
 
 ARCHS = [
     ("tinyllama-1.1b", "dense-gqa"),
@@ -68,14 +69,23 @@ def run(verbose: bool = True) -> dict:
         parity = ({r.uid: r.out for r in a} == {r.uid: r.out for r in b})
 
         # --- timed A/B (engines warmed so compiles don't count) -----------
-        cont = Engine(api, params, scfg)
-        seq = SequentialEngine(api, params, scfg)
+        cont_rec, seq_rec = Recorder(), Recorder()
+        cont = Engine(api, params, scfg, telemetry=cont_rec)
+        seq = SequentialEngine(api, params, scfg, telemetry=seq_rec)
         cont.run(_requests(2, max_new=2))           # warm-up: compile
         seq.run(_requests(2, max_new=2))
+        ctok0 = cont_rec.counter("serve.tokens").value
+        stok0 = seq_rec.counter("serve.tokens").value
         cont.run(_requests())
         c = cont.last_stats
         seq.run(_requests())
         s = seq.last_stats
+        # last_stats is a derived view over the recorder's counter streams
+        # (one source of truth) — the timed run's delta must reconcile
+        assert (cont_rec.counter("serve.tokens").value - ctok0
+                == c.generated_tokens)
+        assert (seq_rec.counter("serve.tokens").value - stok0
+                == s.generated_tokens)
 
         row = {
             "arch": arch, "family": family, "parity_batch1": parity,
@@ -140,6 +150,31 @@ def _trace_cfgs(pool_blocks: int):
     return dense, paged
 
 
+def derived_lifecycle_counts(events) -> dict:
+    """Request-lifecycle counts re-derived from a telemetry event slice —
+    the independent cross-check that the event stream and the stats view
+    (both fed by the same recorder) tell the same story."""
+    retired = [e for e in events
+               if e["kind"] == "I" and e["name"] == "serve.request.retired"]
+    return {
+        "requests": len(retired),
+        "generated_tokens": int(sum(e["attrs"]["tokens"] for e in retired)),
+        "first_tokens": sum(e["kind"] == "I"
+                            and e["name"] == "serve.request.first_token"
+                            for e in events),
+        "preemptions": sum(e["kind"] == "I"
+                           and e["name"] == "serve.request.preempted"
+                           for e in events),
+    }
+
+
+def _stats_counts(st) -> dict:
+    return {"requests": st.requests,
+            "generated_tokens": st.generated_tokens,
+            "first_tokens": st.requests,
+            "preemptions": st.preemptions}
+
+
 def run_trace(verbose: bool = True, *, n: int = 24, seed: int = 0,
               pool_blocks: int = TRACE_POOL_BLOCKS) -> dict:
     cfg = get_config(TRACE_ARCH).reduced()
@@ -148,16 +183,22 @@ def run_trace(verbose: bool = True, *, n: int = 24, seed: int = 0,
     dense_cfg, paged_cfg = _trace_cfgs(pool_blocks)
 
     def replay(scfg):
-        eng = Engine(api, params, scfg)
+        rec = Recorder(capacity=1 << 15)
+        eng = Engine(api, params, scfg, telemetry=rec)
         eng.run(make_trace(n, seed))                 # warm-up: compile
+        mark = len(rec.events)
         done = eng.run(make_trace(n, seed))          # timed replay
-        return eng, {r.uid: r.out for r in done}
+        return eng, {r.uid: r.out for r in done}, list(rec.events)[mark:]
 
-    dense_eng, dense_out = replay(dense_cfg)
-    paged_eng, paged_out = replay(paged_cfg)
+    dense_eng, dense_out, dense_ev = replay(dense_cfg)
+    paged_eng, paged_out, paged_ev = replay(paged_cfg)
     d, p = dense_eng.last_stats, paged_eng.last_stats
     parity = dense_out == paged_out
+    tele_ok = all(derived_lifecycle_counts(ev) == _stats_counts(st)
+                  for ev, st in ((dense_ev, d), (paged_ev, p)))
     out = {
+        "telemetry": {"derived_matches_stats": tele_ok,
+                      "events_timed_run": [len(dense_ev), len(paged_ev)]},
         "arch": TRACE_ARCH, "n_requests": n, "seed": seed,
         "max_batch": TRACE_MAX_BATCH, "max_len": TRACE_MAX_LEN,
         "page_block": TRACE_PAGE_BLOCK, "pool_blocks": pool_blocks,
@@ -187,6 +228,9 @@ def run_trace(verbose: bool = True, *, n: int = 24, seed: int = 0,
               f"{p.preemptions} preemptions)")
         print(f"  KV reduction {out['kv_reduction_x']:.2f}x, "
               f"paged/dense tok/s {out['tok_s_ratio']:.2f}")
+        print(f"  telemetry derived==stats: "
+              f"{'OK' if tele_ok else 'FAIL'} "
+              f"({out['telemetry']['events_timed_run']} events)")
     return out
 
 
@@ -203,6 +247,8 @@ if __name__ == "__main__":
         assert out["parity"], "paged engine diverged from dense on the trace"
         assert out["kv_reduction_x"] >= 2.0, (
             f"peak KV bytes only {out['kv_reduction_x']:.2f}x below dense")
+        assert out["telemetry"]["derived_matches_stats"], (
+            "telemetry-derived lifecycle counts diverged from last_stats")
     else:
         out = run()
         assert all(r["parity_batch1"] for r in out["rows"]), \

@@ -1,0 +1,86 @@
+"""Recorder-overhead gate: telemetry-on vs telemetry-off on the serve trace.
+
+The same seeded paged-serving traffic trace (``serve_throughput.make_trace``)
+is replayed by two engines: one with no recorder attached (aggregates only —
+the default every engine gets) and one with a fully enabled event-recording
+``Recorder``.  Best-of-``REPEATS`` tokens/s per arm bounds timing noise; the
+gate asserts the event plane costs < ``GATE_FRAC`` (2%) throughput, and that
+the lifecycle counts re-derived from the recorded events match the engine's
+``last_stats`` exactly (one source of truth, observed two ways).
+
+Run:  PYTHONPATH=src python -m benchmarks.telemetry_overhead
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.serve_throughput import (TRACE_ARCH, TRACE_POOL_BLOCKS,
+                                         _stats_counts, _trace_cfgs,
+                                         derived_lifecycle_counts,
+                                         make_trace)
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.runtime.serve_loop import Engine
+from repro.telemetry import Recorder
+
+N_REQUESTS = 24
+SEED = 0
+REPEATS = 5
+GATE_FRAC = 0.02
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = get_config(TRACE_ARCH).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    _, paged_cfg = _trace_cfgs(TRACE_POOL_BLOCKS)
+
+    # both arms share warmed engines, and the timed replays alternate
+    # off/on so slow machine-load drift hits both arms equally instead of
+    # biasing whichever arm ran second
+    off_eng = Engine(api, params, paged_cfg)
+    rec = Recorder(capacity=1 << 15)
+    on_eng = Engine(api, params, paged_cfg, telemetry=rec)
+    off_eng.run(make_trace(N_REQUESTS, SEED))        # warm-up: compile
+    on_eng.run(make_trace(N_REQUESTS, SEED))
+
+    off_tok_s = on_tok_s = 0.0
+    events = []
+    for _ in range(REPEATS):
+        off_eng.run(make_trace(N_REQUESTS, SEED))
+        off_tok_s = max(off_tok_s, off_eng.last_stats.tokens_per_s)
+        mark = len(rec.events)
+        on_eng.run(make_trace(N_REQUESTS, SEED))
+        on_tok_s = max(on_tok_s, on_eng.last_stats.tokens_per_s)
+        events = list(rec.events)[mark:]
+
+    derived = derived_lifecycle_counts(events)
+    parity = derived == _stats_counts(on_eng.last_stats)
+    overhead = 1.0 - (on_tok_s / off_tok_s) if off_tok_s else 1.0
+    out = {
+        "arch": TRACE_ARCH, "n_requests": N_REQUESTS, "seed": SEED,
+        "repeats": REPEATS, "gate_frac": GATE_FRAC,
+        "off_tok_s": off_tok_s, "on_tok_s": on_tok_s,
+        "overhead_frac": overhead,
+        "events_per_run": len(events), "dropped": rec.dropped,
+        "derived_matches_stats": parity,
+    }
+    if verbose:
+        print(f"telemetry off  {off_tok_s:7.1f} tok/s (best of {REPEATS})")
+        print(f"telemetry on   {on_tok_s:7.1f} tok/s "
+              f"({len(events)} events/run, {rec.dropped} dropped)")
+        print(f"overhead       {overhead * 100:+.2f}% "
+              f"(gate < {GATE_FRAC * 100:.0f}%)  "
+              f"derived==stats: {'OK' if parity else 'FAIL'}")
+    assert parity, (
+        f"event-derived lifecycle counts {derived} diverged from "
+        f"last_stats {_stats_counts(on_eng.last_stats)}")
+    assert rec.dropped == 0, "event ring overflowed during the trace"
+    assert overhead < GATE_FRAC, (
+        f"recorder overhead {overhead * 100:.2f}% exceeds the "
+        f"{GATE_FRAC * 100:.0f}% gate")
+    return out
+
+
+if __name__ == "__main__":
+    run()

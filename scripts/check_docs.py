@@ -25,7 +25,8 @@ DOCS = ["README.md", "DESIGN.md"]
 # examples that document the public API surface: must compile and must not
 # reach around repro.api into the launchers or runtime internals
 PUBLIC_API_EXAMPLES = ["examples/embed_api.py",
-                       "examples/scenario_domain_shift.py"]
+                       "examples/scenario_domain_shift.py",
+                       "examples/trace_serving.py"]
 BANNED_IMPORT = re.compile(r"^\s*(?:from|import)\s+repro\.(launch|runtime)",
                            re.MULTILINE)
 

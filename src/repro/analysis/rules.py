@@ -9,6 +9,7 @@ from repro.analysis import pallas_contract  # noqa: F401
 from repro.analysis import partition_coverage  # noqa: F401
 from repro.analysis import residual_contract  # noqa: F401
 from repro.analysis import shim_contract  # noqa: F401
+from repro.analysis import telemetry_contract  # noqa: F401
 from repro.analysis.core import RULES
 
 __all__ = ["RULES"]

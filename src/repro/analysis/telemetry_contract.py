@@ -1,0 +1,142 @@
+"""telemetry-contract: recorder calls stay host-side and out of traced code.
+
+The telemetry layer (DESIGN.md §13) is a pure host-side observer: spans,
+counters, gauges and histograms record Python floats/ints that already
+crossed the device boundary through the hot path's one explicit
+``jax.device_get`` per step.  Two ways to break that contract, both flagged
+under the ``telemetry-contract`` rule name:
+
+1. **recorder calls in traced code** — a ``rec.span()`` / ``rec.count()``
+   inside a jitted function (or anything reachable from one) either bakes
+   the trace-time value into the compiled program or crashes on a tracer;
+   either way the event stream lies.
+
+2. **device values recorded in loop-hot code** — in ``runtime/``,
+   ``ondevice/`` and ``scenarios/`` modules, passing a device-array value
+   to a recorder method inside a ``for``/``while`` body smuggles a deferred
+   transfer (and a live buffer reference) into the event ring.  Record the
+   host copies the step's ``jax.device_get`` already produced.
+
+Recorder-rooted calls are recognized syntactically: the final attribute is
+one of ``span/instant/count/observe/set_gauge`` and the access chain goes
+through a name that reads as a recorder (``tele``, ``telemetry``,
+``recorder``, ``rec``) — ``self.tele.count(...)``, ``rec.span(...)``.
+Suppress intentional exceptions with ``# repro-lint:
+disable=telemetry-contract``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, FileContext, call_name, rule
+from repro.analysis.jit_purity import (SYNC_SCOPES, _all_functions,
+                                       _functions, _is_host_call,
+                                       _jitted_names, _own_walk, _reachable,
+                                       _traced_roots)
+
+RECORDER_METHODS = ("span", "instant", "count", "observe", "set_gauge")
+_RECORDER_ROOTS = ("tele", "telemetry", "recorder", "rec")
+
+
+def _recorder_method(node: ast.Call) -> str | None:
+    """``"count"`` for ``self.tele.count(...)``-shaped calls, else None."""
+    func = node.func
+    if not (isinstance(func, ast.Attribute)
+            and func.attr in RECORDER_METHODS):
+        return None
+    chain = []
+    cur = func.value
+    while isinstance(cur, ast.Attribute):
+        chain.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        chain.append(cur.id)
+    if any(seg in _RECORDER_ROOTS for seg in chain):
+        return func.attr
+    return None
+
+
+def _is_device_call(name: str | None, jitted: set[str]) -> bool:
+    if name is None or _is_host_call(name):
+        return False
+    return (name.startswith(("jnp.", "lax.", "jax.numpy.", "jax.lax."))
+            or (name.startswith("jax.")
+                and not name.startswith("jax.device_get"))
+            or name in jitted or name.split(".")[-1] in jitted)
+
+
+def _device_names(fn: ast.FunctionDef, jitted: set[str]) -> set[str]:
+    """Names assigned (anywhere in ``fn``) from device-valued calls and not
+    later re-bound to a host-safe call."""
+    device: set[str] = set()
+    host: set[str] = set()
+    for node in _own_walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = call_name(node.value)
+            targets = [n.id for t in node.targets
+                       for n in ast.walk(t) if isinstance(n, ast.Name)]
+            if _is_host_call(name):
+                host.update(targets)
+            elif _is_device_call(name, jitted):
+                device.update(targets)
+    return device - host
+
+
+def _check_traced(ctx: FileContext, fn: ast.FunctionDef):
+    for node in _own_walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        meth = _recorder_method(node)
+        if meth is not None:
+            yield Finding(
+                "telemetry-contract", ctx.rel, node.lineno,
+                f"{fn.name}: recorder .{meth}() inside traced code — "
+                "telemetry is host-side only; record outside the jitted "
+                "body (after the step's jax.device_get)")
+
+
+def _check_loops(ctx: FileContext, fn: ast.FunctionDef, jitted: set[str]):
+    device = _device_names(fn, jitted)
+    seen_lines: set[int] = set()
+    for loop in _own_walk(fn):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        for node in ast.walk(loop):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            meth = _recorder_method(node)
+            if meth is None or node.lineno in seen_lines:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                offending = (
+                    (isinstance(arg, ast.Name) and arg.id in device)
+                    or (isinstance(arg, ast.Call)
+                        and _is_device_call(call_name(arg), jitted)))
+                if offending:
+                    seen_lines.add(node.lineno)
+                    yield Finding(
+                        "telemetry-contract", ctx.rel, node.lineno,
+                        f"{fn.name}: recorder .{meth}() records a device "
+                        "value inside a loop body — a deferred per-"
+                        "iteration transfer; record the host copy from "
+                        "the step's jax.device_get instead")
+                    break
+
+
+@rule("telemetry-contract",
+      doc="recorder calls must stay out of traced code and must not "
+          "record device values in runtime loop bodies")
+def check_telemetry_contract(ctx: FileContext):
+    if ctx.rel.startswith("src/repro/telemetry/"):
+        return                       # the recorder's own internals are exempt
+    fns = _functions(ctx.tree)
+    roots = _traced_roots(ctx.tree, fns)
+    for name in sorted(_reachable(fns, roots)):
+        yield from _check_traced(ctx, fns[name])
+
+    if any(ctx.rel.startswith(s) for s in SYNC_SCOPES):
+        jitted = _jitted_names(ctx.tree)
+        for fn in _all_functions(ctx.tree):
+            yield from _check_loops(ctx, fn, jitted)

@@ -19,7 +19,8 @@ One typed object graph unifies what used to be four CLIs' worth of wiring:
 this package; embed the API instead of shelling out to them.  DESIGN.md §9
 documents the object graph, state ownership, and the CLI-shim contract.
 """
-from repro.api.resolve import (add_arch_argument, parse_mesh, resolve_arch,
+from repro.api.resolve import (add_arch_argument, add_telemetry_arguments,
+                               parse_mesh, resolve_arch, telemetry_recorder,
                                warn_programmatic_use)
 from repro.api.session import (Adapter, Server, Session, Trainer,
                                data_source, demo_requests)
@@ -28,5 +29,6 @@ __all__ = [
     "Session", "Trainer", "Server", "Adapter",
     "data_source", "demo_requests",
     "resolve_arch", "add_arch_argument", "parse_mesh",
+    "add_telemetry_arguments", "telemetry_recorder",
     "warn_programmatic_use",
 ]

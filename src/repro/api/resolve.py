@@ -9,6 +9,9 @@ all share them.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
+import os
 import warnings
 
 from repro.configs.registry import ARCHS
@@ -35,6 +38,59 @@ def add_arch_argument(ap: argparse.ArgumentParser, required: bool = True):
         required=required, metavar="ARCH",
         help=f"architecture ({', '.join(ARCHS)}; underscore spellings "
              "accepted)")
+
+
+def add_telemetry_arguments(ap: argparse.ArgumentParser):
+    """The ``--telemetry``/``--profile-trace`` pair every launcher shares
+    (README flag matrix; DESIGN.md §13)."""
+    g = ap.add_argument_group("telemetry")
+    g.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                   help="record spans/counters/gauges for the run and write "
+                        "the event stream as JSONL here (validate with "
+                        "python -m repro.telemetry OUT.jsonl)")
+    g.add_argument("--profile-trace", default=None, metavar="DIR",
+                   help="also capture a jax.profiler trace into DIR "
+                        "(TraceAnnotation scopes, compile-vs-run split on "
+                        "first step, device memory analysis); implies "
+                        "telemetry recording")
+    return g
+
+
+@contextlib.contextmanager
+def telemetry_recorder(args):
+    """Recorder for a launcher run, from the ``add_telemetry_arguments``
+    flags; yields ``None`` when neither flag was given.
+
+    When recording: attaches the ``jax.profiler`` bridge if
+    ``--profile-trace`` was set, runs the body under the profiler, exports
+    the JSONL stream on exit, and prints one JSON line naming the outputs.
+    """
+    path = getattr(args, "telemetry", None)
+    trace_dir = getattr(args, "profile_trace", None)
+    if path is None and trace_dir is None:
+        yield None
+        return
+    from repro.telemetry import Recorder, export_chrome_trace, export_jsonl
+    rec = Recorder()
+    if trace_dir is not None:
+        rec.attach_profiler(trace_dir=trace_dir)
+    with rec.profile():
+        yield rec
+    out = {}
+    if path is not None:
+        export_jsonl(rec, path)
+        out["telemetry"] = path
+        out["events"] = len(rec.events)
+        out["dropped"] = rec.dropped
+    if trace_dir is not None:
+        # the recorder's own span timeline, loadable in chrome://tracing /
+        # Perfetto, next to the raw xplane dump jax.profiler wrote
+        chrome = os.path.join(trace_dir, "telemetry.trace.json")
+        os.makedirs(trace_dir, exist_ok=True)
+        export_chrome_trace(rec, chrome)
+        out["profile_trace"] = trace_dir
+        out["chrome_trace"] = chrome
+    print(json.dumps({"telemetry_out": out}))
 
 
 def parse_mesh(mesh) -> tuple[int, int] | None:

@@ -49,6 +49,7 @@ from repro.optim.optimizers import make_optimizer
 from repro.optim.schedules import warmup_cosine
 from repro.runtime.serve_loop import (Engine, Request, SequentialEngine,
                                       ServeCfg)
+from repro.telemetry import Recorder
 from repro.runtime.train_loop import (TrainLoopCfg, TrainResult,
                                       make_mesh_plan, make_train_step, run)
 
@@ -95,13 +96,18 @@ class Session:
 
     def __init__(self, cfg: ModelConfig, arch: str, model: ModelAPI, *,
                  reduced: bool = False, overrides: dict | None = None,
-                 seed: int = 0, ckpt_dir: str | None = None):
+                 seed: int = 0, ckpt_dir: str | None = None,
+                 telemetry: Recorder | None = None):
         self.cfg = cfg
         self.arch = arch
         self.model = model
         self.seed = seed
         self.ckpt_dir = ckpt_dir
         self.reduced = reduced
+        # one recorder shared by every handle this session creates: trainer
+        # steps, engine request lifecycles, and adaptation bursts land on a
+        # single timeline (None = aggregates only, no event ring)
+        self.telemetry = telemetry
         self.overrides = dict(overrides or {})
         self.step = 0
         self.rank_plan: dict | None = None      # planner output, shapes ASI state
@@ -119,13 +125,18 @@ class Session:
 
     @classmethod
     def from_config(cls, name: str, *, reduced: bool = False, seed: int = 0,
-                    ckpt_dir: str | None = None, **overrides) -> "Session":
+                    ckpt_dir: str | None = None,
+                    telemetry: Recorder | None = None,
+                    **overrides) -> "Session":
         """Resolve ``name`` (underscore spellings accepted), apply ``reduced``
         and any non-``None`` ``ModelConfig`` overrides, validate the kernel
         backend, and build the ``ModelAPI`` — once.
 
         ``None`` override values are dropped, so CLI shims can forward
         optional flags verbatim (``asi_rank=args.asi_rank``).
+
+        ``telemetry`` takes a ``repro.telemetry.Recorder``; every handle the
+        session builds records its lifecycle into it (DESIGN.md §13).
         """
         arch = resolve_arch(name)
         if arch not in ARCHS:
@@ -138,13 +149,15 @@ class Session:
             cfg = cfg.replace(**applied)
         dispatch.resolve(cfg.kernel_backend)    # invalid flag fails fast here
         return cls(cfg, arch, build_model(cfg), reduced=reduced,
-                   overrides=applied, seed=seed, ckpt_dir=ckpt_dir)
+                   overrides=applied, seed=seed, ckpt_dir=ckpt_dir,
+                   telemetry=telemetry)
 
     def derive(self, **overrides) -> "Session":
         """A sibling session with extra config overrides (fresh state)."""
         return Session.from_config(
             self.arch, reduced=self.reduced, seed=self.seed,
-            ckpt_dir=self.ckpt_dir, **{**self.overrides, **overrides})
+            ckpt_dir=self.ckpt_dir, telemetry=self.telemetry,
+            **{**self.overrides, **overrides})
 
     # --- state ------------------------------------------------------------
 
@@ -377,7 +390,8 @@ class Trainer:
                                          donate=donate)
             self._donated = donate
         res = run(self._step_fn, s.params, s.opt_state, s.asi_state,
-                  self.data, self.loop_cfg, hooks=hooks, plan=self.plan)
+                  self.data, self.loop_cfg, hooks=hooks, plan=self.plan,
+                  telemetry=s.telemetry)
         s.params, s.opt_state, s.asi_state = (res.params, res.opt_state,
                                               res.asi_state)
         s.step = res.step
@@ -414,7 +428,7 @@ class Server:
                                    cache=cache, prefill_chunk=prefill_chunk,
                                    page_block=page_block,
                                    pool_blocks=pool_blocks),
-                          seed=session.seed)
+                          seed=session.seed, telemetry=session.telemetry)
         session._servers.add(self)      # trainers must not donate our params
 
     def run(self, requests: list[Request], on_retire=None) -> list[Request]:
@@ -596,7 +610,8 @@ class Adapter:
                            burst_steps=self.burst_steps,
                            total_steps=self.steps, batch_size=self.batch,
                            seq_len=self.seq_len, replay_size=self.replay_size),
-                probe_batch=self._data.batch(10_000), seed=s.seed)
+                probe_batch=self._data.batch(10_000), seed=s.seed,
+                telemetry=s.telemetry)
             ds.replay = self.replay               # observe() and run() share it
             ds.report.retired = self._retired_before_ds
             # seed the pre-adaptation probe baseline here (not only in

@@ -59,44 +59,50 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("auto", "pallas", "reference"))
     ap.add_argument("--ckpt-dir", default="/tmp/repro_adapt_ckpt")
     ap.add_argument("--seed", type=int, default=0)
+    api.add_telemetry_arguments(ap)
     return ap
 
 
 def main(argv=None):
     api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
-    sess = api.Session.from_config(args.arch, reduced=args.reduced,
-                                   seed=args.seed, compress="asi",
-                                   kernel_backend=args.kernel_backend)
-    if sess.cfg.family == "encdec":
-        raise SystemExit("encdec serving needs audio frames; on-device "
-                         "adaptation currently targets decoder-only archs")
-    adapter = sess.adapter(
-        mem_budget_mb=args.mem_budget_mb, steps=args.steps,
-        adapt_every=args.adapt_every, burst_steps=args.burst_steps,
-        replay_size=args.replay_size, batch=args.batch, seq_len=args.seq_len,
-        calib_batches=args.calib_batches, rank_select=args.rank_select,
-        lr=args.lr, max_batch=args.max_batch, max_len=args.max_len,
-        temperature=args.temperature)
-    print(json.dumps(adapter.ledger_report()))
-    print(json.dumps(adapter.plan_report()))
-    if not adapter.plan_respects_budget:
-        raise SystemExit("planner produced a plan the ledger prices over "
-                         "budget — this is a bug, not a user error")
-    adapter.device_session()                  # wires ASI ranks + optimizer
-    if sess.optimizer_substitution is not None:
-        print(json.dumps(
-            {"optimizer_substitution": sess.optimizer_substitution}))
-    report = adapter.run(api.demo_requests(args.requests, args.max_new))
-    s = report.serve_stats
-    print(json.dumps({"serving": {
-        "requests": s.requests, "generated_tokens": s.generated_tokens,
-        "decode_steps": s.decode_steps,
-        "tokens_per_s": round(s.tokens_per_s, 1),
-        "ttft_mean_s": round(s.ttft_mean_s, 4)}}))
-    print(json.dumps({"adaptation": report.summary()}))
-    sess.save(args.ckpt_dir, meta={"plan": adapter.plan.summary()})
-    print(json.dumps({"ckpt_dir": args.ckpt_dir, "ckpt_step": report.steps}))
+    with api.telemetry_recorder(args) as rec:
+        sess = api.Session.from_config(args.arch, reduced=args.reduced,
+                                       seed=args.seed, compress="asi",
+                                       kernel_backend=args.kernel_backend,
+                                       telemetry=rec)
+        if sess.cfg.family == "encdec":
+            raise SystemExit("encdec serving needs audio frames; on-device "
+                             "adaptation currently targets decoder-only "
+                             "archs")
+        adapter = sess.adapter(
+            mem_budget_mb=args.mem_budget_mb, steps=args.steps,
+            adapt_every=args.adapt_every, burst_steps=args.burst_steps,
+            replay_size=args.replay_size, batch=args.batch,
+            seq_len=args.seq_len, calib_batches=args.calib_batches,
+            rank_select=args.rank_select, lr=args.lr,
+            max_batch=args.max_batch, max_len=args.max_len,
+            temperature=args.temperature)
+        print(json.dumps(adapter.ledger_report()))
+        print(json.dumps(adapter.plan_report()))
+        if not adapter.plan_respects_budget:
+            raise SystemExit("planner produced a plan the ledger prices over "
+                             "budget — this is a bug, not a user error")
+        adapter.device_session()              # wires ASI ranks + optimizer
+        if sess.optimizer_substitution is not None:
+            print(json.dumps(
+                {"optimizer_substitution": sess.optimizer_substitution}))
+        report = adapter.run(api.demo_requests(args.requests, args.max_new))
+        s = report.serve_stats
+        print(json.dumps({"serving": {
+            "requests": s.requests, "generated_tokens": s.generated_tokens,
+            "decode_steps": s.decode_steps,
+            "tokens_per_s": round(s.tokens_per_s, 1),
+            "ttft_mean_s": round(s.ttft_mean_s, 4)}}))
+        print(json.dumps({"adaptation": report.summary()}))
+        sess.save(args.ckpt_dir, meta={"plan": adapter.plan.summary()})
+        print(json.dumps({"ckpt_dir": args.ckpt_dir,
+                          "ckpt_step": report.steps}))
     return report
 
 

@@ -50,19 +50,26 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write report.curves() JSON here")
+    api.add_telemetry_arguments(ap)
     return ap
+
+
+# launcher-only flags that are not ScenarioCfg fields
+_NON_CFG = ("out", "telemetry", "profile_trace")
 
 
 def main(argv=None):
     api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
-    kw = {k: v for k, v in vars(args).items() if k != "out" and v is not None}
+    kw = {k: v for k, v in vars(args).items()
+          if k not in _NON_CFG and v is not None}
     kw["budget_schedule"] = (tuple(args.budget_schedule)
                              if args.budget_schedule else None)
     print(json.dumps({"config": kw | {"budget_schedule":
                                       args.budget_schedule}}))
-    report = run_scenario(**kw)
-    print(json.dumps({"summary": report.summary()}))
+    with api.telemetry_recorder(args) as rec:
+        report = run_scenario(telemetry=rec, **kw)
+        print(json.dumps({"summary": report.summary()}))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report.curves(), f, indent=1)

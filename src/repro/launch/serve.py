@@ -44,28 +44,32 @@ def build_parser() -> argparse.ArgumentParser:
                     help="physical blocks in the shared pool; 0 sizes it to "
                          "dense-equivalent capacity (--cache paged)")
     ap.add_argument("--seed", type=int, default=0)
+    api.add_telemetry_arguments(ap)
     return ap
 
 
 def main(argv=None):
     api.warn_programmatic_use(__name__, argv)
     args = build_parser().parse_args(argv)
-    sess = api.Session.from_config(args.arch, reduced=args.reduced,
-                                   seed=args.seed)
-    if sess.cfg.family == "encdec":
-        raise SystemExit("encdec serving needs audio frames; use "
-                         "examples/serve_decode.py for the full pipeline")
-    server = sess.server(engine=args.engine, max_batch=args.max_batch,
-                         max_len=args.max_len, temperature=args.temperature,
-                         cache=args.cache, prefill_chunk=args.prefill_chunk,
-                         page_block=args.page_block,
-                         pool_blocks=args.pool_blocks)
-    done = server.run(api.demo_requests(args.requests, args.max_new))
-    for r in done:
-        print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out,
-                          "ttft_s": (None if r.ttft_s is None
-                                     else round(r.ttft_s, 4))}))
-    print(json.dumps(server.stats_dict()))
+    with api.telemetry_recorder(args) as rec:
+        sess = api.Session.from_config(args.arch, reduced=args.reduced,
+                                       seed=args.seed, telemetry=rec)
+        if sess.cfg.family == "encdec":
+            raise SystemExit("encdec serving needs audio frames; use "
+                             "examples/serve_decode.py for the full pipeline")
+        server = sess.server(engine=args.engine, max_batch=args.max_batch,
+                             max_len=args.max_len,
+                             temperature=args.temperature,
+                             cache=args.cache,
+                             prefill_chunk=args.prefill_chunk,
+                             page_block=args.page_block,
+                             pool_blocks=args.pool_blocks)
+        done = server.run(api.demo_requests(args.requests, args.max_new))
+        for r in done:
+            print(json.dumps({"uid": r.uid, "prompt": r.prompt, "out": r.out,
+                              "ttft_s": (None if r.ttft_s is None
+                                         else round(r.ttft_s, 4))}))
+        print(json.dumps(server.stats_dict()))
     return done
 
 

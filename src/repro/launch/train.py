@@ -60,6 +60,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--fail-at", type=int, default=-1,
                     help="inject a simulated node failure at this step")
     ap.add_argument("--seed", type=int, default=0)
+    api.add_telemetry_arguments(ap)
     return ap
 
 
@@ -74,20 +75,23 @@ def main(argv=None):
                              layout=args.layout, mesh=args.mesh)
     except ValueError as e:
         ap.error(str(e))
-    sess = api.Session.from_config(
-        args.arch, reduced=args.reduced, seed=args.seed,
-        compress=args.compress, kernel_backend=args.kernel_backend,
-        asi_rank=args.asi_rank, asi_last_k=args.asi_last_k)
-    trainer = sess.trainer(
-        steps=args.steps, seq_len=args.seq_len, batch=args.batch,
-        lr=args.lr, layout=args.layout, mesh=args.mesh,
-        grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
-        ckpt_every=args.ckpt_every, fail_at=args.fail_at)
-    if trainer.mesh_info is not None:
-        print(json.dumps(trainer.mesh_info))
-    res = trainer.fit(on_log=lambda s, m: print(
-        json.dumps({"step": s, **{k: round(v, 4) for k, v in m.items()}})))
-    print(json.dumps(trainer.summary(res)))
+    with api.telemetry_recorder(args) as rec:
+        sess = api.Session.from_config(
+            args.arch, reduced=args.reduced, seed=args.seed,
+            compress=args.compress, kernel_backend=args.kernel_backend,
+            asi_rank=args.asi_rank, asi_last_k=args.asi_last_k,
+            telemetry=rec)
+        trainer = sess.trainer(
+            steps=args.steps, seq_len=args.seq_len, batch=args.batch,
+            lr=args.lr, layout=args.layout, mesh=args.mesh,
+            grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, fail_at=args.fail_at)
+        if trainer.mesh_info is not None:
+            print(json.dumps(trainer.mesh_info))
+        res = trainer.fit(on_log=lambda s, m: print(
+            json.dumps({"step": s,
+                        **{k: round(v, 4) for k, v in m.items()}})))
+        print(json.dumps(trainer.summary(res)))
     return res
 
 

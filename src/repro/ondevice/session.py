@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.serve_loop import Engine, Request, ServeCfg
+from repro.telemetry import Recorder
 
 Array = jax.Array
 
@@ -160,14 +161,20 @@ class DeviceSession:
 
     def __init__(self, api, params, train_step, opt_state, asi_state,
                  serve_cfg: ServeCfg, cfg: SessionCfg,
-                 probe_batch: dict | None = None, seed: int = 0):
+                 probe_batch: dict | None = None, seed: int = 0,
+                 telemetry: Recorder | None = None):
         self.api = api
         self.params = params
         self.opt_state = opt_state
         self.asi_state = asi_state
         self.cfg = cfg
         self._train_step = train_step
-        self.engine = Engine(api, params, serve_cfg, seed=seed)
+        # one recorder spans serving and adaptation: burst spans interleave
+        # with the engine's request lifecycle on a single timeline
+        self.tele = telemetry if telemetry is not None \
+            else Recorder(enabled=False)
+        self.engine = Engine(api, params, serve_cfg, seed=seed,
+                             telemetry=telemetry)
         self.replay = ReplayBuffer(cfg.replay_size, cfg.seq_len, seed=seed)
         self._probe_batch = probe_batch
         self._eval_loss = jax.jit(
@@ -202,29 +209,40 @@ class DeviceSession:
     def adapt_steps(self, n: int) -> list[float]:
         """Run up to ``n`` fixed-shape replay steps; updates the engine's
         params in place (next decode step serves the new weights)."""
+        rec = self.tele
         losses = []
         t0 = time.perf_counter()
-        for _ in range(n):
-            if len(self.replay) == 0 or self._step_count >= self.cfg.total_steps:
-                break
-            batch = self.replay.sample_batch(self.cfg.batch_size)
-            self.params, self.opt_state, self.asi_state, metrics = \
-                self._train_step(self.params, self.opt_state, self.asi_state,
-                                 batch, jnp.int32(self._step_count))
-            losses.append(metrics["loss"])   # device array; convert after loop
-            self._step_count += 1
-        # one sync for the whole burst (also makes adapt_wall_s honest:
-        # device_get blocks until every queued step has finished)
-        losses = [float(v) for v in jax.device_get(losses)]
-        self.engine.params = self.params          # weights go live for decode
+        with rec.span("adapt.burst", burst=self.report.bursts + 1,
+                      budget=n):
+            for _ in range(n):
+                if (len(self.replay) == 0
+                        or self._step_count >= self.cfg.total_steps):
+                    break
+                batch = self.replay.sample_batch(self.cfg.batch_size)
+                self.params, self.opt_state, self.asi_state, metrics = \
+                    self._train_step(self.params, self.opt_state,
+                                     self.asi_state, batch,
+                                     jnp.int32(self._step_count))
+                losses.append(metrics["loss"])   # device array; convert
+                self._step_count += 1            # after the loop
+            # one sync for the whole burst (also makes adapt_wall_s honest:
+            # device_get blocks until every queued step has finished)
+            losses = [float(v) for v in jax.device_get(losses)]
+            self.engine.params = self.params      # weights live for decode
         self.report.adapt_wall_s += time.perf_counter() - t0
         self.report.adapt_losses.extend(losses)
         self.report.steps = self._step_count
+        rec.count("adapt.steps", len(losses))
+        for v in losses:
+            rec.observe("adapt.loss", v)
         if losses:
             self.report.bursts += 1
+            rec.count("adapt.bursts")
+            rec.set_gauge("adapt.loss_last", losses[-1])
             pl = self.probe_loss()
             if pl is not None:
                 self.report.probe_losses.append(pl)
+                rec.set_gauge("adapt.probe_loss", pl)
             if self.on_burst is not None:
                 self.on_burst(self)
         return losses

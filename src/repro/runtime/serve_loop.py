@@ -28,18 +28,23 @@ request stream and drives all active rows in lock-step:
 
 The scheduler (plain Python around the jitted calls) retires finished
 requests, admits pending ones into freed slots (``Request.arrival_step``
-gates admission for traffic-trace replay), and records throughput counters
-(tokens/s, TTFT percentiles, peak cache bytes) in ``Engine.last_stats``.
+gates admission for traffic-trace replay), and feeds the telemetry
+recorder: the full request lifecycle (queued → admitted → prefill-chunk×N
+→ first-token → decode → preempted/retired) plus TTFT/TPOT/queue-delay
+histograms and paged-pool occupancy gauges, all piggybacked on the
+existing per-step host transfer — telemetry adds **zero** device syncs
+(the ``telemetry-contract`` lint rule keeps it that way).
+``Engine.last_stats`` is a thin per-run view derived from the recorder's
+aggregates (DESIGN.md §13).
 
 ``SequentialEngine`` preserves the original one-request-at-a-time loop
 (per-token Python prefill, host-side argmax) as the A/B baseline for
-``benchmarks/serve_throughput.py`` and the batch=1 parity tests.
+``benchmarks/serve_throughput.py`` and the parity tests.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Any, Sequence
 
 import jax
@@ -47,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.paged_kv import PagedKVManager
+from repro.telemetry import Recorder
 
 Array = jax.Array
 
@@ -100,20 +106,44 @@ class ServeStats:
     peak_used_blocks: int = 0     # paged: high-water mark of pool blocks
 
 
-def _mk_stats(results: list[Request], gen: int, prefills: int, steps: int,
-              wall: float, *, chunks: int = 0, preemptions: int = 0,
-              peak_cache_bytes: int = 0,
-              peak_used_blocks: int = 0) -> ServeStats:
-    ttfts = [r.ttft_s for r in results if r.ttft_s is not None]
+#: recorder counters that back ``ServeStats`` (``serve.<name>``)
+_SERVE_COUNTERS = ("requests", "tokens", "prefill_calls", "decode_steps",
+                   "prefill_chunks", "preemptions")
+
+
+def _serve_marks(rec: Recorder) -> dict:
+    """Snapshot the serve counters/histograms at run start so per-run
+    stats can be derived by delta from a (possibly session-shared,
+    possibly multi-run) recorder."""
+    marks = {name: rec.counter(f"serve.{name}").value
+             for name in _SERVE_COUNTERS}
+    marks["ttft"] = rec.hist("serve.ttft_s").count
+    marks["t0"] = rec.now()
+    return marks
+
+
+def _stats_from_recorder(rec: Recorder, marks: dict, *,
+                         peak_cache_bytes: int = 0,
+                         peak_used_blocks: int = 0) -> ServeStats:
+    """``ServeStats`` as a thin view over the recorder aggregates: every
+    counter/percentile is computed from the telemetry plane, so the stats
+    surface and an exported event stream can never disagree."""
+    d = {n: rec.counter(f"serve.{n}").value - marks[n]
+         for n in _SERVE_COUNTERS}
+    ttfts = rec.hist("serve.ttft_s").values[int(marks["ttft"]):]
+    wall = rec.now() - marks["t0"]
+    gen = d["tokens"]
     return ServeStats(
-        requests=len(results), generated_tokens=gen,
-        prefill_calls=prefills, decode_steps=steps, wall_s=wall,
+        requests=int(d["requests"]), generated_tokens=int(gen),
+        prefill_calls=int(d["prefill_calls"]),
+        decode_steps=int(d["decode_steps"]), wall_s=wall,
         tokens_per_s=gen / wall if wall > 0 else 0.0,
         ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
         ttft_max_s=float(np.max(ttfts)) if ttfts else 0.0,
         ttft_p50_s=float(np.percentile(ttfts, 50)) if ttfts else 0.0,
         ttft_p99_s=float(np.percentile(ttfts, 99)) if ttfts else 0.0,
-        prefill_chunks=chunks, preemptions=preemptions,
+        prefill_chunks=int(d["prefill_chunks"]),
+        preemptions=int(d["preemptions"]),
         peak_cache_bytes=peak_cache_bytes,
         peak_used_blocks=peak_used_blocks)
 
@@ -148,12 +178,17 @@ class _PrefillJob:
 class Engine:
     """Single-host continuous-batching engine over a ModelAPI."""
 
-    def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0):
+    def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0,
+                 telemetry: Recorder | None = None):
         self.api = model_api
         self.params = params
         self.cfg = cfg
         self.key = jax.random.PRNGKey(seed)
         self.last_stats = ServeStats()
+        # aggregates stay on even without an injected recorder (last_stats
+        # derives from them); the event plane is off unless one is passed
+        self.tele = telemetry if telemetry is not None \
+            else Recorder(enabled=False)
         self._prefill_jit: dict = {}      # (prompt_len, embeds_shape) -> fn
         self._chunk_jit: dict = {}        # (chunk, embeds_shape) -> fn
         self._prime = None                # lazy jit of api.prime_cross
@@ -380,7 +415,9 @@ class Engine:
 
     def run(self, requests: list[Request], on_retire=None) -> list[Request]:
         """Serve ``requests``; returns them in completion order.  Counters
-        for the run land in ``self.last_stats``.
+        for the run land in ``self.last_stats`` (derived from the telemetry
+        recorder) and, when an enabled recorder was injected, the full
+        request-lifecycle event stream lands in ``self.tele``.
 
         Requests are admitted FIFO, gated by ``arrival_step`` against the
         decode-step clock (when the engine is fully idle the clock jumps to
@@ -390,6 +427,14 @@ class Engine:
         copying this loop.  The callback runs between jitted steps, so it may
         mutate ``self.params`` (live weight swaps) — in-flight slots keep
         decoding under whatever params the next step reads."""
+        rec = self.tele
+        marks = _serve_marks(rec)
+        with rec.span("serve.run", cache=self.cfg.cache, max_batch=self._B,
+                      requests=len(requests)):
+            return self._run_scheduler(requests, on_retire, rec, marks)
+
+    def _run_scheduler(self, requests: list[Request], on_retire, rec: Recorder,
+                       marks: dict) -> list[Request]:
         cfg = self.cfg
         B = self._B
         paged = self._paged
@@ -414,14 +459,15 @@ class Engine:
                         f"request {r.uid}: worst case needs "
                         f"{-(-worst // bs)} blocks but the pool has "
                         f"{usable} usable — raise ServeCfg.pool_blocks")
-        t0 = time.perf_counter()
-        # zero-budget requests complete immediately (matches the sequential
-        # engine, whose generate loop never runs for them)
-        results: list[Request] = [r for r in requests if r.max_new_tokens <= 0]
-        for r in results:
-            r.done = True
-            if on_retire is not None:
-                on_retire(r)
+        t0 = marks["t0"]
+        prof = rec.profiler
+        ctok = rec.counter("serve.tokens")
+        cpre = rec.counter("serve.prefill_calls")
+        cstep = rec.counter("serve.decode_steps")
+        cchunk = rec.counter("serve.prefill_chunks")
+        cpree = rec.counter("serve.preemptions")
+        creq = rec.counter("serve.requests")
+        results: list[Request] = []
         pending = collections.deque(r for r in requests
                                     if r.max_new_tokens > 0)
         slots: list[Request | None] = [None] * B
@@ -432,13 +478,16 @@ class Engine:
             cache = self.api.init_cache(B, cfg.max_len)
             mgr = None
         persistent_bytes = _tree_bytes(cache)
+        rec.set_gauge("serve.cache.persistent_bytes", persistent_bytes)
+        if paged:
+            rec.set_gauge("serve.kv.pool_blocks", self._pool_blocks)
         transient_shape = jax.eval_shape(
             lambda: self.api.init_cache(1, cfg.max_len))
         state = {"tok": jnp.zeros((B,), jnp.int32),
                  "pos": jnp.zeros((B,), jnp.int32),
                  "rem": jnp.zeros((B,), jnp.int32),
                  "active": jnp.zeros((B,), bool)}
-        gen = prefills = steps = chunks = preempts = clock = 0
+        clock = 0
         pos_h = [0] * B               # host mirror of per-slot positions
         admit_seq = [0] * B           # admission order (preemption victims)
         seq = 0
@@ -446,9 +495,17 @@ class Engine:
         table_dirty = False
         job: _PrefillJob | None = None
         arr_wall: dict[int, float] = {}
+        ft_wall: dict[int, float] = {}  # first-token wall per uid (TPOT)
 
         def _retire(req: Request):
             req.done = True
+            creq.add(1)
+            rec.instant("serve.request.retired", uid=req.uid,
+                        tokens=len(req.out))
+            ftw = ft_wall.pop(req.uid, None)
+            if ftw is not None and len(req.out) > 1:
+                rec.observe("serve.tpot_s",
+                            (rec.now() - ftw) / (len(req.out) - 1))
             results.append(req)
             if on_retire is not None:
                 on_retire(req)
@@ -463,7 +520,7 @@ class Engine:
         def _finish_admit(jb_logits, slot, req, cache):
             """Sample the first token off the prefill logits and install the
             slot (shared between the legacy and chunked paths)."""
-            nonlocal gen, table_dirty, seq
+            nonlocal table_dirty, seq
             self.key, sub = jax.random.split(self.key)
             pos0 = len(req.prompt) + _prefix_len(req, family) + len(req.out)
             rem0 = req.max_new_tokens - len(req.out)
@@ -471,9 +528,16 @@ class Engine:
                                               pos0, rem0, sub)
             tok0_h, done0_h = jax.device_get((tok0, done0))
             req.out.append(int(tok0_h))
+            rec.instant("serve.request.admitted", uid=req.uid, slot=slot,
+                        pos0=pos0)
             if req.ttft_s is None:
-                req.ttft_s = time.perf_counter() - arr_wall.get(req.uid, t0)
-            gen += 1
+                now_ft = rec.now()
+                req.ttft_s = now_ft - arr_wall.get(req.uid, t0)
+                rec.observe("serve.ttft_s", req.ttft_s)
+                rec.instant("serve.request.first_token", uid=req.uid,
+                            ttft_s=req.ttft_s)
+                ft_wall[req.uid] = now_ft
+            ctok.add(1)
             if bool(done0_h):
                 _retire(req)
                 if paged:
@@ -487,20 +551,33 @@ class Engine:
             return state2, cache
 
         def _preempt(victim: int):
-            nonlocal table_dirty, preempts
+            nonlocal table_dirty
             req = slots[victim]
             slots[victim] = None
             state["active"] = state["active"].at[victim].set(False)
             mgr.release(victim)
             table_dirty = True
             pending.appendleft(req)
-            preempts += 1
+            cpree.add(1)
+            rec.instant("serve.request.preempted", uid=req.uid, slot=victim)
+
+        # zero-budget requests complete immediately (matches the sequential
+        # engine, whose generate loop never runs for them)
+        for r in requests:
+            if r.max_new_tokens <= 0:
+                rec.instant("serve.request.queued", uid=r.uid,
+                            prompt_len=len(r.prompt),
+                            arrival_step=r.arrival_step)
+                _retire(r)
 
         while pending or job is not None or any(s is not None for s in slots):
-            now = time.perf_counter()
+            now = rec.now()
             for r in pending:
                 if r.arrival_step <= clock and r.uid not in arr_wall:
                     arr_wall[r.uid] = now
+                    rec.instant("serve.request.queued", uid=r.uid,
+                                prompt_len=len(r.prompt),
+                                arrival_step=r.arrival_step)
             # --- admission -------------------------------------------------
             if chunk == 0:
                 # legacy: fill every free slot with a whole-prompt prefill
@@ -508,9 +585,13 @@ class Engine:
                     while (slots[slot] is None and pending
                            and pending[0].arrival_step <= clock):
                         req = pending.popleft()
-                        logits, pcache = self._prefill(req)
-                        cache = self._write_slot(cache, pcache, slot)
-                        prefills += 1
+                        rec.observe("serve.queue_delay_s",
+                                    rec.now() - arr_wall.get(req.uid, t0))
+                        with rec.span("serve.prefill", uid=req.uid,
+                                      prompt_len=len(req.prompt)):
+                            logits, pcache = self._prefill(req)
+                            cache = self._write_slot(cache, pcache, slot)
+                        cpre.add(1)
                         state, cache = _finish_admit(logits, slot, req, cache)
             else:
                 # chunked: start at most one job, advance it one chunk per
@@ -525,15 +606,19 @@ class Engine:
                                  + len(req.out))
                         if not paged or mgr.admit(slot, total + 1):
                             pending.popleft()
+                            rec.observe("serve.queue_delay_s",
+                                        rec.now() - arr_wall.get(req.uid, t0))
                             job = self._start_job(req, slot, family)
-                            prefills += 1
+                            cpre.add(1)
                             if paged:
                                 table_dirty = True
                         # else: pool exhausted — back-pressure, retry after
                         # retirements free blocks
                 if job is not None:
-                    self._advance_job(job)
-                    chunks += 1
+                    with rec.span("serve.prefill_chunk", uid=job.req.uid,
+                                  done=job.done):
+                        self._advance_job(job)
+                    cchunk.add(1)
                     if job.done == len(job.items):
                         if paged:
                             row = jnp.asarray(mgr.table[job.slot])
@@ -569,48 +654,70 @@ class Engine:
                     table_dirty = False
                 if not any(s is not None for s in slots):
                     continue
+                rec.set_gauge("serve.kv.used_blocks", mgr.used_blocks)
             self.key, sub = jax.random.split(self.key)
-            if paged:
-                cache, state, tok, finished = self._step_paged(
-                    self.params, cache, state, table_dev, sub)
-            else:
-                cache, state, tok, finished = self._step(self.params, cache,
-                                                         state, sub)
-            steps += 1
+            if prof is not None:
+                # one-shot compile-vs-run split (AOT lower+compile timing
+                # and memory_analysis gauges), behind --profile-trace only
+                if paged:
+                    prof.compile_split("serve.decode_step", self._step_paged,
+                                       self.params, cache, state, table_dev,
+                                       sub)
+                else:
+                    prof.compile_split("serve.decode_step", self._step,
+                                       self.params, cache, state, sub)
+            n_act = sum(1 for s in slots if s is not None)
+            with rec.span("serve.decode_step", step=clock, active=n_act):
+                if paged:
+                    cache, state, tok, finished = self._step_paged(
+                        self.params, cache, state, table_dev, sub)
+                else:
+                    cache, state, tok, finished = self._step(
+                        self.params, cache, state, sub)
+                # the one per-step host transfer telemetry piggybacks on
+                tok_h, fin_h = jax.device_get((tok, finished))
+            cstep.add(1)
             clock += 1
-            tok_h, fin_h = jax.device_get((tok, finished))
             for slot, req in enumerate(slots):
                 if req is None:
                     continue
                 req.out.append(int(tok_h[slot]))
-                gen += 1
+                ctok.add(1)
                 pos_h[slot] += 1
                 if bool(fin_h[slot]):
                     _retire(req)
                     _free(slot)
 
         peak_bytes = persistent_bytes
-        if prefills > 0:
+        if cpre.value > marks["prefill_calls"]:
             peak_bytes += _tree_bytes(transient_shape)
-        self.last_stats = _mk_stats(
-            results, gen, prefills, steps, time.perf_counter() - t0,
-            chunks=chunks, preemptions=preempts, peak_cache_bytes=peak_bytes,
+        if paged:
+            rec.set_gauge("serve.kv.used_blocks", mgr.used_blocks)
+        if prof is not None:
+            prof.live_buffer_gauges("serve.live")
+        self.last_stats = _stats_from_recorder(
+            rec, marks, peak_cache_bytes=peak_bytes,
             peak_used_blocks=mgr.peak_used_blocks if paged else 0)
         return results
 
 
 class SequentialEngine:
     """The original strictly sequential loop: one slot at a time, a fresh
-    cache per wave, per-token Python prefill, and a host argmax round-trip
-    per generated token.  Kept as the A/B baseline — the continuous engine
-    must beat this in tokens/s and match it token-for-token at batch=1."""
+    cache per request, per-token Python prefill, and a host argmax
+    round-trip per generated token.  Kept as the A/B baseline — the
+    continuous engine must beat this in tokens/s and match it
+    token-for-token at any ``max_batch`` (the paged-serving property tests
+    use this engine as their oracle)."""
 
-    def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0):
+    def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0,
+                 telemetry: Recorder | None = None):
         self.api = model_api
         self.params = params
         self.cfg = cfg
         self.key = jax.random.PRNGKey(seed)
         self.last_stats = ServeStats()
+        self.tele = telemetry if telemetry is not None \
+            else Recorder(enabled=False)
         self._decode = jax.jit(
             lambda p, c, t, pos: model_api.decode_step(p, c, t, pos))
 
@@ -630,15 +737,32 @@ class SequentialEngine:
         return jnp.asarray(v)
 
     def run(self, requests: list[Request], on_retire=None) -> list[Request]:
-        t0 = time.perf_counter()
+        rec = self.tele
+        marks = _serve_marks(rec)
+        with rec.span("serve.run", cache="sequential",
+                      max_batch=self.cfg.max_batch, requests=len(requests)):
+            results = self._run_waves(requests, on_retire, rec, marks["t0"])
+        self.last_stats = _stats_from_recorder(rec, marks)
+        return results
+
+    def _run_waves(self, requests: list[Request], on_retire, rec: Recorder,
+                   t0: float) -> list[Request]:
+        ctok = rec.counter("serve.tokens")
+        cstep = rec.counter("serve.decode_steps")
+        creq = rec.counter("serve.requests")
         pending = list(requests)
         results = []
-        gen = steps = 0
         while pending:
             active = pending[: self.cfg.max_batch]
             pending = pending[len(active):]
-            cache = self.api.init_cache(self.cfg.max_batch, self.cfg.max_len)
             for slot, req in enumerate(active):
+                # a fresh cache per *request*, not per wave: decode_step
+                # advances every batch row, so a wave-shared cache lets one
+                # request's decode pollute the recurrent (SSM/conv) state
+                # the next slot's prefill assumes starts at zero — KV
+                # attention masks hide this, recurrences do not
+                cache = self.api.init_cache(self.cfg.max_batch,
+                                            self.cfg.max_len)
                 cache, logits, pos = self._prefill_one(cache, slot, req.prompt)
                 for _ in range(req.max_new_tokens):
                     row = logits[slot]
@@ -651,20 +775,22 @@ class SequentialEngine:
                     else:
                         tok = int(jnp.argmax(row))  # repro-lint: disable=jit-purity
                     req.out.append(tok)
-                    gen += 1
+                    ctok.add(1)
                     if req.ttft_s is None:
-                        req.ttft_s = time.perf_counter() - t0
+                        req.ttft_s = rec.now() - t0
+                        rec.observe("serve.ttft_s", req.ttft_s)
                     if tok == self.cfg.eos_id or pos + 1 >= self.cfg.max_len:
                         break
                     logits, cache = self._decode(
                         self.params, cache, self._slot_tokens(slot, tok),
                         jnp.int32(pos))
-                    steps += 1
+                    cstep.add(1)
                     pos += 1
                 req.done = True
+                creq.add(1)
+                rec.instant("serve.request.retired", uid=req.uid,
+                            tokens=len(req.out))
                 results.append(req)
                 if on_retire is not None:
                     on_retire(req)
-        self.last_stats = _mk_stats(results, gen, 0, steps,
-                                    time.perf_counter() - t0)
         return results

@@ -45,6 +45,7 @@ from repro.kernels import dispatch
 from repro.optim.optimizers import Optimizer
 from repro.parallel import partition
 from repro.parallel.sharding import axis_rules, rules_for
+from repro.telemetry import Recorder
 
 Array = jax.Array
 
@@ -151,6 +152,11 @@ def make_train_step(loss_fn: Callable, optimizer: Optimizer,
             loss_fn, has_aux=True)(params, batch, asi_state)
         metrics = dict(metrics)
         metrics["loss"] = loss
+        # global gradient norm rides along on device; like every metric it
+        # only hits the host at the log-step sync (telemetry stream)
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
         return grads, (new_asi if new_asi is not None else asi_state), metrics
 
     def train_step(params, opt_state, asi_state, batch, step):
@@ -237,7 +243,8 @@ class TrainResult:
 
 def run(train_step, init_params, init_opt_state, init_asi_state, data,
         cfg: TrainLoopCfg, hooks: dict | None = None,
-        plan: MeshPlan | None = None) -> TrainResult:
+        plan: MeshPlan | None = None,
+        telemetry: Recorder | None = None) -> TrainResult:
     """Restartable training.  ``data.batch(step)`` must be pure in step.
 
     With a ``plan`` the loop (a) device_puts the initial state with the
@@ -245,18 +252,26 @@ def run(train_step, init_params, init_opt_state, init_asi_state, data,
     *current* mesh (``checkpointer.restore_sharded``) — which is what makes
     resuming on a different mesh Just Work — and (c) keeps the model's
     logical-axis rules active so ``logical_shard`` annotations resolve while
-    the step traces."""
+    the step traces.
+
+    ``telemetry`` takes a recorder: step spans land in the event ring, and
+    throughput + loss/grad-norm gauge streams are emitted on log steps only
+    (telemetry introduces no extra device syncs — the log-step ``float()``
+    stays the loop's single sync point)."""
     hooks = hooks or {}
+    rec = telemetry if telemetry is not None else Recorder(enabled=False)
     ckpt_meta = plan.meta() if plan is not None else None
     ctx = plan.activate() if plan is not None else contextlib.nullcontext()
 
-    with ctx:
+    with ctx, rec.span("train.run", total_steps=cfg.total_steps):
         return _run_inner(train_step, init_params, init_opt_state,
-                          init_asi_state, data, cfg, hooks, plan, ckpt_meta)
+                          init_asi_state, data, cfg, hooks, plan, ckpt_meta,
+                          rec)
 
 
 def _run_inner(train_step, init_params, init_opt_state, init_asi_state, data,
-               cfg: TrainLoopCfg, hooks, plan, ckpt_meta) -> TrainResult:
+               cfg: TrainLoopCfg, hooks, plan, ckpt_meta,
+               rec: Recorder) -> TrainResult:
     restarts = 0
     history: list = []
     stragglers: list = []
@@ -289,8 +304,14 @@ def _run_inner(train_step, init_params, init_opt_state, init_asi_state, data,
                 batch = data.batch(step)
                 if plan is not None:
                     batch = plan.shard_batch(batch)
-                params, opt_state, asi_state, metrics = train_step(
-                    params, opt_state, asi_state, batch, jnp.int32(step))
+                if rec.profiler is not None:
+                    # compile-vs-run split, once (behind --profile-trace)
+                    rec.profiler.compile_split(
+                        "train.step", train_step, params, opt_state,
+                        asi_state, batch, jnp.int32(step))
+                with rec.span("train.step", step=step):
+                    params, opt_state, asi_state, metrics = train_step(
+                        params, opt_state, asi_state, batch, jnp.int32(step))
                 # dt times dispatch (plus any queue backpressure), not
                 # device execution — the price of not forcing a per-step
                 # sync.  The straggler watermark is therefore a coarse
@@ -298,9 +319,13 @@ def _run_inner(train_step, init_params, init_opt_state, init_asi_state, data,
                 # only hard sync point.
                 dt = time.perf_counter() - t0
                 durations.push(dt)
+                rec.observe("train.step_s", dt)
+                rec.count("train.steps")
                 med = durations.median()
                 if len(durations) > 5 and dt > cfg.straggler_factor * med:
                     stragglers.append((step, dt, med))
+                    rec.instant("train.straggler", step=step, dt_s=dt,
+                                median_s=med)
                 step += 1
                 if step % cfg.log_every == 0 or step == cfg.total_steps:
                     # the only per-step device sync: metrics stay as async
@@ -308,17 +333,25 @@ def _run_inner(train_step, init_params, init_opt_state, init_asi_state, data,
                     # pipelining and buffer donation
                     metrics = {k: float(v) for k, v in metrics.items()}
                     history.append({"step": step, **metrics})
+                    for k, v in metrics.items():
+                        rec.set_gauge(f"train.{k}", v)
+                    if med > 0:
+                        rec.set_gauge("train.steps_per_s", 1.0 / med)
                     if "on_log" in hooks:
                         hooks["on_log"](step, metrics)
                 if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
-                    checkpointer.save(
-                        cfg.ckpt_dir, step,
-                        {"params": params, "opt": opt_state, "asi": asi_state},
-                        meta=ckpt_meta, keep=cfg.keep_ckpts)
+                    with rec.span("train.checkpoint", step=step):
+                        checkpointer.save(
+                            cfg.ckpt_dir, step,
+                            {"params": params, "opt": opt_state,
+                             "asi": asi_state},
+                            meta=ckpt_meta, keep=cfg.keep_ckpts)
             return TrainResult(params, opt_state, asi_state, step, history,
                                restarts, stragglers)
         except SimulatedFailure:
             restarts += 1
+            rec.instant("train.restart", n=restarts)
+            rec.count("train.restarts")
             if restarts > cfg.max_restarts:
                 raise
             if "on_restart" in hooks:

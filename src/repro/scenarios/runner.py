@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.ondevice.ledger import build_ledger, measured_site_residual_bytes
 from repro.scenarios.replay import make_replay
+from repro.telemetry import Recorder
 from repro.scenarios.streams import (BurstyTraffic, TaskSequenceStream,
                                      TaskStreamCfg, TrafficCfg,
                                      VisionPhaseStream, VisionStreamCfg)
@@ -179,23 +180,30 @@ def measured_plan_bytes(cfg, batch: int, seq_len: int, rank_plan: dict) -> int:
 # the runner
 # ---------------------------------------------------------------------------
 
-def run_scenario(**kw) -> ScenarioReport:
-    """Run one scenario workload end to end and return its report."""
+def run_scenario(telemetry: Recorder | None = None, **kw) -> ScenarioReport:
+    """Run one scenario workload end to end and return its report.
+
+    ``telemetry`` rides outside ``ScenarioCfg`` (the cfg stays a pure
+    description of the workload): the recorder is threaded into the
+    session so burst/replan spans and ledger-drift gauges interleave with
+    the engine's request lifecycle on one timeline."""
     cfg = ScenarioCfg(**kw)
     if cfg.scenario not in SCENARIOS:
         raise ValueError(f"unknown scenario {cfg.scenario!r}; choose from "
                          f"{SCENARIOS}")
+    rec = telemetry if telemetry is not None else Recorder(enabled=False)
     if cfg.scenario == "vision":
-        return _run_vision(cfg)
-    return _run_lm(cfg)
+        return _run_vision(cfg, rec)
+    return _run_lm(cfg, rec)
 
 
-def _run_lm(cfg: ScenarioCfg) -> ScenarioReport:
+def _run_lm(cfg: ScenarioCfg, rec: Recorder) -> ScenarioReport:
     from repro.api import Session
     phases = cfg.resolved_phases()
     sess = Session.from_config(cfg.arch, reduced=cfg.reduced, seed=cfg.seed,
                                compress="asi",
-                               kernel_backend=cfg.kernel_backend)
+                               kernel_backend=cfg.kernel_backend,
+                               telemetry=rec if rec.enabled else None)
     if sess.cfg.family == "encdec":
         raise ValueError("encdec serving needs audio frames; LM scenarios "
                          "target decoder-only archs (use scenario='vision' "
@@ -248,7 +256,7 @@ def _run_lm(cfg: ScenarioCfg) -> ScenarioReport:
         replay.set_phase(phase)
         if phase > 0:
             report.ledger_checks.append(
-                _elastic_check(adapter, cfg, phase, stream, report))
+                _elastic_check(adapter, cfg, phase, stream, report, rec))
         for wave in range(cfg.waves_per_phase):
             step = phase * cfg.waves_per_phase + wave
             reqs = traffic.arrivals(step, start_uid=uid)
@@ -267,18 +275,24 @@ def _run_lm(cfg: ScenarioCfg) -> ScenarioReport:
 
 
 def _elastic_check(adapter, cfg: ScenarioCfg, phase: int,
-                   stream: TaskSequenceStream, report: ScenarioReport) -> dict:
+                   stream: TaskSequenceStream, report: ScenarioReport,
+                   rec: Recorder) -> dict:
     """The elastic budget hook: measure the live plan's actual activation
     bytes; if they exceed the phase's budget or drift past the threshold
     from the analytic ledger, re-plan on current-phase traffic."""
     budget_mb = cfg.budget_for(phase)
     mcfg = adapter.session.cfg
-    analytic = build_ledger(mcfg, adapter.batch, adapter.seq_len,
-                            rank_plan=adapter.plan.rank_plan).asi_total_bytes
-    measured = measured_plan_bytes(mcfg, adapter.batch, adapter.seq_len,
-                                   adapter.plan.rank_plan)
+    with rec.span("adapt.replan_check", phase=phase, budget_mb=budget_mb):
+        analytic = build_ledger(
+            mcfg, adapter.batch, adapter.seq_len,
+            rank_plan=adapter.plan.rank_plan).asi_total_bytes
+        measured = measured_plan_bytes(mcfg, adapter.batch, adapter.seq_len,
+                                       adapter.plan.rank_plan)
     drift = abs(measured - analytic) / max(analytic, 1)
     over_budget = measured > budget_mb * 2 ** 20
+    rec.set_gauge("adapt.ledger.analytic_bytes", int(analytic))
+    rec.set_gauge("adapt.ledger.measured_bytes", int(measured))
+    rec.set_gauge("adapt.ledger.drift", float(drift))
     check = {"phase": phase, "budget_mb": budget_mb,
              "analytic_bytes": int(analytic), "measured_bytes": int(measured),
              "drift": round(drift, 4), "replanned": False}
@@ -286,7 +300,10 @@ def _elastic_check(adapter, cfg: ScenarioCfg, phase: int,
         old_ranks = {k: int(v) for k, v in adapter.plan.rank_plan.items()}
         calib = [stream.batch(phase * cfg.waves_per_phase + i)
                  for i in range(adapter.calib_batches)]
-        plan = adapter.replan(budget_mb, batches=calib)
+        with rec.span("adapt.replan", phase=phase, budget_mb=budget_mb,
+                      over_budget=over_budget, drift=round(drift, 4)):
+            plan = adapter.replan(budget_mb, batches=calib)
+        rec.count("adapt.replans")
         check["replanned"] = True
         report.replans.append({
             "phase": phase, "budget_mb": budget_mb,
@@ -301,7 +318,7 @@ def _elastic_check(adapter, cfg: ScenarioCfg, phase: int,
 # vision (convnets family — the paper's own models; no serving engine)
 # ---------------------------------------------------------------------------
 
-def _run_vision(cfg: ScenarioCfg) -> ScenarioReport:
+def _run_vision(cfg: ScenarioCfg, rec: Recorder) -> ScenarioReport:
     from repro.models import convnets
     from repro.optim.optimizers import make_optimizer
     ccfg = convnets.mcunet_mini(num_classes=4, compress="asi", last_k=2,
@@ -344,6 +361,8 @@ def _run_vision(cfg: ScenarioCfg) -> ScenarioReport:
             report.quality.append({"burst": len(report.burst_phase),
                                    "phase": phase,
                                    "loss": round(float(loss), 6)})
+            rec.count("adapt.steps")
+            rec.observe("adapt.loss", report.quality[-1]["loss"])
             for p in sorted(probes):
                 # the per-burst probe reading IS the measurement — syncing
                 # here is deliberate, and bursts are sparse

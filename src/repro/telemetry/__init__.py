@@ -1,0 +1,21 @@
+"""Unified telemetry layer (DESIGN.md §13): span/counter/gauge/histogram
+primitives over an injectable clock, a bounded ring-buffer
+:class:`Recorder`, JSONL + Chrome-trace exporters, and a ``jax.profiler``
+bridge.  Threaded through train/serve/adapt via ``Session(telemetry=...)``
+and the ``--telemetry`` / ``--profile-trace`` launch flags.
+
+Pure host-side and import-light on purpose: importing this package pulls
+no runtime modules, and a disabled ``Recorder`` costs a few dict lookups
+per hot-loop step.
+"""
+from repro.telemetry.export import (chrome_trace, export_chrome_trace,
+                                    export_jsonl, read_jsonl,
+                                    validate_jsonl_file)
+from repro.telemetry.record import (Counter, Gauge, Histogram, ManualClock,
+                                    Recorder)
+
+__all__ = [
+    "Recorder", "ManualClock", "Counter", "Gauge", "Histogram",
+    "export_jsonl", "read_jsonl", "validate_jsonl_file",
+    "chrome_trace", "export_chrome_trace",
+]

@@ -1,0 +1,44 @@
+"""Validate an exported telemetry JSONL stream against the v1 schema.
+
+Usage::
+
+    python -m repro.telemetry out.jsonl
+
+Exits 0 and prints a one-line JSON summary (event counts, dropped, open
+spans) when the stream is well-formed; exits 1 listing schema errors
+otherwise.  CI's ``telemetry-smoke`` job runs this against the stream a
+``launch/serve --telemetry`` e2e emits.
+"""
+import argparse
+import json
+import sys
+
+from repro.telemetry.export import validate_jsonl_file
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.telemetry",
+        description="Validate a repro telemetry JSONL export (schema v1).")
+    p.add_argument("path", help="JSONL file written via --telemetry")
+    p.add_argument("--min-events", type=int, default=0,
+                   help="fail unless the stream holds at least this many "
+                        "events (default 0)")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    errors, summary = validate_jsonl_file(args.path)
+    for err in errors:
+        print(f"SCHEMA FAIL {err}", file=sys.stderr)
+    if not errors and summary.get("events", 0) < args.min_events:
+        print(f"SCHEMA FAIL only {summary.get('events', 0)} events "
+              f"(< --min-events {args.min_events})", file=sys.stderr)
+        errors = ["too few events"]
+    print(json.dumps({"ok": not errors, "path": args.path, **summary}))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

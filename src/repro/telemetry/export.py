@@ -1,0 +1,185 @@
+"""Exporters for :class:`~repro.telemetry.record.Recorder` streams.
+
+Two on-disk formats (DESIGN.md §13):
+
+* **JSONL** — one event per line, schema-versioned (``"v": 1``), with a
+  header line (``kind: "H"``) and a closing metrics footer (``kind:
+  "M"``) carrying the aggregate snapshot and the ring-buffer drop count.
+  ``python -m repro.telemetry out.jsonl`` validates a file against this
+  schema (the CI e2e uses exactly that).
+* **Chrome trace** — a ``{"traceEvents": [...]}`` JSON loadable in
+  ``chrome://tracing`` / Perfetto.  Span begin/end pairs become complete
+  (``ph: "X"``) slices, instants become ``ph: "i"`` marks, gauge samples
+  become ``ph: "C"`` counter tracks.  Timestamps are microseconds.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional
+
+SCHEMA_VERSION = 1
+KINDS = ("H", "B", "E", "I", "G", "M")
+#: required fields per event kind (beyond "v" and "kind")
+_REQUIRED = {
+    "H": ("schema",),
+    "B": ("ts", "name", "id", "parent"),
+    "E": ("ts", "name", "id"),
+    "I": ("ts", "name"),
+    "G": ("ts", "name", "value"),
+    "M": ("metrics", "dropped"),
+}
+
+
+# ---------------------------------------------------------------------------
+# JSONL
+# ---------------------------------------------------------------------------
+
+def jsonl_lines(rec) -> Iterable[str]:
+    """Serialize a recorder as schema-v1 JSONL lines (header, events,
+    metrics footer)."""
+    yield json.dumps({"v": SCHEMA_VERSION, "kind": "H",
+                      "schema": "repro.telemetry", "capacity": rec.capacity})
+    for ev in rec.events:
+        yield json.dumps({"v": SCHEMA_VERSION, **ev})
+    yield json.dumps({"v": SCHEMA_VERSION, "kind": "M",
+                      "metrics": rec.metrics(), "dropped": rec.dropped})
+
+
+def export_jsonl(rec, path_or_file) -> None:
+    if hasattr(path_or_file, "write"):
+        for line in jsonl_lines(rec):
+            path_or_file.write(line + "\n")
+        return
+    with open(path_or_file, "w") as f:
+        for line in jsonl_lines(rec):
+            f.write(line + "\n")
+
+
+def validate_event(ev: dict, where: str = "") -> list[str]:
+    """Schema check for one decoded JSONL line; returns error strings."""
+    errs = []
+    pre = f"{where}: " if where else ""
+    if ev.get("v") != SCHEMA_VERSION:
+        errs.append(f"{pre}bad schema version {ev.get('v')!r}")
+    kind = ev.get("kind")
+    if kind not in KINDS:
+        errs.append(f"{pre}unknown kind {kind!r}")
+        return errs
+    for field in _REQUIRED[kind]:
+        if field not in ev:
+            errs.append(f"{pre}kind {kind} missing field {field!r}")
+    if "ts" in ev and not isinstance(ev["ts"], (int, float)):
+        errs.append(f"{pre}ts must be numeric")
+    if kind == "M" and not isinstance(ev.get("metrics"), dict):
+        errs.append(f"{pre}metrics must be an object")
+    return errs
+
+
+def read_jsonl(path_or_file) -> tuple[list[dict], dict, int]:
+    """Parse + validate a JSONL export.  Returns ``(events, metrics,
+    dropped)`` where events excludes the header/footer.  Raises
+    ``ValueError`` on schema violations."""
+    if hasattr(path_or_file, "read"):
+        lines = path_or_file.read().splitlines()
+    else:
+        with open(path_or_file) as f:
+            lines = f.read().splitlines()
+    events: list[dict] = []
+    metrics: dict = {}
+    dropped = 0
+    errs: list[str] = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            errs.append(f"line {i + 1}: not JSON ({e})")
+            continue
+        errs.extend(validate_event(ev, where=f"line {i + 1}"))
+        kind = ev.get("kind")
+        if kind == "M":
+            metrics = ev.get("metrics", {})
+            dropped = ev.get("dropped", 0)
+        elif kind in ("B", "E", "I", "G"):
+            events.append(ev)
+    if not lines:
+        errs.append("empty stream")
+    if errs:
+        raise ValueError("; ".join(errs))
+    return events, metrics, dropped
+
+
+def validate_jsonl_file(path: str) -> tuple[list[str], dict]:
+    """Non-raising wrapper used by ``python -m repro.telemetry``: returns
+    ``(errors, summary)`` with per-kind event counts."""
+    try:
+        events, metrics, dropped = read_jsonl(path)
+    except (ValueError, OSError) as e:
+        return [str(e)], {}
+    counts: dict = {}
+    for ev in events:
+        counts[ev["kind"]] = counts.get(ev["kind"], 0) + 1
+    open_spans = sum(1 for e in events if e["kind"] == "B") \
+        - sum(1 for e in events if e["kind"] == "E")
+    return [], {"events": len(events), "by_kind": counts,
+                "metrics": len(metrics), "dropped": dropped,
+                "unclosed_spans": open_spans}
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace
+# ---------------------------------------------------------------------------
+
+def _us(ts: float) -> float:
+    return round(ts * 1e6, 3)
+
+
+def chrome_trace(rec, process_name: str = "repro") -> dict:
+    """Render the event ring as a Chrome/Perfetto trace object."""
+    out = [{"ph": "M", "pid": 1, "name": "process_name",
+            "args": {"name": process_name}}]
+    open_by_id: dict[int, dict] = {}
+    for ev in rec.events:
+        kind = ev["kind"]
+        if kind == "B":
+            open_by_id[ev["id"]] = ev
+        elif kind == "E":
+            begin = open_by_id.pop(ev["id"], None)
+            if begin is None:
+                continue
+            slice_ev = {"ph": "X", "pid": 1, "tid": 1,
+                        "name": begin["name"], "ts": _us(begin["ts"]),
+                        "dur": _us(ev["ts"] - begin["ts"])}
+            if begin.get("attrs"):
+                slice_ev["args"] = begin["attrs"]
+            out.append(slice_ev)
+        elif kind == "I":
+            inst = {"ph": "i", "pid": 1, "tid": 1, "s": "t",
+                    "name": ev["name"], "ts": _us(ev["ts"])}
+            if ev.get("attrs"):
+                inst["args"] = ev["attrs"]
+            out.append(inst)
+        elif kind == "G":
+            out.append({"ph": "C", "pid": 1, "name": ev["name"],
+                        "ts": _us(ev["ts"]),
+                        "args": {"value": ev["value"]}})
+    # spans still open when exported render as zero-length slices at
+    # their begin timestamp rather than vanishing
+    for begin in open_by_id.values():
+        out.append({"ph": "X", "pid": 1, "tid": 1, "name": begin["name"],
+                    "ts": _us(begin["ts"]), "dur": 0})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def export_chrome_trace(rec, path_or_file: Optional[str] = None,
+                        process_name: str = "repro") -> dict:
+    trace = chrome_trace(rec, process_name=process_name)
+    if path_or_file is None:
+        return trace
+    if hasattr(path_or_file, "write"):
+        json.dump(trace, path_or_file)
+    else:
+        with open(path_or_file, "w") as f:
+            json.dump(trace, f)
+    return trace

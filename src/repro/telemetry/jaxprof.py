@@ -1,0 +1,116 @@
+"""``jax.profiler`` bridge: device traces, named annotation scopes,
+compile-vs-run splits, and memory gauges — all opt-in and all guarded so
+the bridge degrades to a no-op on backends (or jax builds) that lack a
+profiler.
+
+The bridge never *replaces* the host-side recorder; it decorates it.
+Spans opened on a recorder with an attached bridge also enter a
+``jax.profiler.TraceAnnotation`` of the same name, so the host timeline
+and the XLA device trace line up by name in Perfetto.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional
+
+import jax
+
+#: ``memory_analysis()`` fields exported as gauges when present
+_MEM_FIELDS = ("temp_size_in_bytes", "argument_size_in_bytes",
+               "output_size_in_bytes", "generated_code_size_in_bytes")
+
+
+class JaxProfileBridge:
+    """Glue between a :class:`~repro.telemetry.record.Recorder` and
+    ``jax.profiler``.  Construct via ``Recorder.attach_profiler``."""
+
+    def __init__(self, recorder, trace_dir: Optional[str] = None):
+        self.rec = recorder
+        self.trace_dir = trace_dir
+        self._active = False
+        self._split_done: set[str] = set()
+
+    # -- annotation scopes ---------------------------------------------
+    def annotation(self, name: str):
+        """A named ``TraceAnnotation`` scope (no-op if unavailable)."""
+        try:
+            return jax.profiler.TraceAnnotation(name)
+        except Exception:
+            return contextlib.nullcontext()
+
+    # -- whole-run device trace ----------------------------------------
+    def start(self) -> None:
+        if self.trace_dir and not self._active:
+            try:
+                jax.profiler.start_trace(self.trace_dir)
+                self._active = True
+            except Exception:
+                self._active = False
+
+    def stop(self) -> None:
+        if self._active:
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+            self._active = False
+
+    @contextlib.contextmanager
+    def trace(self):
+        self.start()
+        try:
+            yield self
+        finally:
+            self.stop()
+
+    # -- compile-vs-run split ------------------------------------------
+    def compile_split(self, name: str, fn, *args, **kwargs) -> None:
+        """AOT-lower and compile ``fn`` once, recording the trace/compile
+        wall split and ``memory_analysis()`` byte gauges under
+        ``<name>.*``.  Memoized per name: only the first invocation pays.
+
+        Note this is a *separate* compilation from the one ``jax.jit``
+        caches for the live call, so profiled runs compile the step
+        twice — the price of an explicit split, and why this only runs
+        behind ``--profile-trace``.
+        """
+        if name in self._split_done or not hasattr(fn, "lower"):
+            return
+        self._split_done.add(name)
+        rec = self.rec
+        try:
+            t0 = time.perf_counter()
+            lowered = fn.lower(*args, **kwargs)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        except Exception:
+            return
+        rec.set_gauge(f"{name}.trace_lower_s", t1 - t0)
+        rec.set_gauge(f"{name}.compile_s", t2 - t1)
+        try:
+            ma = compiled.memory_analysis()
+        except Exception:
+            ma = None
+        if ma is not None:
+            for field in _MEM_FIELDS:
+                v = getattr(ma, field, None)
+                if v is not None:
+                    rec.set_gauge(f"{name}.{field}", int(v))
+
+    # -- live-buffer gauges --------------------------------------------
+    def live_buffer_gauges(self, prefix: str = "jax.live") -> None:
+        """Sample the process-wide live jax array population."""
+        try:
+            arrs = jax.live_arrays()
+        except Exception:
+            return
+        nbytes = 0
+        for a in arrs:
+            try:
+                nbytes += int(a.nbytes)
+            except Exception:
+                pass
+        self.rec.set_gauge(f"{prefix}.arrays", len(arrs))
+        self.rec.set_gauge(f"{prefix}.bytes", nbytes)

@@ -1,0 +1,266 @@
+"""Telemetry primitives: spans, counters, gauges, histograms, and the
+bounded host-side ``Recorder`` (DESIGN.md §13).
+
+Two planes, one object:
+
+* **Aggregates** (counters / gauges / histograms) are *always* updated,
+  even with ``enabled=False``.  They are the single source of truth for
+  derived surfaces such as ``Engine.last_stats`` — a few dict lookups and
+  float adds per hot-loop iteration, cheap enough to leave on
+  unconditionally.
+* **Events** (span begin/end, instants, gauge samples) land in a bounded
+  ring buffer only when ``enabled=True``.  Overflow evicts the oldest
+  event and increments ``dropped`` — never silently.
+
+Everything records *host* values only.  The recorder owns no device
+arrays and issues no device syncs; callers hand it Python scalars that
+already crossed the host boundary (the ``telemetry-contract`` lint rule
+enforces this).  Time comes from an injectable monotonic clock so tests
+get deterministic span trees (see :class:`ManualClock`).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+class ManualClock:
+    """Deterministic clock for tests: starts at ``start`` and advances by
+    ``tick`` after every read (``tick=0`` freezes it; use :meth:`advance`)."""
+
+    def __init__(self, start: float = 0.0, tick: float = 1.0):
+        self.t = float(start)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        now = self.t
+        self.t += self.tick
+        return now
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class Counter:
+    """Monotonic accumulator (no events — timeline via spans/instants)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def add(self, n: float = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-value sample with a high-water mark (resettable per run)."""
+
+    __slots__ = ("value", "peak")
+
+    def __init__(self):
+        self.value = 0.0
+        self.peak = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+        if v > self.peak:
+            self.peak = v
+
+    def reset_peak(self, floor: float = 0.0) -> None:
+        self.peak = floor
+
+
+class Histogram:
+    """Raw-valued histogram: keeps every observation so percentile math
+    matches what ``np.percentile`` would say over the same samples."""
+
+    __slots__ = ("values",)
+
+    def __init__(self):
+        self.values: list[float] = []
+
+    def record(self, v: float) -> None:
+        self.values.append(v)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+
+class _Span:
+    """Context manager emitting paired B/E events and (when a profiler
+    bridge is attached) a named ``jax.profiler.TraceAnnotation`` scope."""
+
+    __slots__ = ("rec", "name", "attrs", "sid", "_ann")
+
+    def __init__(self, rec: "Recorder", name: str, attrs: dict):
+        self.rec = rec
+        self.name = name
+        self.attrs = attrs
+        self.sid = 0
+        self._ann = None
+
+    def __enter__(self) -> "_Span":
+        rec = self.rec
+        rec._span_seq += 1
+        self.sid = rec._span_seq
+        ev = {"ts": rec.now(), "kind": "B", "name": self.name,
+              "id": self.sid,
+              "parent": rec._stack[-1] if rec._stack else 0}
+        if self.attrs:
+            ev["attrs"] = self.attrs
+        rec._stack.append(self.sid)
+        rec._emit(ev)
+        if rec.profiler is not None:
+            self._ann = rec.profiler.annotation(self.name)
+            self._ann.__enter__()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        rec = self.rec
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        if rec._stack and rec._stack[-1] == self.sid:
+            rec._stack.pop()
+        rec._emit({"ts": rec.now(), "kind": "E", "name": self.name,
+                   "id": self.sid})
+
+
+class _NullSpan:
+    """Shared no-op span for disabled recorders (aggregates still flow)."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Recorder:
+    """Bounded host-side telemetry sink.
+
+    Parameters
+    ----------
+    clock:
+        Zero-arg callable returning monotonic seconds.  Defaults to
+        ``time.perf_counter``; inject :class:`ManualClock` for
+        deterministic tests.
+    capacity:
+        Ring-buffer bound on the event plane.  Oldest events are evicted
+        on overflow and counted in :attr:`dropped`.
+    enabled:
+        When ``False``, the event plane is off (spans become no-ops,
+        instants are skipped) but aggregates keep updating — this is the
+        telemetry-off arm of the overhead benchmark and the default for
+        engines constructed without an explicit recorder.
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 capacity: int = 4096, enabled: bool = True):
+        self.clock = clock if clock is not None else time.perf_counter
+        self.capacity = int(capacity)
+        self.enabled = bool(enabled)
+        self.events: deque = deque()
+        self.dropped = 0
+        self.profiler = None  # attached JaxProfileBridge, if any
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._hists: dict[str, Histogram] = {}
+        self._stack: list[int] = []
+        self._span_seq = 0
+
+    # -- clock / events ------------------------------------------------
+    def now(self) -> float:
+        return self.clock()
+
+    def _emit(self, ev: dict) -> None:
+        if len(self.events) >= self.capacity:
+            self.events.popleft()
+            self.dropped += 1
+        self.events.append(ev)
+
+    def span(self, name: str, **attrs):
+        """Open a named span (``with rec.span("serve.decode_step"): ...``)."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, attrs)
+
+    def instant(self, name: str, **attrs) -> None:
+        """Point-in-time event (request lifecycle marks, restarts, ...)."""
+        if not self.enabled:
+            return
+        ev = {"ts": self.now(), "kind": "I", "name": name}
+        if attrs:
+            ev["attrs"] = attrs
+        self._emit(ev)
+
+    # -- aggregates (always on) ----------------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def hist(self, name: str) -> Histogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = Histogram()
+        return h
+
+    def count(self, name: str, n: float = 1) -> None:
+        self.counter(name).add(n)
+
+    def observe(self, name: str, v: float) -> None:
+        self.hist(name).record(v)
+
+    def set_gauge(self, name: str, v: float, sample: bool = True) -> None:
+        """Update a gauge; with ``sample=True`` also emit a ``G`` event so
+        exporters can plot the value over time (skipped when disabled)."""
+        self.gauge(name).set(v)
+        if sample and self.enabled:
+            self._emit({"ts": self.now(), "kind": "G", "name": name,
+                        "value": v})
+
+    # -- snapshots -----------------------------------------------------
+    def metrics(self) -> dict:
+        """Flat aggregate snapshot (exported as the JSONL footer line)."""
+        out: dict = {}
+        for k, c in sorted(self._counters.items()):
+            out[k] = c.value
+        for k, g in sorted(self._gauges.items()):
+            out[k] = g.value
+            out[f"{k}.peak"] = g.peak
+        for k, h in sorted(self._hists.items()):
+            out[f"{k}.count"] = h.count
+        return out
+
+    # -- jax.profiler bridge -------------------------------------------
+    def attach_profiler(self, trace_dir: Optional[str] = None):
+        """Attach a :class:`~repro.telemetry.jaxprof.JaxProfileBridge`:
+        spans gain ``TraceAnnotation`` scopes and engines emit
+        compile-vs-run splits / live-buffer gauges."""
+        from repro.telemetry.jaxprof import JaxProfileBridge
+        self.profiler = JaxProfileBridge(self, trace_dir=trace_dir)
+        return self.profiler
+
+    def profile(self):
+        """Context manager covering a whole run: starts/stops the
+        ``jax.profiler`` device trace when a bridge with a trace dir is
+        attached, else a no-op."""
+        if self.profiler is not None:
+            return self.profiler.trace()
+        return contextlib.nullcontext()

@@ -509,7 +509,7 @@ def test_json_schema(head_findings):
                         "total"}
     assert set(doc["rules"]) == {"residual-contract", "jit-purity",
                                  "partition-coverage", "pallas-contract",
-                                 "shim-contract"}
+                                 "shim-contract", "telemetry-contract"}
     for f in doc["findings"]:
         assert set(f) == {"rule", "path", "line", "message", "col",
                           "suppressed"}

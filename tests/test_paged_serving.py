@@ -72,11 +72,10 @@ PROP_ARCHS = ["tinyllama-1.1b", "granite-moe-3b-a800m",
 @functools.lru_cache(maxsize=None)
 def _prop_engines(arch):
     api, params = _api(arch)
-    # oracle at max_batch=1: the wave-shaped sequential loop leaks recurrent
-    # SSM state across slots (later slots step on token-0 inputs while
-    # earlier ones generate), so only the fully isolated shape is exact for
-    # every family
-    seq = SequentialEngine(api, params, ServeCfg(max_batch=1, max_len=MAX_LEN))
+    # oracle at max_batch=2: per-request cache re-init makes the wave-shaped
+    # loop exact for every family (recurrent SSM state no longer leaks
+    # across slots), so the oracle itself exercises batched waves
+    seq = SequentialEngine(api, params, ServeCfg(max_batch=2, max_len=MAX_LEN))
     dense = Engine(api, params, ServeCfg(max_batch=3, max_len=MAX_LEN,
                                          prefill_chunk=4))
     paged = Engine(api, params, ServeCfg(max_batch=3, max_len=MAX_LEN,
@@ -241,6 +240,25 @@ def test_legacy_prefill_cache_grows_per_length():
     assert eng.compile_cache_sizes() == {"prefill": 5, "chunk": 0}
 
 
+# --- sequential-engine wave batching ----------------------------------------
+
+def test_sequential_batched_waves_exact_for_recurrent_family():
+    """Regression for the wave-shared-cache leak: decode_step advances every
+    batch row, so a cache shared across a wave let one slot's recurrent
+    (SSM/conv) state pollute the next slot's prefill.  With per-request
+    cache re-init, batched waves must match fully isolated serving on an
+    SSM-hybrid arch token-for-token."""
+    api, params = _api("jamba-1.5-large-398b")
+    specs = [(3, 6, 0), (4, 6, 0), (5, 6, 0)]
+    one = SequentialEngine(api, params,
+                           ServeCfg(max_batch=1, max_len=MAX_LEN))
+    want = {r.uid: r.out for r in one.run(_reqs(specs, api))}
+    batched = SequentialEngine(api, params,
+                               ServeCfg(max_batch=3, max_len=MAX_LEN))
+    got = {r.uid: r.out for r in batched.run(_reqs(specs, api))}
+    assert got == want
+
+
 # --- pool exhaustion --------------------------------------------------------
 
 def test_pool_exhaustion_preempts_and_stays_exact():
@@ -248,7 +266,7 @@ def test_pool_exhaustion_preempts_and_stays_exact():
     re-admission), never raise, and never change any request's tokens."""
     api, params = _api("tinyllama-1.1b")
     specs = [(3, 18, 0), (4, 18, 0), (5, 18, 0), (2, 18, 0)]
-    seq = SequentialEngine(api, params, ServeCfg(max_batch=1, max_len=MAX_LEN))
+    seq = SequentialEngine(api, params, ServeCfg(max_batch=2, max_len=MAX_LEN))
     want = {r.uid: r.out for r in seq.run(_reqs(specs, api))}
     # worst case 6 blocks x 4 requests >> 9 usable: exhaustion guaranteed
     eng = Engine(api, params, ServeCfg(max_batch=4, max_len=MAX_LEN,

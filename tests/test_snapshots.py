@@ -21,7 +21,8 @@ def test_snapshots_are_checked_in():
     names = {os.path.basename(p) for p in CHECKED_IN}
     for required in ("BENCH_fused_asi.json", "BENCH_serve_throughput.json",
                      "BENCH_activation_memory.json",
-                     "BENCH_scenario_suite.json", "BENCH_serve_trace.json"):
+                     "BENCH_scenario_suite.json", "BENCH_serve_trace.json",
+                     "BENCH_telemetry_overhead.json"):
         assert required in names, f"{required} missing from {SNAPSHOT_DIR}"
 
 
@@ -61,6 +62,19 @@ def test_serve_trace_snapshot_contents():
     # TTFT percentiles ride along as [dense, paged] series
     assert len(snap["series"]["ttft_p50_s"]) == 2
     assert len(snap["series"]["ttft_p99_s"]) == 2
+
+
+def test_telemetry_overhead_snapshot_contents():
+    """The recorded overhead run holds the telemetry claims: event recording
+    costs < the 2% gate, zero ring drops, and the lifecycle counts derived
+    from the event stream matched ``last_stats`` exactly."""
+    snap = load_snapshot("telemetry_overhead")
+    m = snap["metrics"]
+    assert m["derived_matches_stats"] is True
+    assert m["overhead_frac"] < m["gate_frac"] == 0.02
+    assert m["off_tok_s"] > 0 and m["on_tok_s"] > 0
+    assert m["dropped"] == 0
+    assert m["events_per_run"] > 0
 
 
 def test_validate_flags_malformed():

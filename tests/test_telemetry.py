@@ -1,0 +1,375 @@
+"""Telemetry battery (DESIGN.md §13).
+
+* deterministic span trees under an injected ``ManualClock``;
+* ring-buffer bounding with explicit drop counters;
+* JSONL and Chrome-trace exporter schema round-trips;
+* request-lifecycle event parity against ``ServeStats`` (TTFT/token/
+  preemption counts derived from the event stream equal the stats view —
+  both are fed by the same recorder, observed two ways);
+* adaptation-burst and replan span emission through a full scenario run;
+* telemetry-contract lint fixtures: violating / clean / suppressed.
+"""
+import functools
+import io
+import json
+import os
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.analysis import rules  # noqa: E402,F401  (registers lint rules)
+from repro.analysis.core import run_lint  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.runtime.serve_loop import (Engine, Request,  # noqa: E402
+                                      SequentialEngine, ServeCfg)
+from repro.telemetry import (ManualClock, Recorder,  # noqa: E402
+                             chrome_trace, export_jsonl, read_jsonl,
+                             validate_jsonl_file)
+from repro.telemetry.export import jsonl_lines  # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# primitives under an injected clock
+# --------------------------------------------------------------------------
+
+def test_span_tree_deterministic_under_manual_clock():
+    rec = Recorder(clock=ManualClock(start=0.0, tick=1.0))
+    with rec.span("outer", cache="paged"):
+        with rec.span("inner", step=3):
+            rec.instant("mark", uid=7)
+    ev = list(rec.events)
+    assert [(e["kind"], e["name"], e["ts"]) for e in ev] == [
+        ("B", "outer", 0.0), ("B", "inner", 1.0), ("I", "mark", 2.0),
+        ("E", "inner", 3.0), ("E", "outer", 4.0)]
+    outer_b, inner_b = ev[0], ev[1]
+    assert outer_b["parent"] == 0                  # root span
+    assert inner_b["parent"] == outer_b["id"]      # nested under outer
+    assert inner_b["attrs"] == {"step": 3}
+    assert ev[2]["attrs"] == {"uid": 7}
+    # same program, same clock => byte-identical stream
+    rec2 = Recorder(clock=ManualClock(start=0.0, tick=1.0))
+    with rec2.span("outer", cache="paged"):
+        with rec2.span("inner", step=3):
+            rec2.instant("mark", uid=7)
+    assert list(rec2.events) == ev
+
+
+def test_ring_buffer_bounds_and_counts_drops():
+    rec = Recorder(clock=ManualClock(), capacity=8)
+    for i in range(20):
+        rec.instant(f"e{i}")
+    assert len(rec.events) == 8
+    assert rec.dropped == 12
+    assert [e["name"] for e in rec.events] == [f"e{i}" for i in range(12, 20)]
+
+
+def test_disabled_recorder_keeps_aggregates_drops_events():
+    rec = Recorder(clock=ManualClock(), enabled=False)
+    with rec.span("s"):
+        rec.instant("i")
+        rec.count("c", 3)
+        rec.observe("h", 0.5)
+        rec.set_gauge("g", 7.0)
+    assert list(rec.events) == []                  # event plane off
+    assert rec.counter("c").value == 3             # aggregates still flow
+    assert rec.hist("h").values == [0.5]
+    assert rec.gauge("g").value == 7.0 and rec.gauge("g").peak == 7.0
+
+
+def test_gauge_peak_resets_to_floor():
+    g = Recorder(clock=ManualClock()).gauge("x")
+    g.set(5.0)
+    g.set(2.0)
+    assert g.value == 2.0 and g.peak == 5.0
+    g.reset_peak(floor=2.0)
+    assert g.peak == 2.0
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+
+def _sample_recorder() -> Recorder:
+    rec = Recorder(clock=ManualClock(start=0.0, tick=0.5))
+    with rec.span("run", n=2):
+        rec.set_gauge("pool", 4)
+        with rec.span("step"):
+            rec.instant("tick", uid=0)
+    rec.count("tokens", 6)
+    rec.observe("ttft_s", 0.25)
+    return rec
+
+
+def test_jsonl_round_trip(tmp_path):
+    rec = _sample_recorder()
+    path = str(tmp_path / "out.jsonl")
+    export_jsonl(rec, path)
+    with open(path) as f:
+        lines = [json.loads(line) for line in f]
+    assert all(line["v"] == 1 for line in lines)
+    assert lines[0]["kind"] == "H" and lines[0]["schema"] == "repro.telemetry"
+    assert lines[-1]["kind"] == "M"
+    events, metrics, dropped = read_jsonl(path)
+    assert [e["kind"] for e in events] == ["B", "G", "B", "I", "E", "E"]
+    assert dropped == 0
+    assert metrics["tokens"] == 6
+    assert metrics["ttft_s.count"] == 1
+    assert metrics["pool"] == 4 and metrics["pool.peak"] == 4
+    errors, summary = validate_jsonl_file(path)
+    assert errors == []
+    assert summary["unclosed_spans"] == 0
+    assert summary["by_kind"] == {"B": 2, "E": 2, "I": 1, "G": 1}
+
+
+def test_jsonl_validator_rejects_malformed(tmp_path):
+    good = "\n".join(jsonl_lines(_sample_recorder()))
+    bad = str(tmp_path / "bad.jsonl")
+    with open(bad, "w") as f:
+        f.write(good + "\n")
+        f.write(json.dumps({"v": 1, "kind": "B", "ts": 0.0}) + "\n")  # no id
+        f.write(json.dumps({"v": 9, "kind": "I", "ts": 0.0,
+                            "name": "x"}) + "\n")
+    errors, _ = validate_jsonl_file(bad)
+    assert errors and "missing field" in errors[0]
+    with pytest.raises(ValueError, match="schema version"):
+        read_jsonl(io.StringIO(json.dumps({"v": 2, "kind": "H",
+                                           "schema": "s"})))
+
+
+def test_chrome_trace_schema():
+    rec = _sample_recorder()
+    trace = chrome_trace(rec, process_name="unit")
+    evs = trace["traceEvents"]
+    assert evs[0] == {"ph": "M", "pid": 1, "name": "process_name",
+                      "args": {"name": "unit"}}
+    slices = [e for e in evs if e["ph"] == "X"]
+    # B/E pairs pair up into complete slices with microsecond ts/dur
+    names = {e["name"]: e for e in slices}
+    assert set(names) == {"run", "step"}
+    assert names["step"]["ts"] == pytest.approx(1.0e6)
+    assert names["step"]["dur"] == pytest.approx(1.0e6)
+    assert names["run"]["args"] == {"n": 2}
+    insts = [e for e in evs if e["ph"] == "i"]
+    assert insts[0]["name"] == "tick" and insts[0]["s"] == "t"
+    counters = [e for e in evs if e["ph"] == "C"]
+    assert counters[0]["name"] == "pool"
+    assert counters[0]["args"] == {"value": 4}
+    json.dumps(trace)                              # loadable by the viewer
+
+
+def test_chrome_trace_renders_unclosed_spans():
+    rec = Recorder(clock=ManualClock())
+    rec.span("never_closed").__enter__()
+    evs = chrome_trace(rec)["traceEvents"]
+    open_slices = [e for e in evs
+                   if e["ph"] == "X" and e["name"] == "never_closed"]
+    assert open_slices and open_slices[0]["dur"] == 0
+
+
+# --------------------------------------------------------------------------
+# request-lifecycle parity vs ServeStats
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _api(arch="tinyllama-1.1b"):
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    return api, api.init(KEY)
+
+
+def _reqs(specs):
+    return [Request(uid=i, prompt=[1 + (i * 5 + j) % 37 for j in range(pl)],
+                    max_new_tokens=mn, arrival_step=ar)
+            for i, (pl, mn, ar) in enumerate(specs)]
+
+
+def _lifecycle(events, name):
+    return [e for e in events if e["kind"] == "I" and e["name"] == name]
+
+
+def test_paged_engine_lifecycle_matches_stats():
+    """The acceptance check: a paged trace run's event stream re-derives
+    TTFT observations, token counts and preemptions that exactly match the
+    ``last_stats`` view (small pool so preemption fires)."""
+    api, params = _api()
+    rec = Recorder(capacity=1 << 14)
+    eng = Engine(api, params,
+                 ServeCfg(max_batch=4, max_len=32, cache="paged",
+                          page_block=4, pool_blocks=10), telemetry=rec)
+    done = eng.run(_reqs([(3, 18, 0), (4, 18, 0), (5, 18, 0), (2, 18, 0)]))
+    st = eng.last_stats
+    ev = list(rec.events)
+
+    retired = _lifecycle(ev, "serve.request.retired")
+    first = _lifecycle(ev, "serve.request.first_token")
+    assert len(retired) == st.requests == 4
+    assert sum(e["attrs"]["tokens"] for e in retired) == st.generated_tokens
+    assert st.generated_tokens == sum(len(r.out) for r in done)
+    assert len(_lifecycle(ev, "serve.request.preempted")) == st.preemptions
+    assert st.preemptions > 0
+    assert len(_lifecycle(ev, "serve.request.queued")) == 4
+    assert len(_lifecycle(ev, "serve.request.admitted")) >= 4  # re-admits
+
+    # TTFT: one first_token per request; event attrs are the histogram
+    assert len(first) == st.requests
+    ttfts = [e["attrs"]["ttft_s"] for e in first]
+    assert float(np.mean(ttfts)) == st.ttft_mean_s
+    assert float(np.percentile(ttfts, 50)) == st.ttft_p50_s
+
+    # aggregate plane agrees with both
+    assert rec.counter("serve.tokens").value == st.generated_tokens
+    assert rec.counter("serve.preemptions").value == st.preemptions
+    assert rec.gauge("serve.kv.used_blocks").peak == st.peak_used_blocks
+
+    # decode steps are spans; kv occupancy was sampled every step
+    steps = [e for e in ev
+             if e["kind"] == "B" and e["name"] == "serve.decode_step"]
+    assert len(steps) == st.decode_steps
+    assert len([e for e in ev if e["kind"] == "G"
+                and e["name"] == "serve.kv.used_blocks"]) >= len(steps)
+
+
+def test_sequential_engine_emits_lifecycle():
+    api, params = _api()
+    rec = Recorder()
+    eng = SequentialEngine(api, params, ServeCfg(max_batch=2, max_len=32),
+                           telemetry=rec)
+    eng.run(_reqs([(3, 4, 0), (4, 4, 0), (5, 4, 0)]))
+    st = eng.last_stats
+    ev = list(rec.events)
+    retired = _lifecycle(ev, "serve.request.retired")
+    assert len(retired) == st.requests == 3
+    assert sum(e["attrs"]["tokens"] for e in retired) == st.generated_tokens
+    runs = [e for e in ev if e["kind"] == "B" and e["name"] == "serve.run"]
+    assert runs and runs[0]["attrs"]["cache"] == "sequential"
+
+
+def test_engine_without_recorder_still_derives_stats():
+    """No-telemetry engines use an internal disabled recorder: stats stay
+    exact and the event plane stays empty."""
+    api, params = _api()
+    eng = Engine(api, params, ServeCfg(max_batch=2, max_len=32))
+    eng.run(_reqs([(3, 4, 0), (4, 4, 0)]))
+    assert eng.last_stats.requests == 2
+    assert eng.last_stats.generated_tokens == 8
+    assert list(eng.tele.events) == []
+
+
+# --------------------------------------------------------------------------
+# adaptation spans through a scenario run
+# --------------------------------------------------------------------------
+
+def test_scenario_emits_burst_and_replan_spans():
+    """A forced-replan scenario run emits adapt.burst spans (from the
+    DeviceSession), adapt.replan_check/adapt.replan spans and ledger drift
+    gauges (from the elastic hook), all on one recorder."""
+    from repro.scenarios import run_scenario
+
+    rec = Recorder(capacity=1 << 15)
+    r = run_scenario(telemetry=rec, scenario="domain-shift",
+                     arch="tinyllama_1_1b", reduced=True, seed=0,
+                     mem_budget_mb=0.05, budget_schedule=(0.05, 0.045),
+                     drift_threshold=-1.0, waves_per_phase=2, rate=4.0,
+                     steps=16, adapt_every=2, batch=2, seq_len=16)
+    ev = list(rec.events)
+    spans = [e["name"] for e in ev if e["kind"] == "B"]
+    assert "adapt.burst" in spans
+    assert "adapt.replan_check" in spans
+    assert "adapt.replan" in spans
+    assert rec.counter("adapt.replans").value == len(r.replans) == 1
+    assert rec.counter("adapt.bursts").value == len(r.burst_phase)
+    drift = [e for e in ev if e["kind"] == "G"
+             and e["name"] == "adapt.ledger.drift"]
+    assert drift, "ledger drift gauge never sampled"
+    # ledger_checks rounds to 4 decimals; the gauge keeps full precision
+    assert round(drift[0]["value"], 4) == r.ledger_checks[0]["drift"]
+    # serving and adaptation interleave on one timeline
+    assert "serve.run" in spans
+
+
+# --------------------------------------------------------------------------
+# telemetry-contract lint rule
+# --------------------------------------------------------------------------
+
+_VIOLATING = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+
+
+    @jax.jit
+    def step(x, rec):
+        y = jnp.sum(x)
+        rec.observe("loss", y)
+        return y
+
+
+    def serve_loop(xs, rec):
+        for x in xs:
+            v = jnp.mean(x)
+            rec.set_gauge("v", v)
+""")
+
+_CLEAN = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+
+
+    @jax.jit
+    def step(x):
+        return jnp.sum(x)
+
+
+    def serve_loop(xs, rec):
+        for x in xs:
+            v = jnp.mean(x)
+        h = float(jax.device_get(v))
+        rec.set_gauge("v", h)
+""")
+
+_SUPPRESSED = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+
+
+    def serve_loop(xs, rec):
+        for x in xs:
+            v = jnp.mean(x)
+            rec.set_gauge("v", v)  # repro-lint: disable=telemetry-contract
+""")
+
+
+def _lint_fixture(tmp_path, source):
+    mod = tmp_path / "src" / "repro" / "runtime" / "fixture_mod.py"
+    mod.parent.mkdir(parents=True, exist_ok=True)
+    mod.write_text(source)
+    return run_lint(root=str(tmp_path), select=["telemetry-contract"])
+
+
+def test_contract_flags_violations(tmp_path):
+    found = _lint_fixture(tmp_path, _VIOLATING)
+    live = [f for f in found if not f.suppressed]
+    assert len(live) == 2
+    assert any("inside traced code" in f.message for f in live)
+    assert any("device value inside a loop body" in f.message for f in live)
+
+
+def test_contract_passes_clean_code(tmp_path):
+    assert _lint_fixture(tmp_path, _CLEAN) == []
+
+
+def test_contract_respects_suppression(tmp_path):
+    found = _lint_fixture(tmp_path, _SUPPRESSED)
+    assert found and all(f.suppressed for f in found)
+
+
+def test_contract_clean_at_head():
+    """The shipped tree has zero unsuppressed telemetry-contract findings."""
+    found = run_lint(select=["telemetry-contract"])
+    assert [f for f in found if not f.suppressed] == []
