@@ -5,10 +5,18 @@ Examples:
     python -m repro.analysis --format json
     python -m repro.analysis --select jit-purity src/repro/runtime
     python -m repro.analysis --ignore partition-coverage --format text
+    python -m repro.analysis --plane graph --format json
+    python -m repro.analysis --plane graph --update-golden
 
 Exit status is 0 when no *unsuppressed* findings remain, 1 otherwise
 (suppressed findings are still reported, flagged, so CI artifacts keep
 the full audit trail).
+
+``--plane`` picks the rule plane (DESIGN.md §11 and §14): ``ast`` rules
+read the source, ``graph`` rules read what JAX traces and compiles
+(vjp residuals, collectives, donation aliasing, jit-cache signatures);
+``all`` runs both.  ``--update-golden`` regenerates the graph plane's
+per-family residual-census fixture instead of linting.
 """
 from __future__ import annotations
 
@@ -18,13 +26,17 @@ import sys
 
 def build_parser() -> argparse.ArgumentParser:
     from repro.analysis.rules import RULES
+    from repro.analysis.core import PLANES
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="repro-lint: static contract checks for ASI residuals, "
                     "jit purity, partition coverage, Pallas geometry, and "
-                    "launch shims.",
+                    "launch shims (ast plane), plus jaxpr/HLO-level proofs "
+                    "for residuals, collectives, donation, and recompilation "
+                    "(graph plane).",
         epilog="rules: " + "; ".join(
-            f"{name} — {doc}" for name, (_s, _f, doc) in sorted(RULES.items())))
+            f"{name} [{PLANES.get(name, 'ast')}] — {doc}"
+            for name, (_s, _f, doc) in sorted(RULES.items())))
     p.add_argument("paths", nargs="*",
                    help="files or directories to lint (default: src/repro)")
     p.add_argument("--format", choices=("text", "json"), default="text",
@@ -32,13 +44,20 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--select", action="append", default=None,
                    metavar="RULE",
                    help="run only these rules (repeatable, or comma-"
-                        "separated)")
+                        "separated; overrides --plane)")
     p.add_argument("--ignore", action="append", default=None,
                    metavar="RULE",
                    help="skip these rules (repeatable, or comma-separated)")
     p.add_argument("--root", default=None,
                    help="repo root (default: auto-detected from the "
                         "installed package location)")
+    p.add_argument("--plane", choices=("ast", "graph", "all"), default="ast",
+                   help="rule plane: ast = source-level, graph = jaxpr/HLO-"
+                        "level, all = both (default: ast)")
+    p.add_argument("--update-golden", action="store_true",
+                   help="regenerate the graph plane's golden residual-census "
+                        "fixture (src/repro/analysis/graph/"
+                        "golden_residuals.json) and exit")
     return p
 
 
@@ -57,11 +76,17 @@ def main(argv=None) -> int:
     from repro.analysis import rules  # noqa: F401  (registers rules)
 
     root = args.root or core.find_repo_root()
+    if args.update_golden:
+        from repro.analysis.graph import residual_audit
+        path = residual_audit.update_golden()
+        print(f"repro-lint: wrote {path}")
+        return 0
     findings = core.run_lint(root=root, paths=args.paths or None,
                              select=_split(args.select),
-                             ignore=_split(args.ignore))
+                             ignore=_split(args.ignore),
+                             plane=args.plane)
     if args.format == "json":
-        print(core.render_json(findings, root))
+        print(core.render_json(findings, root, plane=args.plane))
     else:
         print(core.render_text(findings))
     return 1 if any(not f.suppressed for f in findings) else 0

@@ -12,6 +12,12 @@ Two kinds of rules register here:
 Rules yield ``Finding`` objects; the driver stamps ``suppressed`` by
 consulting the per-line ``# repro-lint: disable=<rule>`` table, so rule
 implementations never deal with suppression logic themselves.
+
+Rules also carry a *plane* (DESIGN.md §14): ``ast`` rules read source
+text, ``graph`` rules read what JAX actually traces/compiles (jaxpr
+residuals, compiled-HLO collectives, executable aliasing, abstract call
+signatures).  ``run_lint(plane=...)`` selects one plane or ``all``; both
+planes share this registry, the suppression table, and the renderers.
 """
 from __future__ import annotations
 
@@ -27,6 +33,17 @@ SUPPRESS_RE = re.compile(
 
 #: rule name -> (scope, callable, one-line description)
 RULES: dict[str, tuple[str, Callable, str]] = {}
+
+#: rule name -> plane ("ast" | "graph"); parallel to RULES so existing
+#: consumers unpacking the 3-tuple keep working
+PLANES: dict[str, str] = {}
+
+
+def rules_in_plane(plane: str) -> list[str]:
+    """Sorted rule names for one plane (or every plane for ``all``)."""
+    if plane == "all":
+        return sorted(RULES)
+    return sorted(n for n in RULES if PLANES.get(n, "ast") == plane)
 
 
 @dataclasses.dataclass
@@ -87,12 +104,15 @@ class FileContext:
         return rule in names or "all" in names
 
 
-def rule(name: str, scope: str = "file", doc: str = ""):
-    """Register ``fn`` as a lint rule.  ``scope`` is ``file`` or ``tree``."""
+def rule(name: str, scope: str = "file", doc: str = "", plane: str = "ast"):
+    """Register ``fn`` as a lint rule.  ``scope`` is ``file`` or ``tree``;
+    ``plane`` is ``ast`` (source-level) or ``graph`` (jaxpr/HLO-level)."""
     assert scope in ("file", "tree"), scope
+    assert plane in ("ast", "graph"), plane
     def wrap(fn):
         RULES[name] = (scope, fn, doc or (fn.__doc__ or "").strip()
                        .splitlines()[0] if (doc or fn.__doc__) else "")
+        PLANES[name] = plane
         return fn
     return wrap
 
@@ -141,10 +161,16 @@ def find_repo_root(start: str | None = None) -> str:
 def run_lint(root: str | None = None,
              paths: Iterable[str] | None = None,
              select: Iterable[str] | None = None,
-             ignore: Iterable[str] | None = None) -> list[Finding]:
+             ignore: Iterable[str] | None = None,
+             plane: str = "ast") -> list[Finding]:
     """Run the registered rules and return all findings (suppressed ones
     included, flagged).  Import rule modules before calling this — the
-    CLI and ``scripts/repro_lint.py`` do so via ``repro.analysis.rules``."""
+    CLI and ``scripts/repro_lint.py`` do so via ``repro.analysis.rules``.
+
+    ``plane`` selects which rule plane runs (``ast`` | ``graph`` | ``all``);
+    an explicit ``select`` overrides the plane filter so tests and the CLI
+    can target one graph rule without flipping ``--plane``."""
+    assert plane in ("ast", "graph", "all"), plane
     root = root or find_repo_root()
     active = dict(RULES)
     if select:
@@ -154,6 +180,9 @@ def run_lint(root: str | None = None,
             raise SystemExit(f"repro-lint: unknown rule(s) in --select: "
                              f"{', '.join(sorted(unknown))}")
         active = {k: v for k, v in active.items() if k in wanted}
+    elif plane != "all":
+        active = {k: v for k, v in active.items()
+                  if PLANES.get(k, "ast") == plane}
     if ignore:
         active = {k: v for k, v in active.items() if k not in set(ignore)}
 
@@ -198,15 +227,17 @@ def render_text(findings: list[Finding]) -> str:
     return "\n".join(lines)
 
 
-def render_json(findings: list[Finding], root: str) -> str:
+def render_json(findings: list[Finding], root: str,
+                plane: str = "ast") -> str:
     counts: dict[str, int] = {}
     for f in findings:
         if not f.suppressed:
             counts[f.rule] = counts.get(f.rule, 0) + 1
     doc = {
-        "version": 1,
+        "version": 2,
         "root": root,
-        "rules": sorted(RULES),
+        "plane": plane,
+        "rules": rules_in_plane(plane),
         "findings": [f.to_dict() for f in findings],
         "counts": counts,
         "total": sum(counts.values()),

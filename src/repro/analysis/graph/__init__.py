@@ -1,0 +1,32 @@
+"""graph-lint: the jaxpr/HLO-level rule plane (DESIGN.md §14).
+
+The ast plane (§11) reasons about what the *source* says; these rules
+reason about what JAX actually *traces and compiles*, closing the blind
+spots inherent to taint analysis (helpers it cannot inline, custom_vjp
+it cannot see through).  Four rule families:
+
+- ``residual-audit``   — enumerate the train-step vjp residuals per
+  registry family, classify each by shape/site, reconcile ASI factor
+  bytes against the analytic ledger (0% gap), and flag any dense
+  ``(B, S, d)`` activation save at its producing source line.
+- ``collectives-audit`` — compile the dp/fsdp/tp train steps on a
+  forced-host-device mesh and gate per-kind collective counts against
+  ``parallel.partition.COMM_SIGNATURE``.
+- ``donation-audit``   — verify every buffer declared donated in the
+  train/serve jits is actually aliased in the lowered module
+  (``tf.aliasing_output``); a dead donation is a silent 2x on the
+  buffers the paper's memory claims count.
+- ``recompile-audit``  — hash abstract call signatures across shape
+  sweeps (prefill chunks, grad-accum, rank plans) and flag weak-type /
+  python-scalar leaks that would fragment the jit cache.
+
+All rules run device-free except collectives-audit, which needs a real
+multi-device backend and therefore compiles in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+from repro.analysis.graph import collectives_audit  # noqa: F401
+from repro.analysis.graph import donation_audit  # noqa: F401
+from repro.analysis.graph import recompile_audit  # noqa: F401
+from repro.analysis.graph import residual_audit  # noqa: F401

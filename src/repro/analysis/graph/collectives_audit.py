@@ -1,0 +1,146 @@
+"""collectives-audit: gate the compiled train step's communication
+pattern against the layout's declared signature.
+
+Collectives only exist *after* the SPMD partitioner runs, so this is the
+one graph rule that cannot be device-free: the train step is compiled on
+an 8-way forced-host-device mesh (in a subprocess when the current
+process was not started with the XLA flag — device flags are read once
+at backend init) and the per-device HLO is counted per collective kind
+(``roofline.collective_counts``).  Counts are gated against
+``parallel.partition.COMM_SIGNATURE``: a kind outside its layout's row
+(a collective-permute in dp, an all-to-all in a pure-DP backward) is the
+silent comm regression that erases the layout's scaling story without
+failing a single numeric test.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator
+
+from repro.analysis.core import Finding, rule
+from repro.analysis.graph import harness
+
+PARTITION_REL = "src/repro/parallel/partition.py"
+LAYOUTS_ENV = "REPRO_GRAPH_LAYOUTS"
+ARCH_ENV = "REPRO_GRAPH_COLLECTIVES_ARCH"
+DEFAULT_ARCH = "tinyllama-1.1b"
+
+_WORKER = """
+import json
+import jax, jax.numpy as jnp
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.data.synthetic import LMStream, LMStreamCfg
+from repro.optim.optimizers import make_optimizer
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.train_loop import make_mesh_plan, make_train_step
+from repro.launch.mesh import make_layout_mesh
+from repro.launch.roofline import collective_counts
+
+ARCH = {arch!r}
+LAYOUTS = {layouts!r}
+cfg = get_config(ARCH).reduced().replace(compress="asi")
+api = build_model(cfg)
+key = jax.random.PRNGKey(0)
+data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=16,
+                            global_batch=8, seed=0, branching=2))
+out = {{}}
+for layout in LAYOUTS:
+    params = jax.eval_shape(api.init, key)
+    asi = jax.eval_shape(api.init_asi, key)
+    mask = api.trainable_mask(params)
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 1, 6), clip_norm=2.0)
+    opt_state = jax.eval_shape(opt.init, params)
+    batch = data.batch(0)
+    mesh = make_layout_mesh(layout, (2, 4) if layout == "tp" else None)
+    plan = make_mesh_plan(cfg, mesh, layout, params, opt_state, asi, batch)
+    step = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                           trainable_mask=mask,
+                           kernel_backend=cfg.kernel_backend,
+                           plan=plan, grad_accum=1)
+    with plan.activate():
+        lowered = step.lower(params, opt_state, asi, batch, jnp.int32(0))
+    out[layout] = collective_counts(lowered.compile().as_text())
+print(json.dumps(out))
+"""
+
+
+def measured_counts(arch: str, layouts: list[str]) -> dict[str, dict]:
+    """Per-layout collective counts of the compiled train step, via a
+    forced-8-device subprocess."""
+    code = _WORKER.format(arch=arch, layouts=list(layouts))
+    stdout = harness.run_forced_devices(code)
+    return json.loads(stdout.strip().splitlines()[-1])
+
+
+def signature_findings(layout: str, counts: dict[str, int],
+                       signature: dict[str, dict],
+                       anchor_line: int = 1) -> Iterator[Finding]:
+    """Gate one layout's measured counts against the declared signature
+    (separated from the rule so tests can feed a deliberately wrong
+    signature without an 8-device compile)."""
+    row = signature.get(layout)
+    if row is None:
+        yield Finding(rule="collectives-audit", path=PARTITION_REL,
+                      line=anchor_line,
+                      message=f"layout {layout!r} has no COMM_SIGNATURE row")
+        return
+    for kind, n in sorted(counts.items()):
+        bounds = row.get(kind)
+        if bounds is None:
+            if n:
+                yield Finding(
+                    rule="collectives-audit", path=PARTITION_REL,
+                    line=anchor_line,
+                    message=f"{layout}: {n} {kind} op(s) in the compiled "
+                            f"train step but COMM_SIGNATURE forbids "
+                            f"{kind} for this layout")
+            continue
+        lo, hi = bounds
+        if n < lo or (hi is not None and n > hi):
+            yield Finding(
+                rule="collectives-audit", path=PARTITION_REL,
+                line=anchor_line,
+                message=f"{layout}: {kind} count {n} outside declared "
+                        f"bounds [{lo}, {'inf' if hi is None else hi}]")
+    for kind, (lo, _hi) in sorted(row.items()):
+        if lo > 0 and counts.get(kind, 0) == 0:
+            yield Finding(
+                rule="collectives-audit", path=PARTITION_REL,
+                line=anchor_line,
+                message=f"{layout}: required {kind} is absent — the "
+                        f"layout's structural collective disappeared "
+                        f"(e.g. gradients no longer synchronized)")
+
+
+def _anchor_line(contexts) -> int:
+    for ctx in contexts:
+        if ctx.rel == PARTITION_REL:
+            for lineno, text in enumerate(ctx.source.splitlines(), start=1):
+                if text.startswith("COMM_SIGNATURE"):
+                    return lineno
+    return 1
+
+
+@rule("collectives-audit", scope="tree", plane="graph",
+      doc="compiled dp/fsdp/tp train-step collectives vs the declared "
+          "per-layout COMM_SIGNATURE (8 forced host devices, subprocess)")
+def check_collectives(root, contexts) -> Iterator[Finding]:
+    from repro.parallel.partition import COMM_SIGNATURE
+    arch = os.environ.get(ARCH_ENV, DEFAULT_ARCH)
+    layouts = [l.strip() for l in
+               os.environ.get(LAYOUTS_ENV, "dp,fsdp,tp").split(",")
+               if l.strip()]
+    anchor = _anchor_line(contexts)
+    try:
+        measured = measured_counts(arch, layouts)
+    except Exception as e:  # subprocess/toolchain failure is itself a finding
+        yield Finding(rule="collectives-audit", path=PARTITION_REL,
+                      line=anchor,
+                      message=f"could not compile train steps for "
+                              f"collective counting: {e}")
+        return
+    for layout in layouts:
+        yield from signature_findings(layout, measured[layout],
+                                      COMM_SIGNATURE, anchor)

@@ -1,0 +1,166 @@
+"""donation-audit: every declared donation must be an actual alias.
+
+``donate_argnums`` is a *request*; XLA silently drops the donations it
+cannot match to an output (dtype/shape mismatch, buffer still live), and
+a dropped donation on the KV cache or optimizer state is a silent 2x on
+exactly the buffers the paper's memory claims count.  The lowered module
+records the compiler's decision as a ``tf.aliasing_output`` attribute on
+each ``@main`` parameter it will reuse, so the audit is device-free:
+lower each declared donation site with abstract arguments (CPU lowering
+still records aliasing even though the CPU runtime ignores donation —
+the serve engine takes ``donate=True`` to force the request on) and
+demand one alias per donated leaf.
+
+Sites covered: the sharded/unsharded train step and the serve engine's
+decode hot path — ``_step``, ``_write_slot`` (dense), ``_step_paged``,
+``_write_paged`` (paged), and the chunked-prefill ``_chunk_runner``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.core import Finding, rule
+from repro.analysis.graph import harness
+
+TRAIN_REL = "src/repro/runtime/train_loop.py"
+SERVE_REL = "src/repro/runtime/serve_loop.py"
+ARCH_ENV = "REPRO_GRAPH_DONATION_ARCH"
+DEFAULT_ARCH = "tinyllama-1.1b"
+
+
+@dataclasses.dataclass
+class DonationSite:
+    """One jitted call site with declared donations, ready to lower."""
+    name: str
+    path: str                  # repo-relative anchor file
+    marker: str                # source line locating the jit construction
+    jitted: Any
+    example_args: tuple
+    donate_argnums: tuple
+
+
+def _i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def collect_sites(arch: str = DEFAULT_ARCH) -> list[DonationSite]:
+    """Build every donation site on one representative family with
+    abstract example arguments (nothing here touches a device)."""
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import LMStream, LMStreamCfg
+    from repro.models import build_model
+    from repro.optim.optimizers import make_optimizer
+    from repro.optim.schedules import warmup_cosine
+    from repro.runtime.serve_loop import Engine, ServeCfg
+    from repro.runtime.train_loop import make_train_step
+
+    cfg = get_config(arch).reduced().replace(compress="asi")
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    key_struct = jax.ShapeDtypeStruct(key.shape, key.dtype)
+    params = jax.eval_shape(api.init, key)
+    asi = jax.eval_shape(api.init_asi, key)
+    mask = api.trainable_mask(params)
+    opt = make_optimizer("adamw", warmup_cosine(1e-3, 1, 4), clip_norm=2.0)
+    opt_state = jax.eval_shape(opt.init, params)
+    batch = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=16,
+                                 global_batch=4, seed=0,
+                                 branching=2)).batch(0)
+    step = make_train_step(lambda p, b, s: api.loss(p, b, s), opt,
+                           trainable_mask=mask, donate=True,
+                           kernel_backend=cfg.kernel_backend)
+    sites = [DonationSite(
+        name="train._step", path=TRAIN_REL, marker="jit_kw",
+        jitted=step,
+        example_args=(params, opt_state, asi, batch, _i32()),
+        donate_argnums=(0, 1, 2))]
+
+    B, max_len, bs = 2, 32, 8
+    scfg = ServeCfg(max_batch=B, max_len=max_len, cache="dense",
+                    prefill_chunk=bs)
+    eng = Engine(api, params, scfg, donate=True)
+    state = {"tok": _i32((B,)), "pos": _i32((B,)), "rem": _i32((B,)),
+             "active": jax.ShapeDtypeStruct((B,), jnp.bool_)}
+    cache = jax.eval_shape(lambda: api.init_cache(B, max_len))
+    one = jax.eval_shape(lambda: api.init_cache(1, max_len))
+    sites += [
+        DonationSite(name="serve._step", path=SERVE_REL,
+                     marker="self._step = jax.jit",
+                     jitted=eng._step,
+                     example_args=(params, cache, state, key_struct),
+                     donate_argnums=(1, 2)),
+        DonationSite(name="serve._write_slot", path=SERVE_REL,
+                     marker="self._write_slot = jax.jit",
+                     jitted=eng._write_slot,
+                     example_args=(cache, one, _i32()),
+                     donate_argnums=(0,)),
+        DonationSite(name="serve._chunk_runner", path=SERVE_REL,
+                     marker="fn = jax.jit(scan_chunk",
+                     jitted=eng._chunk_runner(bs, None),
+                     example_args=(params, one, _i32((bs,)), _i32(), _i32()),
+                     donate_argnums=(1,)),
+    ]
+
+    pcfg = ServeCfg(max_batch=B, max_len=max_len, cache="paged",
+                    page_block=bs, pool_blocks=B * (max_len // bs) + 1)
+    peng = Engine(api, params, pcfg, donate=True)
+    pcache = jax.eval_shape(
+        lambda: api.init_paged_cache(B, peng._pool_blocks, bs))
+    table = _i32((B, max_len // bs))
+    sites += [
+        DonationSite(name="serve._step_paged", path=SERVE_REL,
+                     marker="self._step_paged = jax.jit",
+                     jitted=peng._step_paged,
+                     example_args=(params, pcache, state, table, key_struct),
+                     donate_argnums=(1, 2)),
+        DonationSite(name="serve._write_paged", path=SERVE_REL,
+                     marker="self._write_paged = jax.jit",
+                     jitted=peng._write_paged,
+                     example_args=(pcache, one, _i32((max_len // bs,)),
+                                   _i32()),
+                     donate_argnums=(0,)),
+    ]
+    return sites
+
+
+def _marker_line(root: str, rel: str, marker: str) -> int:
+    try:
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            for lineno, text in enumerate(f, start=1):
+                if marker in text:
+                    return lineno
+    except OSError:
+        pass
+    return 1
+
+
+def site_findings(site: DonationSite, root: str) -> Iterator[Finding]:
+    donated, aliased = harness.audit_donation(
+        site.jitted, site.example_args, site.donate_argnums)
+    if aliased < donated:
+        yield Finding(
+            rule="donation-audit", path=site.path,
+            line=_marker_line(root, site.path, site.marker),
+            message=f"{site.name}: {donated - aliased} of {donated} donated "
+                    f"buffer(s) not aliased in the lowered module — dead "
+                    f"donation(s); the freed-in-place memory the serve/"
+                    f"train budget counts on is not actually freed")
+    elif donated == 0:
+        yield Finding(
+            rule="donation-audit", path=site.path,
+            line=_marker_line(root, site.path, site.marker),
+            message=f"{site.name}: declared donation site donates nothing")
+
+
+@rule("donation-audit", scope="tree", plane="graph",
+      doc="declared donate_argnums in train/serve jits are actually "
+          "aliased in the lowered executable (tf.aliasing_output)")
+def check_donation(root, contexts) -> Iterator[Finding]:
+    arch = os.environ.get(ARCH_ENV, DEFAULT_ARCH)
+    for site in collect_sites(arch):
+        yield from site_findings(site, root)

@@ -1,0 +1,311 @@
+"""Shared machinery for the graph-lint rules: family iteration, residual
+enumeration off the traced vjp, source attribution, lowered-module alias
+parsing, and abstract-signature hashing.
+
+Everything here is device-free: model state comes from ``eval_shape``,
+residuals from ``jax.make_jaxpr`` over the vjp *pullback* (its closed-over
+leaves are exactly the jaxpr outputs), donation aliasing from ``.lower()``
+text.  Only the collectives audit needs real devices and goes through
+:func:`run_forced_devices`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import os
+import re
+import subprocess
+import sys
+from functools import partial
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+BYTES_PER_ELEM = 4          # residual accounting is fp32, like the ledger
+
+#: census shape used everywhere (goldens, ledger reconciliation, tests)
+CENSUS_BATCH, CENSUS_SEQ = 2, 16
+
+#: narrow a sweep for tests / local runs: comma-separated arch names
+FAMILIES_ENV = "REPRO_GRAPH_FAMILIES"
+
+
+def iter_families() -> Iterator[tuple[str, Any, Any]]:
+    """Yield ``(arch, cfg, api)`` for every registry family (reduced shapes,
+    ASI compression on — the configuration whose memory story the paper's
+    headline table measures)."""
+    from repro.configs.registry import ARCHS, get_config
+    from repro.models import build_model
+    only = os.environ.get(FAMILIES_ENV, "")
+    wanted = [a.strip() for a in only.split(",") if a.strip()] or list(ARCHS)
+    for arch in wanted:
+        cfg = get_config(arch).reduced().replace(compress="asi")
+        yield arch, cfg, build_model(cfg)
+
+
+# --------------------------------------------------------------------------
+# residual enumeration + classification
+
+@dataclasses.dataclass
+class ResidualRecord:
+    """One saved vjp residual: shape, classification, producing source."""
+    shape: tuple[int, ...]
+    dtype: str
+    category: str               # factor | param | dense | other | meta
+    nbytes: int
+    path: str | None = None     # repo-relative producer, when attributable
+    line: int = 0
+    primitive: str = ""
+
+
+@dataclasses.dataclass
+class Census:
+    """Residual census of one family's train step at the census shape."""
+    arch: str
+    counts: dict[str, int]
+    factor_bytes: int
+    ledger_bytes: int
+    factor_match: bool
+    records: list[ResidualRecord]
+
+    @property
+    def reconciled(self) -> bool:
+        return self.factor_match and self.factor_bytes == self.ledger_bytes
+
+    def summary(self) -> dict:
+        return {"counts": dict(sorted(self.counts.items())),
+                "factor_bytes": self.factor_bytes,
+                "ledger_bytes": self.ledger_bytes}
+
+
+def residual_jaxpr(loss_fn: Callable, *example_args):
+    """jaxpr whose outputs are the vjp residuals of ``loss_fn``.
+
+    The pullback returned by ``jax.vjp`` closes over every tensor the
+    backward pass needs; returning it makes those tensors the traced
+    function's outputs, so ``make_jaxpr`` enumerates the residual set
+    without touching a device.  ``has_aux=True`` mirrors the trainer's
+    ``value_and_grad(loss_fn, has_aux=True)`` contract.
+    """
+    def resid(params, batch, asi):
+        _out, pullback, _aux = jax.vjp(
+            lambda p, s: loss_fn(p, batch, s), params, asi, has_aux=True)
+        return pullback
+    return jax.make_jaxpr(resid)(*example_args)
+
+
+def _producer_map(jaxpr) -> dict[int, Any]:
+    prod: dict[int, Any] = {}
+    for eqn in jaxpr.jaxpr.eqns:
+        for ov in eqn.outvars:
+            prod[id(ov)] = eqn
+    return prod
+
+
+def _attribute(eqn) -> tuple[str | None, int, str]:
+    """(repo-relative path, line, primitive) of the first repro-owned frame
+    on the producing equation's traceback (jit/vjp framework frames are
+    upstream jax files and get skipped)."""
+    if eqn is None:
+        return None, 0, ""
+    prim = eqn.primitive.name
+    tb = eqn.source_info.traceback
+    if tb is None:
+        return None, 0, prim
+    for frame in tb.frames:
+        if "/src/repro/" in frame.file_name:
+            rel = "src/repro/" + frame.file_name.split("/src/repro/")[-1]
+            return rel, frame.line_num, prim
+    return None, 0, prim
+
+
+def ledger_expectation(cfg, batch: int, seq_len: int):
+    """The analytic side of the reconciliation: the exact multiset of ASI
+    factor shapes the ledger predicts the backward pass saves, plus the
+    site extents the dense-residual heuristic keys on."""
+    from repro.ondevice import ledger as ledger_lib
+    led = ledger_lib.build_ledger(cfg, batch, seq_len)
+    expected: collections.Counter = collections.Counter()
+    site_ks: set[int] = set()
+    token_extents: set[int] = set()
+    for row in led.rows:
+        site, r = row.site, row.rank
+        site_ks.add(site.k)
+        token_extents.add(site.tokens)
+        if site.kind == "grouped":
+            expected[(site.groups, site.tokens, r)] += 1
+            expected[(site.groups, site.k, r)] += 1
+        else:
+            expected[(site.tokens, r)] += 1
+            expected[(site.k, r)] += 1
+    return led, expected, site_ks, token_extents
+
+
+def classify_residuals(jaxpr, expected: collections.Counter,
+                       param_shapes: collections.Counter,
+                       site_ks: set[int], token_extents: set[int]
+                       ) -> list[ResidualRecord]:
+    """Classify every residual (jaxpr output) by shape:
+
+    - ``meta``   — non-float / rank<=1 / empty: counters, masks, indices;
+    - ``factor`` — matches the ledger's expected ASI factor multiset
+      (greedy: each expected shape absorbs at most its predicted count);
+    - ``param``  — a saved weight (weights are alive anyway, zero marginal
+      activation cost);
+    - ``dense``  — token-extent leading dims with a site-k feature tail:
+      a full activation the paper says must never be saved;
+    - ``other``  — small per-token intermediates (norm scales, logits
+      slices) that are neither factors nor full activations.
+    """
+    prod = _producer_map(jaxpr)
+    factor_seen: collections.Counter = collections.Counter()
+    records: list[ResidualRecord] = []
+    for ov in jaxpr.jaxpr.outvars:
+        av = ov.aval
+        shape = tuple(getattr(av, "shape", ()))
+        dtype = getattr(av, "dtype", None)
+        nbytes = int(getattr(av, "size", 0)) * BYTES_PER_ELEM
+        is_float = dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+        rec = ResidualRecord(shape=shape, dtype=str(dtype), category="other",
+                             nbytes=nbytes)
+        if not is_float or len(shape) <= 1 or min(shape) == 0:
+            rec.category = "meta"
+            records.append(rec)
+            continue
+        if factor_seen[shape] < expected[shape]:
+            factor_seen[shape] += 1
+            rec.category = "factor"
+            records.append(rec)
+            continue
+        if param_shapes[shape]:
+            rec.category = "param"
+            records.append(rec)
+            continue
+        lead = math.prod(shape[:-1])
+        lead2 = math.prod(shape[:-2])
+        is_dense = (lead in token_extents and shape[-1] in site_ks) or \
+                   (shape[-1] in site_ks and lead2 in token_extents)
+        rec.path, rec.line, rec.primitive = _attribute(prod.get(id(ov)))
+        rec.category = "dense" if is_dense else "other"
+        records.append(rec)
+    return records
+
+
+def census_family(arch: str, cfg, api,
+                  batch: int = CENSUS_BATCH,
+                  seq_len: int = CENSUS_SEQ,
+                  loss_fn: Callable | None = None) -> Census:
+    """Full residual census of one family's train step.
+
+    ``loss_fn`` defaults to the family's real ``api.loss``; tests inject a
+    wrapped loss (e.g. a custom_vjp saving a dense activation) to prove the
+    census sees through constructs AST taint cannot.
+    """
+    from repro.ondevice import ledger as ledger_lib
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(api.init, key)
+    asi = jax.eval_shape(partial(api.init_asi, rank_plan=None), key)
+    batch_struct = ledger_lib._batch_struct(cfg, batch, seq_len)
+    led, expected, site_ks, token_extents = ledger_expectation(
+        cfg, batch, seq_len)
+    jaxpr = residual_jaxpr(loss_fn or api.loss, params, batch_struct, asi)
+    param_shapes = collections.Counter(
+        tuple(leaf.shape) for leaf in jax.tree.leaves(params))
+    records = classify_residuals(jaxpr, expected, param_shapes,
+                                 site_ks, token_extents)
+    counts = collections.Counter(r.category for r in records)
+    factor_bytes = sum(r.nbytes for r in records if r.category == "factor")
+    factor_match = (collections.Counter(
+        r.shape for r in records if r.category == "factor") == expected)
+    return Census(arch=arch, counts=dict(counts), factor_bytes=factor_bytes,
+                  ledger_bytes=led.asi_total_bytes,
+                  factor_match=factor_match, records=records)
+
+
+# --------------------------------------------------------------------------
+# donation aliasing (lowered-module inspection, device-free)
+
+_ALIAS_RE = re.compile(r"tf\.aliasing_output")
+_ARG_RE = re.compile(r"%arg(\d+)((?::\s*tensor<[^>]*>)?\s*(\{[^}]*\})?)")
+
+
+def aliased_argument_count(lowered_text: str) -> int:
+    """Count ``@main`` parameters carrying ``tf.aliasing_output`` in a
+    lowered module's MLIR text — the compiler's own record of which donated
+    buffers it will actually reuse.  A donated-but-unaliased parameter is a
+    dead donation."""
+    main = lowered_text.split("func.func public @main", 1)
+    if len(main) < 2:
+        return len(_ALIAS_RE.findall(lowered_text))
+    # attributes live in the {...} block attached to each %arg in the
+    # signature; counting alias attrs before the function body starts
+    sig = main[1].split("{\n", 1)[0]
+    return len(_ALIAS_RE.findall(sig))
+
+
+def donated_leaf_count(example_args: tuple, donate_argnums: tuple) -> int:
+    """Flat leaf count across the donated positional arguments."""
+    return sum(len(jax.tree.leaves(example_args[i])) for i in donate_argnums)
+
+
+def audit_donation(jitted, example_args: tuple, donate_argnums: tuple
+                   ) -> tuple[int, int]:
+    """(donated_leaves, aliased_leaves) for one jitted call site, from the
+    device-free lowering of abstract arguments."""
+    lowered = jitted.lower(*example_args)
+    aliased = aliased_argument_count(lowered.as_text())
+    return donated_leaf_count(example_args, donate_argnums), aliased
+
+
+# --------------------------------------------------------------------------
+# abstract call-signature hashing (recompile audit)
+
+def signature_key(*args) -> tuple:
+    """Hashable abstract signature of a call: treedef + per-leaf
+    (shape, dtype, weak_type).  Two calls with different keys compile two
+    cache entries; a weak-type flip on an otherwise identical call is the
+    classic silent-recompile bug."""
+    leaves, treedef = jax.tree.flatten(args)
+    abstract = []
+    for leaf in leaves:
+        aval = jax.api_util.shaped_abstractify(leaf)
+        abstract.append((tuple(aval.shape), str(aval.dtype),
+                         bool(getattr(aval, "weak_type", False))))
+    return (str(treedef), tuple(abstract))
+
+
+def weak_typed_leaves(tree) -> list[tuple[str, tuple]]:
+    """(keypath, shape) of every weak-typed leaf — python scalars that
+    leaked into state a jitted call will close over or take as input."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        aval = jax.api_util.shaped_abstractify(leaf)
+        if getattr(aval, "weak_type", False):
+            out.append((jax.tree_util.keystr(path), tuple(aval.shape)))
+    return out
+
+
+# --------------------------------------------------------------------------
+# forced-device subprocess (collectives audit)
+
+def run_forced_devices(code: str, devices: int = 8, timeout: int = 1200
+                       ) -> str:
+    """Run ``code`` in a subprocess with ``devices`` forced host-platform
+    CPU devices (XLA device flags are read once at backend init, so a
+    multi-device compile from a single-device process needs a fresh
+    interpreter).  Returns stdout; raises on failure with both streams."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               JAX_PLATFORMS="cpu")
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"forced-device subprocess failed:\n{proc.stdout[-2000:]}"
+            f"\n{proc.stderr[-2000:]}")
+    return proc.stdout

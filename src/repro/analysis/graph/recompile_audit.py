@@ -1,0 +1,144 @@
+"""recompile-audit: the jit cache must stay where the design says it is.
+
+jax keys its compile cache on the *abstract* call signature — shapes,
+dtypes, weak-type bits, and the pytree structure.  A python scalar where
+an ``int32`` array belongs, or a rebuilt state tree whose treedef
+changed, silently doubles compiles without any numeric difference; on a
+long-lived on-device session that fragmentation is a latency cliff, not
+a correctness bug, so no numeric test catches it.  This rule hashes
+signatures (``harness.signature_key``) across the sweeps the runtime
+actually performs:
+
+- steady-state train steps (same shapes step after step) must map to ONE
+  signature, with no weak-typed leaves in the canonical state trees;
+- chunked prefill must fold every prompt length onto one compile key per
+  (chunk, embeds-shape) — ``Engine.prefill_compile_keys`` exposes the
+  admission plan; legacy whole-prompt prefill is bounded by the engine's
+  ``_PREFILL_MEMO_MAX`` eviction instead;
+- grad-accum microbatching happens *inside* the step: the outer
+  signature for accum=1 vs accum=4 over the same batch must agree;
+- equal rank plans must produce identical ASI-state signatures (rank
+  *changes* legitimately recompile; rank *equality* must not).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.core import Finding, rule
+from repro.analysis.graph import harness
+
+TRAIN_REL = "src/repro/runtime/train_loop.py"
+SERVE_REL = "src/repro/runtime/serve_loop.py"
+ARCH_ENV = "REPRO_GRAPH_RECOMPILE_ARCH"
+DEFAULT_ARCH = "tinyllama-1.1b"
+
+
+def _line(root: str, rel: str, marker: str) -> int:
+    try:
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            for lineno, text in enumerate(f, start=1):
+                if marker in text:
+                    return lineno
+    except OSError:
+        pass
+    return 1
+
+
+def audit_family(arch: str, root: str) -> Iterator[Finding]:
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import LMStream, LMStreamCfg
+    from repro.models import build_model
+    from repro.runtime.serve_loop import Engine, ServeCfg
+
+    cfg = get_config(arch).reduced().replace(compress="asi")
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(api.init, key)
+    asi = jax.eval_shape(api.init_asi, key)
+    data = LMStream(LMStreamCfg(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=4, seed=0, branching=2))
+
+    # steady-state train-step signatures: data batches at different steps
+    # and a fresh jnp.int32 counter must hash identically
+    keys = {harness.signature_key(params, asi, data.batch(t), jnp.int32(t))
+            for t in range(3)}
+    if len(keys) != 1:
+        yield Finding(
+            rule="recompile-audit", path=TRAIN_REL,
+            line=_line(root, TRAIN_REL, "def make_train_step"),
+            message=f"{arch}: {len(keys)} distinct train-step signatures "
+                    f"across 3 steady-state steps — every step should hit "
+                    f"one compile-cache entry")
+
+    # python scalars in state trees flip the weak-type bit and fork the
+    # cache; the canonical trees must carry none
+    for name, tree in (("params", params), ("asi_state", asi),
+                       ("batch", data.batch(0))):
+        for keypath, shape in harness.weak_typed_leaves(tree):
+            yield Finding(
+                rule="recompile-audit", path=TRAIN_REL,
+                line=_line(root, TRAIN_REL, "def make_train_step"),
+                message=f"{arch}: weak-typed leaf {name}{keypath} "
+                        f"shape {shape} — a python scalar leaked into a "
+                        f"jitted state tree (jit-cache fragmentation)")
+
+    # grad-accum reshapes *inside* the step: outer signature is invariant
+    if harness.signature_key(params, asi, data.batch(0)) != \
+            harness.signature_key(params, asi, data.batch(1)):
+        yield Finding(
+            rule="recompile-audit", path=TRAIN_REL,
+            line=_line(root, TRAIN_REL, "grad_accum"),
+            message=f"{arch}: consecutive batches from the same stream "
+                    f"have different abstract signatures")
+
+    # chunked prefill folds all prompt lengths onto one compile key
+    scfg = ServeCfg(max_batch=2, max_len=32, cache="dense", prefill_chunk=8)
+    eng = Engine(api, params, scfg)
+    lens = range(1, scfg.max_len - 1)
+    chunk_keys = eng.prefill_compile_keys(lens)
+    if len(chunk_keys) != 1:
+        yield Finding(
+            rule="recompile-audit", path=SERVE_REL,
+            line=_line(root, SERVE_REL, "def prefill_compile_keys"),
+            message=f"{arch}: chunked prefill touches {len(chunk_keys)} "
+                    f"compile keys over {len(list(lens))} prompt lengths — "
+                    f"must be 1 per (chunk, embeds-shape)")
+    legacy = Engine(api, params,
+                    ServeCfg(max_batch=2, max_len=32, cache="dense"))
+    legacy_keys = legacy.prefill_compile_keys(lens)
+    if len(legacy_keys) > Engine._PREFILL_MEMO_MAX:
+        yield Finding(
+            rule="recompile-audit", path=SERVE_REL,
+            line=_line(root, SERVE_REL, "_PREFILL_MEMO_MAX"),
+            message=f"{arch}: legacy prefill would compile "
+                    f"{len(legacy_keys)} entries, over the declared memo "
+                    f"bound {Engine._PREFILL_MEMO_MAX}")
+
+    # rank-plan determinism: equal plans => equal ASI-state signatures
+    from repro.ondevice.ledger import iter_asi_sites
+    sites = list(iter_asi_sites(cfg, 2, 16))
+    plan = {sites[0].name: 2} if sites else None
+    sig_a = harness.signature_key(jax.eval_shape(
+        partial(api.init_asi, rank_plan=plan), key))
+    sig_b = harness.signature_key(jax.eval_shape(
+        partial(api.init_asi, rank_plan=dict(plan) if plan else None), key))
+    if sig_a != sig_b:
+        yield Finding(
+            rule="recompile-audit", path=TRAIN_REL,
+            line=_line(root, TRAIN_REL, "def make_train_step"),
+            message=f"{arch}: identical rank plans produced different "
+                    f"ASI-state signatures — nondeterministic init_asi "
+                    f"structure would recompile every adaptation burst")
+
+
+@rule("recompile-audit", scope="tree", plane="graph",
+      doc="abstract call signatures stay stable across shape sweeps "
+          "(prefill chunks, grad-accum, rank plans); no weak-type leaks")
+def check_recompile(root, contexts) -> Iterator[Finding]:
+    arch = os.environ.get(ARCH_ENV, DEFAULT_ARCH)
+    yield from audit_family(arch, root)

@@ -1,0 +1,123 @@
+"""residual-audit: prove the paper's central memory claim on the traced
+graph.
+
+For every registry family this walks the train step's vjp residual set
+(``harness.residual_jaxpr``) and demands three things:
+
+1. **Reconciliation** — the residuals classified as ASI factors form
+   *exactly* the multiset of shapes the analytic ledger predicts, and
+   their bytes equal ``Ledger.asi_total_bytes`` to 0%.  The measured and
+   analytic activation-memory columns must be the same number or one of
+   them is lying.
+2. **No dense saves** — any residual shaped like a full token-extent
+   activation ``(B*S, d)`` / ``(B, S, d)`` is flagged at the source line
+   that produced it, no matter what code constructed it (custom_vjp,
+   helper, closure — constructs AST taint cannot see through).  The
+   benign dense saves inherent to backprop through the nonlinear tail
+   (norm/activation/residual-stream/loss) carry per-line suppressions
+   with justifications; anything new fails CI.
+3. **No drift** — the per-family census (category counts + bytes) must
+   match the committed golden fixture; intentional changes regenerate it
+   via ``python -m repro.analysis --plane graph --update-golden``.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+from typing import Iterator
+
+from repro.analysis.core import Finding, rule
+from repro.analysis.graph import harness
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__),
+                           "golden_residuals.json")
+#: repo-relative anchor for findings with no producing source line
+#: (reconciliation and golden drift are family-level facts)
+GOLDEN_REL = "src/repro/analysis/graph/golden_residuals.json"
+LEDGER_REL = "src/repro/ondevice/ledger.py"
+
+
+def load_golden() -> dict:
+    if not os.path.exists(GOLDEN_PATH):
+        return {"census_shape": list((harness.CENSUS_BATCH,
+                                      harness.CENSUS_SEQ)), "families": {}}
+    with open(GOLDEN_PATH, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def update_golden() -> str:
+    """Regenerate the golden census for every family in the current sweep
+    (honours ``REPRO_GRAPH_FAMILIES`` narrowing — existing entries for
+    families outside the sweep are preserved)."""
+    doc = load_golden()
+    doc["census_shape"] = [harness.CENSUS_BATCH, harness.CENSUS_SEQ]
+    for arch, cfg, api in harness.iter_families():
+        doc["families"][arch] = harness.census_family(arch, cfg, api
+                                                      ).summary()
+    doc["families"] = dict(sorted(doc["families"].items()))
+    with open(GOLDEN_PATH, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return GOLDEN_PATH
+
+
+def census_findings(censuses: list[harness.Census],
+                    golden: dict | None = None) -> Iterator[Finding]:
+    """Findings for a batch of family censuses (separated from the rule so
+    tests can feed synthetic censuses or injected loss functions)."""
+    golden = golden if golden is not None else load_golden()
+    dense: dict[tuple, dict] = {}
+    for census in censuses:
+        if not census.factor_match:
+            yield Finding(
+                rule="residual-audit", path=LEDGER_REL, line=1,
+                message=f"{census.arch}: saved ASI factor shapes do not "
+                        f"match the ledger's predicted multiset — the "
+                        f"backward pass is not saving what the analytic "
+                        f"memory column charges for")
+        elif census.factor_bytes != census.ledger_bytes:
+            yield Finding(
+                rule="residual-audit", path=LEDGER_REL, line=1,
+                message=f"{census.arch}: factor residual bytes "
+                        f"{census.factor_bytes} != ledger analytic bytes "
+                        f"{census.ledger_bytes} (gap must be 0%)")
+        for rec in census.records:
+            if rec.category != "dense":
+                continue
+            key = (rec.path or GOLDEN_REL, rec.line)
+            slot = dense.setdefault(key, {"n": 0, "arches": set(),
+                                          "shape": rec.shape,
+                                          "primitive": rec.primitive})
+            slot["n"] += 1
+            slot["arches"].add(census.arch)
+        entry = golden.get("families", {}).get(census.arch)
+        if entry is None:
+            yield Finding(
+                rule="residual-audit", path=GOLDEN_REL, line=1,
+                message=f"{census.arch}: no golden census entry — run "
+                        f"python -m repro.analysis --plane graph "
+                        f"--update-golden")
+        elif entry != census.summary():
+            yield Finding(
+                rule="residual-audit", path=GOLDEN_REL, line=1,
+                message=f"{census.arch}: residual census drifted from "
+                        f"golden {entry} -> {census.summary()}; if "
+                        f"intentional, regenerate with --update-golden")
+    for (path, line), slot in sorted(dense.items()):
+        arches = ",".join(sorted(slot["arches"]))
+        yield Finding(
+            rule="residual-audit", path=path, line=line,
+            message=f"dense activation saved as vjp residual (e.g. shape "
+                    f"{slot['shape']} by {slot['primitive']}; "
+                    f"{slot['n']} save(s) across {arches}) — the paper's "
+                    f"memory claim forbids dense (B,S,d) residuals")
+
+
+@rule("residual-audit", scope="tree", plane="graph",
+      doc="train-step vjp residuals: factor/ledger 0%-gap reconciliation, "
+          "dense-save detection at producer lines, golden census drift")
+def check_residuals(root, contexts) -> Iterator[Finding]:
+    censuses = [harness.census_family(arch, cfg, api)
+                for arch, cfg, api in harness.iter_families()]
+    yield from census_findings(censuses)

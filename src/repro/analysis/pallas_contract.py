@@ -11,6 +11,11 @@ out_shape=...)(*operands)`` in ``kernels/``:
 * ``pl.dslice(i * step, width)`` strides must step by exactly ``width`` —
   ``step != width`` silently reads overlapping or out-of-bounds columns of
   the padded dim;
+* ``input_output_aliases`` indices must name a real operand (past the
+  scalar-prefetch prefix) and a real out_shape entry, and an out_shape
+  built from ``<operand>.shape`` without an alias back to that operand is
+  a missed in-place update — the jit-side donation-audit (graph plane)
+  sees the same defect as an unaliased donated buffer;
 * ``GRAD_SKETCH_MAX_N`` is dispatch.py's private VMEM cap: referencing it
   anywhere else bypasses ``local_feature_dim``'s shard-awareness, and any
   dispatch function that divides widths by a mesh-axis size must consult
@@ -72,6 +77,71 @@ def _blockspec_parts(node: ast.expr):
     return shape_elts, lam
 
 
+def _operand_base(node: ast.expr) -> str | None:
+    """The name an operand expression is rooted at: ``pool`` for both
+    ``pool`` and ``pool.astype(...)`` — fluent conversions don't change
+    which buffer is being passed."""
+    while isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        node = node.func.value
+    return dotted_name(node)
+
+
+def _check_aliases(ctx: FileContext, call: ast.Call, operands: list,
+                   out_shape: list | None, nsp: int, env: dict):
+    """Validate ``input_output_aliases`` and flag missed aliasing."""
+    kw = {k.arg: k.value for k in call.keywords}
+    aliases = _resolve(kw.get("input_output_aliases"), env)
+    alias_map: dict[int, int] = {}
+    starred = any(isinstance(a, ast.Starred) for a in operands)
+    if isinstance(aliases, ast.Dict):
+        for knode, vnode in zip(aliases.keys, aliases.values):
+            kv, vv = _resolve(knode, env), _resolve(vnode, env)
+            if not (isinstance(kv, ast.Constant) and isinstance(kv.value, int)
+                    and isinstance(vv, ast.Constant)
+                    and isinstance(vv.value, int)):
+                continue
+            alias_map[kv.value] = vv.value
+            if kv.value < nsp:
+                yield Finding(
+                    "pallas-contract", ctx.rel, aliases.lineno,
+                    f"input_output_aliases names input {kv.value}, a "
+                    f"scalar-prefetch operand (first {nsp} operands) — "
+                    "scalars cannot alias an output buffer")
+            elif operands and not starred and kv.value >= len(operands):
+                yield Finding(
+                    "pallas-contract", ctx.rel, aliases.lineno,
+                    f"input_output_aliases names input {kv.value} but the "
+                    f"pallas_call is applied to {len(operands)} operands")
+            if out_shape is not None and vv.value >= len(out_shape):
+                yield Finding(
+                    "pallas-contract", ctx.rel, aliases.lineno,
+                    f"input_output_aliases names output {vv.value} but "
+                    f"only {len(out_shape)} out_shape entries are declared")
+    if out_shape is None or not operands or starred:
+        return
+    bases = [_operand_base(a) for a in operands]
+    for oi, entry in enumerate(out_shape):
+        entry = _resolve(entry, env)
+        if not (isinstance(entry, ast.Call)
+                and (call_name(entry) or "").endswith("ShapeDtypeStruct")
+                and entry.args):
+            continue
+        shape_arg = entry.args[0]
+        if not (isinstance(shape_arg, ast.Attribute)
+                and shape_arg.attr == "shape"):
+            continue
+        src = dotted_name(shape_arg.value)
+        for ii, base in enumerate(bases):
+            if src is not None and base == src and alias_map.get(ii) != oi:
+                yield Finding(
+                    "pallas-contract", ctx.rel, entry.lineno,
+                    f"out_shape[{oi}] reuses {src}.shape but operand {ii} "
+                    f"is not aliased to it — the kernel materializes a "
+                    f"full copy of {src}; declare "
+                    f"input_output_aliases={{{ii}: {oi}}} for an in-place "
+                    "update")
+
+
 def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
                        env: dict):
     kw = {k.arg: k.value for k in call.keywords}
@@ -109,6 +179,7 @@ def _check_pallas_call(ctx: FileContext, call: ast.Call, operands: list,
         yield Finding("pallas-contract", ctx.rel, call.lineno,
                       f"pallas_call declares {len(out_specs)} out_specs but "
                       f"{len(out_shape)} out_shape entries")
+    yield from _check_aliases(ctx, call, operands, out_shape, nsp, env)
 
     def check_spec(spec_node, what: str, rank_hint: int | None):
         shape_elts, lam = _blockspec_parts(_resolve(spec_node, env))
@@ -207,8 +278,8 @@ def _check_cap(ctx: FileContext):
 
 
 @rule("pallas-contract",
-      doc="BlockSpec/grid geometry, dslice strides, and the "
-          "GRAD_SKETCH_MAX_N shard-local discipline")
+      doc="BlockSpec/grid geometry, dslice strides, input_output_aliases "
+          "validity, and the GRAD_SKETCH_MAX_N shard-local discipline")
 def check_pallas(ctx: FileContext):
     if not ctx.rel.startswith("src/repro/"):
         return

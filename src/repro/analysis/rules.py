@@ -4,6 +4,7 @@ import this module once before calling ``run_lint``; tests can import it
 too and then select individual rules."""
 from __future__ import annotations
 
+from repro.analysis import graph  # noqa: F401  (graph-plane rule family)
 from repro.analysis import jit_purity  # noqa: F401
 from repro.analysis import pallas_contract  # noqa: F401
 from repro.analysis import partition_coverage  # noqa: F401

@@ -35,6 +35,7 @@ from repro.optim.schedules import constant
 from repro.parallel import partition
 from repro.parallel.sharding import axis_rules, rules_for
 from repro.runtime.train_loop import make_train_step
+from repro.telemetry import memstats
 
 
 # --------------------------------------------------------------------------
@@ -274,18 +275,7 @@ def _analyze_on_mesh(session, shape, mesh, *, multi_pod, seq_shard, seq_tp,
         compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
 
-    mem = {}
-    try:
-        ma = compiled.memory_analysis()
-        if ma is not None:
-            for k in ("argument_size_in_bytes", "output_size_in_bytes",
-                      "temp_size_in_bytes", "alias_size_in_bytes",
-                      "generated_code_size_in_bytes"):
-                v = getattr(ma, k, None)
-                if v is not None:
-                    mem[k] = int(v)
-    except Exception as e:                                  # noqa: BLE001
-        mem["error"] = str(e)
+    mem = memstats.compiled_memory_stats(compiled)
     cost = {}
     try:
         cost = flops_model.cost_analysis_dict(compiled)

@@ -67,9 +67,9 @@ def _fused_fwd(cfg: LinearCompressionCfg, x: Array, w: Array,
                                     backend=cfg.backend)
     p_hat = orthonormalize(p)
     q = x2d.T @ p_hat
-    y = y2d.reshape(x.shape[:-1] + (w.shape[-1],))
+    y = y2d.reshape(x.shape[:-1] + (w.shape[-1],))  # repro-lint: disable=residual-audit — the site OUTPUT, saved by downstream nonlinear vjps, not by this matmul (its input is the (tokens,r)+(k,r) sketch)
     if b is not None:
-        y = y + b.astype(y.dtype)
+        y = y + b.astype(y.dtype)  # repro-lint: disable=residual-audit — bias-add vjp saves y for downstream consumers; same buffer as the site output above
     return y, p_hat, q
 
 

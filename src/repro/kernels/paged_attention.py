@@ -113,6 +113,56 @@ def paged_attention(q: Array, k_pool: Array, v_pool: Array, table: Array,
     )(table.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)
 
 
+def _write_kernel(row_ref, pool_in_ref, blocks_ref, pool_ref):
+    # one grid step copies one logical block into the physical block the
+    # table row names (the out BlockSpec does the scatter); pool_in only
+    # exists to be aliased into the output
+    del row_ref, pool_in_ref
+    pool_ref[...] = blocks_ref[...]
+
+
+def write_kv_block(pool: Array, blocks: Array, row: Array, *,
+                   interpret: bool = False) -> Array:
+    """Scatter one slot's prefilled KV blocks into the shared pool, in
+    place: pool (n_blocks, bs, KV, hd); blocks (L, bs, KV, hd); row (L,)
+    int32 physical-block ids for the slot's logical blocks.
+
+    The pool is donated via ``input_output_aliases`` — physical blocks not
+    named by ``row`` keep their contents without ever being copied, so the
+    admission write-back touches O(slot) bytes, not O(pool) (the in-place
+    discipline the graph-lint donation-audit checks from the jit side and
+    the ast-plane pallas-contract checks from the source side).  Rows may
+    repeat the trash block; later grid steps simply overwrite it.
+    """
+    L = row.shape[0]
+    _n, bs, KV, hd = pool.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,              # the row feeds the out index map
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec((1, bs, KV, hd), lambda j, row: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, KV, hd),
+                               lambda j, row: (row[j], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _write_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={1: 0},        # pool -> updated pool
+        interpret=interpret,
+    )(row.astype(jnp.int32), pool, blocks.astype(pool.dtype))
+
+
+def write_kv_block_ref(pool: Array, blocks: Array, row: Array) -> Array:
+    """Pure-jnp oracle for :func:`write_kv_block` (functional scatter).
+    Exact for distinct rows; on repeated rows jnp scatter order is
+    unspecified while the kernel's sequential grid makes the last write
+    win — callers (and the parity tests) use distinct physical blocks."""
+    return pool.at[row].set(blocks.astype(pool.dtype))
+
+
 def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array, table: Array,
                         pos: Array) -> Array:
     """Pure-jnp oracle: gather blocks by table, then the dense decode

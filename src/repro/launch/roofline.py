@@ -101,6 +101,23 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(sum(by_kind.values()), by_kind, count)
 
 
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    """Count collective ops per kind in (per-device) HLO text.
+
+    Unlike :func:`collective_bytes` this counts every definition (including
+    zero-byte fallback failures), with ``-start``/``-done`` async pairs
+    counted once — it is the comm-signature metric the graph-lint
+    collectives-audit gates against ``partition.COMM_SIGNATURE``.
+    """
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _DEF_RE.finditer(hlo_text):
+        opcode = m.group(3)
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in _COLLECTIVES and not opcode.endswith("-done"):
+            counts[base] += 1
+    return counts
+
+
 @dataclasses.dataclass
 class Roofline:
     flops: float                 # per device

@@ -20,17 +20,17 @@ def initializer(key: Array, shape, dtype, scale: float = 0.02) -> Array:
 def rms_norm(x: Array, scale: Array, eps: float) -> Array:
     dt = x.dtype
     x = x.astype(jnp.float32)
-    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
-    return (x * scale.astype(jnp.float32)).astype(dt)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)  # repro-lint: disable=residual-audit — rsqrt vjp keeps the normalized x; norms are outside ASI's matmul sites
+    return (x * scale.astype(jnp.float32)).astype(dt)  # repro-lint: disable=residual-audit — scale-mul vjp keeps x̂ (needed for d scale); inherent to any norm
 
 
 def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
     dt = x.dtype
     x = x.astype(jnp.float32)
     mu = jnp.mean(x, axis=-1, keepdims=True)
-    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
-    x = (x - mu) * jax.lax.rsqrt(var + eps)
-    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)  # repro-lint: disable=residual-audit — variance vjp keeps the centered x; inherent to layer norm
+    x = (x - mu) * jax.lax.rsqrt(var + eps)  # repro-lint: disable=residual-audit — normalize vjp keeps (x - mu); inherent to layer norm
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)  # repro-lint: disable=residual-audit — affine vjp keeps x̂ (needed for d scale)
 
 
 def norm_apply(params: dict, x: Array, cfg: ModelConfig) -> Array:
@@ -118,10 +118,10 @@ def mlp_apply(params: dict, x: Array, cfg: ModelConfig,
     if cfg.act == "silu":
         g = lin("gate", x, params["gate"])
         u = lin("up", x, params["up"])
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u  # repro-lint: disable=residual-audit — gated-mul vjp keeps both gate branches; the adjacent matmuls are the ASI sites
     else:
         u = lin("up", x, params["up"], params.get("up_b"))
-        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(u.dtype)
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(u.dtype)  # repro-lint: disable=residual-audit — gelu vjp keeps its pre-activation; nonlinearity, not a matmul site
     h = logical_shard(h, "batch", None, "mlp")
     y = lin("down", h, params["down"], params.get("down_b"))
     return y, (new_state if asi_state is not None else None)

@@ -119,7 +119,7 @@ def _sublayer_apply(params: dict, x: Array, cfg: ModelConfig, spec,
                                          asi_state=st)
         if ns is not None:
             new_asi["mixer"] = ns
-    x = x + y
+    x = x + y  # repro-lint: disable=residual-audit — residual-stream add: kept as the next block's input, the stream itself is not an ASI site
     if ffn:
         h = norm_apply(params["norm2"], x, cfg)
         st = asi_state.get("ffn") if asi_state is not None else None
@@ -129,7 +129,7 @@ def _sublayer_apply(params: dict, x: Array, cfg: ModelConfig, spec,
             y, aux, ns = moe_lib.moe_apply(params["ffn"], h, cfg, st)
         if ns is not None:
             new_asi["ffn"] = ns
-        x = x + y
+        x = x + y  # repro-lint: disable=residual-audit — residual-stream add after the ffn; same story as the attention-side add
     # sequence-parallel TP (hillclimb lever): shard the seq dim over the TP
     # axis between blocks; GSPMD turns the per-block all-reduce into
     # reduce-scatter + all-gather (half the wire bytes).  No-op unless the
@@ -176,9 +176,9 @@ def forward(params: dict, tokens: Array, cfg: ModelConfig,
     # linear below routes through this flag, and an unknown value must not
     # silently fall back to a different code path mid-training.
     dispatch.resolve(cfg.kernel_backend)
-    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]  # repro-lint: disable=residual-audit — embedding gather output: the stream's source value, not a matmul-site activation
     if prefix_embeds is not None:                       # VLM: image patches
-        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)  # repro-lint: disable=residual-audit — vlm prefix concat rides the stream like the embed gather above
     B, S, _ = x.shape
     x = logical_shard(x, "batch", None, "embed")
     positions = jnp.arange(S)[None, :]
@@ -236,7 +236,7 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
     targets = batch["targets"]
     if batch.get("embeds") is not None:                 # drop image positions
         logits = logits[:, -targets.shape[1]:]
-    lse = jax.nn.logsumexp(logits, axis=-1)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # repro-lint: disable=residual-audit — softmax-CE vjp keeps exp(logits - lse); the loss head is outside ASI's sites
     picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
     ce = jnp.mean(lse - picked)
     metrics = {"ce": ce, "aux": aux}

@@ -276,22 +276,11 @@ def measured_step_memory(cfg: ModelConfig, batch: int, seq_len: int,
             params, batch_, asi)
         return loss, grads
 
+    from repro.telemetry.memstats import LEDGER_FIELDS, stats_or_none
     compiled = jax.jit(step).lower(
         params_struct, _batch_struct(cfg, batch, seq_len), asi_struct
     ).compile()
-    try:
-        ma = compiled.memory_analysis()
-    except Exception:                                        # noqa: BLE001
-        return None
-    if ma is None:
-        return None
-    out = {}
-    for k in ("argument_size_in_bytes", "output_size_in_bytes",
-              "temp_size_in_bytes", "alias_size_in_bytes"):
-        v = getattr(ma, k, None)
-        if v is not None:
-            out[k] = int(v)
-    return out or None
+    return stats_or_none(compiled, LEDGER_FIELDS)
 
 
 def measured_site_residual_bytes(tokens: int, k: int, rank: int,

@@ -33,6 +33,32 @@ MODEL = "model"
 # before building specs (dryrun/train --layout fsdp).
 LAYOUT = "tp"
 
+# Per-layout communication signature: which collective kinds the compiled
+# train step is ALLOWED to contain, with (min, max) count bounds per kind
+# (``None`` max = unbounded — the kind is structural to the layout and its
+# count scales with depth).  The graph-lint collectives-audit compiles the
+# train step on a forced-host-device mesh, counts collectives in the
+# per-device HLO (``roofline.collective_counts``) and gates against this
+# table: a kind appearing outside its row — e.g. a collective-permute in
+# the dp backward, or an all-to-all sneaking into dp — is exactly the
+# silent comm regression tensor-parallel serving would inherit.  Kinds
+# absent from a row must not appear at all.
+#
+# dp   : gradient/metric all-reduce over 'data'; XLA emits a handful of
+#        all-gathers reassembling batch-sharded aux outputs — never
+#        reduce-scatter / all-to-all / permute.
+# fsdp : ZeRO-3 adds parameter all-gathers and (re)sharding all-to-alls;
+#        permute stays forbidden.
+# tp   : Megatron row/column contractions add permutes and all-to-alls on
+#        'model'; every kind except reduce-scatter is structural.
+COMM_SIGNATURE: dict[str, dict[str, tuple[int, int | None]]] = {
+    "dp":   {"all-gather": (0, None), "all-reduce": (1, None)},
+    "fsdp": {"all-gather": (1, None), "all-reduce": (1, None),
+             "reduce-scatter": (0, None), "all-to-all": (0, None)},
+    "tp":   {"all-gather": (1, None), "all-reduce": (1, None),
+             "all-to-all": (0, None), "collective-permute": (0, None)},
+}
+
 
 def set_layout(name: str):
     """Set the module-global layout consumed by the ``*_specs`` builders.

@@ -179,7 +179,8 @@ class Engine:
     """Single-host continuous-batching engine over a ModelAPI."""
 
     def __init__(self, model_api, params, cfg: ServeCfg, seed: int = 0,
-                 telemetry: Recorder | None = None):
+                 telemetry: Recorder | None = None,
+                 donate: bool | None = None):
         self.api = model_api
         self.params = params
         self.cfg = cfg
@@ -218,8 +219,13 @@ class Engine:
         self._pool_blocks = (cfg.pool_blocks if cfg.pool_blocks > 0
                              else B * (max_len // cfg.page_block) + 1)
         # Donating the cache/state lets XLA update the (large) KV buffers in
-        # place each step; CPU ignores donation, so only request it off-CPU.
-        self._donate = donate = jax.default_backend() != "cpu"
+        # place each step; CPU ignores donation, so only request it off-CPU
+        # by default.  The explicit override exists for the graph-lint
+        # donation-audit, which lowers these jits on CPU purely to read the
+        # aliasing decisions out of the module text.
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._donate = donate = bool(donate)
 
         def sample(logits: Array, key: Array) -> Array:
             """(n, V) logits -> (n,) sampled tokens, on device."""
@@ -410,6 +416,17 @@ class Engine:
         keeps this bounded under mixed-length traffic)."""
         return {"prefill": len(self._prefill_jit),
                 "chunk": len(self._chunk_jit)}
+
+    def prefill_compile_keys(self, prompt_lens, emb_key=None) -> set:
+        """Abstract jit-cache keys admission would touch for these prompt
+        lengths (the recompile-audit's view of the chunk plan): chunked
+        prefill folds every length onto the one ``(chunk, embeds-shape)``
+        runner ``_advance_job`` uses, legacy whole-prompt prefill pays one
+        entry per distinct length (bounded only by ``_PREFILL_MEMO_MAX``
+        eviction)."""
+        if self._chunk > 0:
+            return {(self._chunk, emb_key)} if prompt_lens else set()
+        return {(int(n), emb_key) for n in prompt_lens}
 
     # --- scheduler ---------------------------------------------------------
 

@@ -16,9 +16,11 @@ from typing import Optional
 
 import jax
 
+from repro.telemetry.memstats import GAUGE_FIELDS, compiled_memory_stats
+
 #: ``memory_analysis()`` fields exported as gauges when present
-_MEM_FIELDS = ("temp_size_in_bytes", "argument_size_in_bytes",
-               "output_size_in_bytes", "generated_code_size_in_bytes")
+#: (kept as an alias — the shared reader in telemetry.memstats owns it)
+_MEM_FIELDS = GAUGE_FIELDS
 
 
 class JaxProfileBridge:
@@ -89,15 +91,9 @@ class JaxProfileBridge:
             return
         rec.set_gauge(f"{name}.trace_lower_s", t1 - t0)
         rec.set_gauge(f"{name}.compile_s", t2 - t1)
-        try:
-            ma = compiled.memory_analysis()
-        except Exception:
-            ma = None
-        if ma is not None:
-            for field in _MEM_FIELDS:
-                v = getattr(ma, field, None)
-                if v is not None:
-                    rec.set_gauge(f"{name}.{field}", int(v))
+        for field, v in compiled_memory_stats(compiled, _MEM_FIELDS).items():
+            if field != "error":
+                rec.set_gauge(f"{name}.{field}", v)
 
     # -- live-buffer gauges --------------------------------------------
     def live_buffer_gauges(self, prefix: str = "jax.live") -> None:

@@ -1,0 +1,60 @@
+"""One code path for reading XLA's ``memory_analysis()`` off a compiled
+executable.
+
+Three consumers used to hand-roll this — the ledger's measured column
+(``ondevice/ledger.py``), the dryrun report (``api/analyze.py``), and the
+profiler bridge's byte gauges (``telemetry/jaxprof.py``) — each with its
+own field list and its own idea of what a missing backend looks like.
+The graph-lint plane reconciles measured bytes against analytic bytes,
+which only means something if every reporter reads the same numbers the
+same way; this module is that single reader.
+
+Fallback contract (uniform across callers): ``{"error": ...}`` when the
+analysis call itself raises (interpret-only backends), ``{}`` when the
+backend reports nothing (no devices / fields absent on CPU) — callers
+needing the legacy ``None`` sentinel use :func:`stats_or_none`.
+"""
+from __future__ import annotations
+
+#: every byte field XLA may report, superset across backends
+MEM_FIELDS = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes")
+
+#: the persistent-vs-transient split the ledger's measured column uses
+LEDGER_FIELDS = ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes")
+
+#: fields exported as telemetry gauges (profiler bridge)
+GAUGE_FIELDS = ("temp_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "generated_code_size_in_bytes")
+
+
+def compiled_memory_stats(compiled, fields: tuple = MEM_FIELDS) -> dict:
+    """Byte counts from ``compiled.memory_analysis()``, keyed by field.
+
+    Only fields the backend actually reports appear; ``{"error": str}``
+    when the analysis raises, ``{}`` when it returns nothing.
+    """
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # noqa: BLE001
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in fields:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def stats_or_none(compiled, fields: tuple = MEM_FIELDS) -> dict | None:
+    """Like :func:`compiled_memory_stats` but collapses both fallbacks
+    (error / nothing reported) to ``None`` — the ledger's legacy
+    "no measured column available" sentinel."""
+    stats = compiled_memory_stats(compiled, fields)
+    if not stats or "error" in stats:
+        return None
+    return stats

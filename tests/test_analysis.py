@@ -437,6 +437,73 @@ def test_pallas_contract_prefetch_flags_operand_count(tmp_path):
                for f in found), found
 
 
+_PALLAS_ALIAS = """\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kernel(row_ref, pool_in_ref, blk_ref, o_ref):
+        o_ref[...] = blk_ref[...]
+
+    def call(row, pool, blocks):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+                pl.BlockSpec((1, 8, 8), lambda j, row: (j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 8, 8), lambda j, row: (row[j], 0, 0)),
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+            {alias_kw}
+        )(row, pool, blocks)
+"""
+
+
+def test_pallas_alias_clean_when_declared(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_ALIAS.format(alias_kw="input_output_aliases={1: 0},"))
+    assert _unsuppressed(_run("pallas-contract", ctx)) == []
+
+
+def test_pallas_alias_missing_is_flagged(tmp_path):
+    # out_shape reuses pool.shape but pool is never aliased: a full copy
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_ALIAS.format(alias_kw=""))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("input_output_aliases={1: 0}" in f.message
+               for f in found), found
+
+
+def test_pallas_alias_input_out_of_range(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_ALIAS.format(alias_kw="input_output_aliases={7: 0},"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("names input 7" in f.message and "3 operands" in f.message
+               for f in found), found
+
+
+def test_pallas_alias_output_out_of_range(tmp_path):
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_ALIAS.format(
+                   alias_kw="input_output_aliases={1: 3},"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("names output 3" in f.message for f in found), found
+
+
+def test_pallas_alias_scalar_prefetch_is_flagged(tmp_path):
+    # aliasing the scalar-prefetch row operand makes no sense
+    ctx = _ctx(tmp_path, "src/repro/kernels/k.py",
+               _PALLAS_ALIAS.format(alias_kw="input_output_aliases={0: 0},"))
+    found = _unsuppressed(_run("pallas-contract", ctx))
+    assert any("scalar-prefetch operand" in f.message for f in found), found
+
+
 def test_pallas_contract_cap_containment(tmp_path):
     ctx = _ctx(tmp_path, "src/repro/models/z.py", """\
         from repro.kernels.dispatch import GRAD_SKETCH_MAX_N
@@ -504,12 +571,16 @@ def test_suppressed_findings_keep_audit_trail(head_findings):
 
 def test_json_schema(head_findings):
     doc = json.loads(core.render_json(head_findings, REPO_ROOT))
-    assert doc["version"] == 1
-    assert set(doc) == {"version", "root", "rules", "findings", "counts",
-                        "total"}
+    assert doc["version"] == 2
+    assert set(doc) == {"version", "root", "plane", "rules", "findings",
+                        "counts", "total"}
+    assert doc["plane"] == "ast"
     assert set(doc["rules"]) == {"residual-contract", "jit-purity",
                                  "partition-coverage", "pallas-contract",
                                  "shim-contract", "telemetry-contract"}
+    graph_doc = json.loads(core.render_json([], REPO_ROOT, plane="graph"))
+    assert set(graph_doc["rules"]) == {"residual-audit", "collectives-audit",
+                                       "donation-audit", "recompile-audit"}
     for f in doc["findings"]:
         assert set(f) == {"rule", "path", "line", "message", "col",
                           "suppressed"}

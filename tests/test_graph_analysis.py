@@ -1,0 +1,290 @@
+"""graph-lint: the jaxpr/HLO plane proves what the AST plane cannot see.
+
+The centerpiece is the blindness canary: a custom_vjp whose fwd saves a
+dense activation *behind an imported call*, which severs the AST taint —
+the source rule stays quiet while the residual census flags the save from
+the traced graph.  Around it: ledger reconciliation on the real tree,
+comm-signature gating with a deliberately wrong signature, donation
+aliasing on synthetic jits and the real serve/train sites, signature-key
+hashing, and the aliased paged-pool write kernel against its jnp oracle.
+"""
+import textwrap
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import core
+from repro.analysis import rules as _rules  # noqa: F401  (registers rules)
+from repro.analysis.core import FileContext
+from repro.analysis.graph import (collectives_audit, donation_audit, harness,
+                                  recompile_audit, residual_audit)
+
+REPO_ROOT = core.find_repo_root()
+ARCH = "tinyllama-1.1b"
+
+
+def _family():
+    from repro.configs.registry import get_config
+    from repro.models import build_model
+    cfg = get_config(ARCH).reduced().replace(compress="asi")
+    return cfg, build_model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# plane registry
+# ---------------------------------------------------------------------------
+
+def test_graph_rules_registered_in_graph_plane():
+    graph = set(core.rules_in_plane("graph"))
+    assert graph == {"residual-audit", "collectives-audit",
+                     "donation-audit", "recompile-audit"}
+    assert not graph & set(core.rules_in_plane("ast"))
+
+
+# ---------------------------------------------------------------------------
+# residual-audit: the blindness canary
+# ---------------------------------------------------------------------------
+
+# The dense save rides through jax.nn.relu — an *imported* call, which the
+# AST taint analysis treats as severing (imported code is assumed to
+# contract/sketch).  The graph census classifies by residual shape, so the
+# construct is transparent to it.
+_CANARY_SRC = """\
+    import jax
+    import jax.numpy as jnp
+
+
+    @jax.custom_vjp
+    def leaky_matmul(x, w):
+        return jax.nn.relu(x) @ w
+
+
+    def _fwd(x, w):
+        h = jax.nn.relu(x)        # imported call: AST taint severed here
+        return h @ w, (h, w)      # ...but h IS the dense activation
+
+
+    def _bwd(res, g):
+        h, w = res
+        return ((h > 0) * (g @ w.T), h.T @ g)
+
+
+    leaky_matmul.defvjp(_fwd, _bwd)
+"""
+
+
+def test_canary_is_invisible_to_ast_taint(tmp_path):
+    path = tmp_path / "src" / "repro" / "core" / "canary.py"
+    path.parent.mkdir(parents=True)
+    path.write_text(textwrap.dedent(_CANARY_SRC))
+    ctx = FileContext.parse(str(path), str(tmp_path))
+    _scope, fn, _doc = core.RULES["residual-contract"]
+    found = [f for f in fn(ctx)
+             if not ctx.is_suppressed(f.rule, f.line)]
+    assert found == [], [f.message for f in found]
+
+
+def test_canary_is_caught_by_residual_census():
+    cfg, api = _family()
+    ns: dict = {}
+    exec(textwrap.dedent(_CANARY_SRC), ns)  # the exact source the AST saw
+    leaky_matmul = ns["leaky_matmul"]
+    _led, _exp, site_ks, token_extents = harness.ledger_expectation(
+        cfg, harness.CENSUS_BATCH, harness.CENSUS_SEQ)
+    tokens, k = max(token_extents), max(site_ks)
+
+    def canary_loss(params, batch, asi):
+        loss, aux = api.loss(params, batch, asi)
+        x = jnp.zeros((tokens, k), jnp.float32) + loss
+        w = jnp.zeros((k, 5), jnp.float32)
+        return loss + leaky_matmul(x, w).sum(), aux
+
+    baseline = harness.census_family(ARCH, cfg, api)
+    canary = harness.census_family(ARCH, cfg, api, loss_fn=canary_loss)
+    assert canary.counts.get("dense", 0) == \
+        baseline.counts.get("dense", 0) + 1
+    findings = list(residual_audit.census_findings([canary]))
+    assert any("dense activation saved as vjp residual" in f.message
+               for f in findings), [f.message for f in findings]
+
+
+def test_residual_census_reconciles_against_ledger():
+    cfg, api = _family()
+    census = harness.census_family(ARCH, cfg, api)
+    assert census.factor_match, "saved factors != ledger's predicted multiset"
+    assert census.factor_bytes == census.ledger_bytes, \
+        f"{census.factor_bytes} != {census.ledger_bytes} (gap must be 0%)"
+
+
+def test_residual_audit_clean_at_head_one_family(monkeypatch):
+    monkeypatch.setenv(harness.FAMILIES_ENV, ARCH)
+    findings = core.run_lint(root=REPO_ROOT, select=["residual-audit"])
+    bad = [f for f in findings if not f.suppressed]
+    assert bad == [], "\n" + core.render_text(bad)
+    # the blessed dense saves (norm/activation/loss tail) stay visible
+    assert any(f.suppressed for f in findings)
+
+
+def test_golden_drift_is_a_finding():
+    cfg, api = _family()
+    census = harness.census_family(ARCH, cfg, api)
+    golden = residual_audit.load_golden()
+    assert golden["families"][ARCH] == census.summary()
+    skewed = {"families": {ARCH: {**census.summary(), "factor_bytes": 1}}}
+    findings = list(residual_audit.census_findings([census], golden=skewed))
+    assert any("drifted from golden" in f.message for f in findings)
+    missing = list(residual_audit.census_findings([census],
+                                                  golden={"families": {}}))
+    assert any("no golden census entry" in f.message for f in missing)
+
+
+# ---------------------------------------------------------------------------
+# collectives-audit: signature gating (device-free half)
+# ---------------------------------------------------------------------------
+
+_DP_COUNTS = {"all-gather": 14, "all-reduce": 36}
+
+
+def test_comm_signature_accepts_measured_counts():
+    from repro.parallel.partition import COMM_SIGNATURE
+    assert list(collectives_audit.signature_findings(
+        "dp", _DP_COUNTS, COMM_SIGNATURE)) == []
+
+
+def test_comm_signature_flags_forbidden_kind():
+    sig = {"dp": {"all-gather": (0, None), "all-reduce": (1, None)}}
+    counts = dict(_DP_COUNTS, **{"collective-permute": 12})
+    findings = list(collectives_audit.signature_findings("dp", counts, sig))
+    assert any("forbids collective-permute" in f.message
+               for f in findings), [f.message for f in findings]
+
+
+def test_comm_signature_flags_count_out_of_bounds():
+    sig = {"dp": {"all-gather": (0, None), "all-reduce": (1, 10)}}
+    findings = list(collectives_audit.signature_findings(
+        "dp", _DP_COUNTS, sig))
+    assert any("outside declared bounds [1, 10]" in f.message
+               for f in findings)
+
+
+def test_comm_signature_flags_missing_required_kind():
+    # gradients no longer synchronized: the required all-reduce vanished
+    sig = {"dp": {"all-gather": (0, None), "all-reduce": (1, None)}}
+    findings = list(collectives_audit.signature_findings(
+        "dp", {"all-gather": 14}, sig))
+    assert any("required all-reduce is absent" in f.message
+               for f in findings)
+
+
+def test_comm_signature_flags_unknown_layout():
+    findings = list(collectives_audit.signature_findings("pp", {}, {}))
+    assert any("no COMM_SIGNATURE row" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# donation-audit
+# ---------------------------------------------------------------------------
+
+_F32 = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+
+
+def test_audit_donation_counts_live_aliases():
+    @partial(jax.jit, donate_argnums=(0,))
+    def step(x, y):
+        return x + y
+    donated, aliased = harness.audit_donation(step, (_F32, _F32), (0,))
+    assert (donated, aliased) == (1, 1)
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_audit_donation_detects_dead_donation():
+    # dtype change: XLA cannot reuse the donated f32 buffer for bf16 out
+    @partial(jax.jit, donate_argnums=(0,))
+    def step(x, y):
+        return (x + y).astype(jnp.bfloat16)
+    donated, aliased = harness.audit_donation(step, (_F32, _F32), (0,))
+    assert donated == 1 and aliased == 0
+
+    site = donation_audit.DonationSite(
+        name="synthetic.step", path="src/repro/runtime/serve_loop.py",
+        marker="no-such-marker", jitted=step, example_args=(_F32, _F32),
+        donate_argnums=(0,))
+    findings = list(donation_audit.site_findings(site, REPO_ROOT))
+    assert any("dead" in f.message for f in findings)
+
+
+def test_donation_audit_clean_at_head():
+    findings = [f for site in donation_audit.collect_sites(ARCH)
+                for f in donation_audit.site_findings(site, REPO_ROOT)]
+    assert findings == [], [f.message for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# recompile-audit
+# ---------------------------------------------------------------------------
+
+def test_signature_key_separates_weak_types():
+    strong = harness.signature_key(jnp.int32(0))
+    weak = harness.signature_key(0)
+    assert strong != weak
+    assert strong == harness.signature_key(jnp.int32(7))  # values don't key
+
+
+def test_weak_typed_leaves_finds_python_scalars():
+    tree = {"good": jnp.ones((2,), jnp.float32), "leak": 1.0}
+    leaks = harness.weak_typed_leaves(tree)
+    assert len(leaks) == 1 and "leak" in leaks[0][0]
+
+
+def test_recompile_audit_clean_at_head():
+    findings = list(recompile_audit.audit_family(ARCH, REPO_ROOT))
+    assert findings == [], [f.message for f in findings]
+
+
+def test_prefill_compile_keys_fold_under_chunking():
+    from repro.runtime.serve_loop import Engine, ServeCfg
+    cfg, api = _family()
+    params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    chunked = Engine(api, params, ServeCfg(max_batch=2, max_len=32,
+                                           cache="dense", prefill_chunk=8))
+    assert len(chunked.prefill_compile_keys(range(1, 31))) == 1
+    legacy = Engine(api, params, ServeCfg(max_batch=2, max_len=32,
+                                          cache="dense"))
+    assert len(legacy.prefill_compile_keys([3, 5, 3])) == 2
+
+
+# ---------------------------------------------------------------------------
+# aliased paged-pool write kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+def test_write_kv_block_matches_ref_and_preserves_untouched_blocks():
+    from repro.kernels.paged_attention import (write_kv_block,
+                                               write_kv_block_ref)
+    n, bs, kv, hd = 6, 4, 2, 8
+    key = jax.random.PRNGKey(0)
+    pool = jax.random.normal(key, (n, bs, kv, hd), jnp.float32)
+    blocks = jax.random.normal(jax.random.fold_in(key, 1),
+                               (3, bs, kv, hd), jnp.float32)
+    row = jnp.array([4, 1, 3], jnp.int32)
+    out = write_kv_block(pool, blocks, row, interpret=True)
+    ref = write_kv_block_ref(pool, blocks, row)
+    assert out.shape == pool.shape
+    assert jnp.array_equal(out, ref)
+    for untouched in (0, 2, 5):
+        assert jnp.array_equal(out[untouched], pool[untouched])
+
+
+def test_write_kv_block_alias_is_live():
+    # the in-place contract the graph donation-audit checks on the real
+    # engine sites, proven here on the kernel's own jit wrapper
+    from repro.kernels.paged_attention import write_kv_block
+    pool = jax.ShapeDtypeStruct((6, 4, 2, 8), jnp.float32)
+    blocks = jax.ShapeDtypeStruct((3, 4, 2, 8), jnp.float32)
+    row = jax.ShapeDtypeStruct((3,), jnp.int32)
+    jitted = jax.jit(partial(write_kv_block, interpret=True),
+                     donate_argnums=(0,))
+    donated, aliased = harness.audit_donation(
+        jitted, (pool, blocks, row), (0,))
+    assert (donated, aliased) == (1, 1)
